@@ -1,0 +1,20 @@
+"""Shared helpers for the benchmark harness."""
+import time
+
+import numpy as np
+
+
+def time_call(fn, n: int = 5, warmup: int = 1):
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

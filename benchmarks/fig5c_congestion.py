@@ -1,0 +1,27 @@
+"""Paper Fig. 5c: total cost as all input rates scale up (congestion).
+SGP's advantage grows with congestion, especially vs LPR."""
+import time
+
+from repro import core
+
+from .common import emit
+
+
+def run(scales=(0.6, 1.0, 1.4, 1.8)):
+    rows = {}
+    for s in scales:
+        t0 = time.time()
+        net = core.make_scenario(core.TABLE_II["connected_er"],
+                                 rate_scale=s)
+        out = core.run_all(net, n_iters=200)
+        adv = (min(v for k, v in out.items() if k != "SGP")
+               / max(out["SGP"], 1e-9))
+        rows[s] = (out, adv)
+        emit(f"fig5c.scale_{s}", (time.time() - t0) * 1e6,
+             f"sgp={out['SGP']:.2f};lpr={out['LPR']:.2f};"
+             f"spoo={out['SPOO']:.2f};advantage={adv:.3f}")
+    advs = [rows[s][1] for s in scales]
+    emit("fig5c.summary", 0.0,
+         f"advantage_grows={advs[-1] >= advs[0]};"
+         f"low={advs[0]:.3f};high={advs[-1]:.3f}")
+    return rows

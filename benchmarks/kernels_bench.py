@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the production path is the jnp reference (the
+Pallas TPU kernels are structural targets, validated via interpret=True
+in tests), so wall time here benchmarks the oracle path; the derived
+column reports achieved GFLOP/s for context."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .common import emit, time_call
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    # flash attention (ref path)
+    B, H, KV, S, hd = 2, 8, 4, 1024, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+    fn = jax.jit(lambda: ops.flash_attention(q, k, v, impl="ref"))
+    us = time_call(lambda: jax.block_until_ready(fn()))
+    flops = 4 * B * H * S * S * hd / 2
+    emit("kernel.flash_attention.ref", us, f"GFLOPs={flops / us / 1e3:.1f}")
+
+    # decode attention
+    B, KV, G, S, hd = 8, 8, 4, 4096, 128
+    q = jax.random.normal(ks[0], (B, KV, G, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+    lens = jnp.full((B,), S, jnp.int32)
+    fn = jax.jit(lambda: ops.decode_attention(q, kc, vc, lens, impl="ref"))
+    us = time_call(lambda: jax.block_until_ready(fn()))
+    bytes_ = 2 * B * KV * S * hd * 4
+    emit("kernel.decode_attention.ref", us,
+         f"GBps={bytes_ / us / 1e3:.1f}")
+
+    # ssd scan
+    B, L, H, P, N = 2, 2048, 24, 64, 128
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(0.5 * jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, L, N), jnp.float32)
+    Cm = jax.random.normal(ks[4], (B, L, N), jnp.float32)
+    from repro.models.layers.ssd import ssd_chunked
+    fn = jax.jit(lambda: ssd_chunked(x, dt, A, Bm, Cm, chunk=128)[0])
+    us = time_call(lambda: jax.block_until_ready(fn()))
+    emit("kernel.ssd_chunked", us, f"tokens_per_s={B * L / us * 1e6:.0f}")
+
+    # grouped matmul
+    E, C, D, F = 16, 512, 1024, 512
+    xg = jax.random.normal(ks[0], (E, C, D), jnp.float32)
+    wg = jax.random.normal(ks[1], (E, D, F), jnp.float32)
+    fn = jax.jit(lambda: ops.moe_gmm(xg, wg, impl="ref"))
+    us = time_call(lambda: jax.block_until_ready(fn()))
+    emit("kernel.moe_gmm.ref", us,
+         f"GFLOPs={2 * E * C * D * F / us / 1e3:.1f}")
+
+    # simplex projection (the paper's QP)
+    R, K = 4096, 128
+    ks = jax.random.split(KEY, 4)
+    phi = jax.nn.softmax(jax.random.normal(ks[0], (R, K)), -1)
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (R, K)))
+    M = jax.nn.softplus(jax.random.normal(ks[2], (R, K)))
+    perm = jax.random.bernoulli(ks[3], 0.7, (R, K)).at[:, 0].set(True)
+    fn = jax.jit(lambda: ops.simplex_project(phi, delta, M, perm,
+                                             impl="ref"))
+    us = time_call(lambda: jax.block_until_ready(fn()))
+    emit("kernel.simplex_project.ref", us, f"rows_per_s={R / us * 1e6:.0f}")

@@ -1,0 +1,133 @@
+"""Roofline analysis from the dry-run report (deliverable g).
+
+Terms per (arch × shape × mesh), all in seconds per step:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF bf16)
+  memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+  collective = collective_bytes_per_device / link_bw      (50 GB/s/link)
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active
+params, and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.  The roofline
+fraction reported in §Perf is
+  (MODEL_FLOPS / (chips · peak)) / max(terms)
+— the share of the bottleneck term that is useful model compute.
+"""
+import json
+import os
+
+import numpy as np
+
+from repro import configs
+from repro.models import build_model, module
+
+from .common import emit
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip
+HBM_BW = 819e9            # B/s per chip
+LINK_BW = 50e9            # B/s per ICI link (worst-case single link)
+
+
+def active_params(arch: str) -> float:
+    cfg = configs.get_config(arch)
+    model = build_model(cfg)
+    total = module.param_count(model.param_specs())
+    if not cfg.n_experts:
+        return float(total)
+    # expert weights participate at k/E
+    n_moe_layers = sum(1 for _, f in cfg.layer_pattern() if f == "moe")
+    moe_params = (n_moe_layers * cfg.n_experts
+                  * 3 * cfg.d_model * cfg.d_ff_expert)
+    frac = cfg.top_k / cfg.n_experts
+    return float(total - moe_params + moe_params * frac)
+
+
+def model_flops(arch: str, shape_name: str, n_chips: int) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (inference),
+    per device."""
+    shape = configs.SHAPES[shape_name]
+    n = active_params(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / n_chips
+
+
+def analyze(report_path: str):
+    with open(report_path) as f:
+        rows = json.load(f)
+    out = []
+    for r in rows:
+        if r.get("skipped") or r.get("error"):
+            out.append(r)
+            continue
+        n_chips = int(np.prod(r["mesh"]))
+        comp = r["flops_per_device"] / PEAK_FLOPS
+        mem = r["bytes_per_device"] / HBM_BW
+        coll = r["collective_bytes_per_device"].get("total", 0.0) / LINK_BW
+        terms = {"compute": comp, "memory": mem, "collective": coll}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"], n_chips)
+        useful = mf / max(r["flops_per_device"], 1e-9)
+        frac = (mf / PEAK_FLOPS) / max(terms[dominant], 1e-12)
+        r2 = dict(r)
+        r2.update({
+            "compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "dominant": dominant,
+            "model_flops_per_device": mf,
+            "useful_flops_ratio": useful,
+            "roofline_fraction": frac,
+        })
+        out.append(r2)
+    return out
+
+
+def markdown_table(rows, multi_pod: bool = False) -> str:
+    hdr = ("| arch | shape | comp (s) | mem (s) | coll (s) | bottleneck | "
+           "MODEL/HLO | roofline frac | peak GiB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.get("multi_pod") != multi_pod:
+            continue
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — | — |")
+            continue
+        if r.get("error"):
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | "
+                         f"| | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | "
+            f"{r['peak_est_bytes'] / 2 ** 30:.1f} | "
+            f"{'Y' if r['fits_hbm'] else 'N'} |")
+    return hdr + "\n".join(lines)
+
+
+def run(report_path: str = "dryrun_report.json"):
+    if not os.path.exists(report_path):
+        emit("roofline", 0.0, f"report_missing:{report_path}")
+        return None
+    rows = analyze(report_path)
+    ok = [r for r in rows if "roofline_fraction" in r]
+    for r in ok:
+        if not r.get("multi_pod"):
+            emit(f"roofline.{r['arch']}.{r['shape']}", 0.0,
+                 f"dominant={r['dominant']};"
+                 f"frac={r['roofline_fraction']:.3f};"
+                 f"useful={r['useful_flops_ratio']:.2f};"
+                 f"fits={r['fits_hbm']}")
+    if ok:
+        fr = [r["roofline_fraction"] for r in ok]
+        emit("roofline.summary", 0.0,
+             f"cells={len(ok)};median_frac={float(np.median(fr)):.3f};"
+             f"best={max(fr):.3f}")
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness — one entry per paper table/figure + system
+benches.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4,...]
+"""
+import argparse
+import sys
+import traceback
+
+ALL = ["fig4", "fig5b", "fig5c", "fig5d", "moe_balance", "kernels",
+       "roofline"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the slow SW-100 scenarios")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--report", default="dryrun_report.json")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else ALL
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            if name == "fig4":
+                from . import fig4_totalcost
+                fig4_totalcost.run(full=args.full)
+            elif name == "fig5b":
+                from . import fig5b_convergence
+                fig5b_convergence.run()
+            elif name == "fig5c":
+                from . import fig5c_congestion
+                fig5c_congestion.run()
+            elif name == "fig5d":
+                from . import fig5d_am_sweep
+                fig5d_am_sweep.run()
+            elif name == "moe_balance":
+                from . import moe_balance
+                moe_balance.run()
+            elif name == "kernels":
+                from . import kernels_bench
+                kernels_bench.run()
+            elif name == "roofline":
+                from . import roofline
+                roofline.run(args.report)
+            else:
+                print(f"{name},0.0,unknown_benchmark", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,FAILED", flush=True)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

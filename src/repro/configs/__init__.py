@@ -1,0 +1,67 @@
+"""Architecture registry: --arch <id> -> ModelConfig, plus the assigned
+input-shape grid (per-arch shape sets; see DESIGN.md §6 for skips)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+from repro.models.config import ModelConfig, reduced
+
+_MODULES = {
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "yi-34b": "yi_34b",
+    "granite-3-8b": "granite_3_8b",
+    "whisper-base": "whisper_base",
+    "mamba2-130m": "mamba2_130m",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch: str, **overrides) -> ModelConfig:
+    return reduced(get_config(arch), **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(arch: str, shape: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the reason it is skipped."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.is_subquadratic:
+        return ("full-attention arch: 512k dense-KV decode is quadratic; "
+                "skipped per assignment (see DESIGN.md §6)")
+    return None
+
+
+def cells():
+    """All (arch, shape) dry-run cells, with skip annotations."""
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            yield arch, shape, shape_applicable(arch, shape)

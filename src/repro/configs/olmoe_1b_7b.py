@@ -1,0 +1,10 @@
+"""OLMoE-1B-7B: 16L, d=2048, 16H (MHA kv=16), MoE 64 experts top-8,
+expert d_ff=1024, vocab 50304.  [arXiv:2409.02060]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=0, d_ff_expert=1024, n_experts=64, top_k=8,
+    vocab=50304, qk_norm=True, rope_theta=1e4,
+)

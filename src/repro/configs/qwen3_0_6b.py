@@ -1,0 +1,10 @@
+"""Qwen3-0.6B: 28L dense, d=1024, 16H (GQA kv=8, head_dim 128), qk-norm,
+d_ff=3072, vocab 151936, tied embeddings.  [hf:Qwen/Qwen3-8B family]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b", family="dense",
+    n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=3072, vocab=151936, qk_norm=True, rope_theta=1e6,
+    tie_embeddings=True,
+)

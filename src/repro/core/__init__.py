@@ -1,0 +1,36 @@
+"""CEC-SGP core: the paper's contribution, faithful and JAX-native.
+
+Public API:
+  CECNetwork, Phi, compute_flows, total_cost, spt_phi   (flow model, §II)
+  compute_marginals                                     (Eq. 9-13)
+  sgp_step, run, make_consts                            (Algorithm 1)
+  run_spoo, run_lcor, run_lpr, run_all                  (baselines, §V)
+  theorem1_residual, flow_domain_optimum                (optimality, §III)
+  TABLE_II, make_scenario, fail_node                    (scenarios, §V)
+"""
+from .costs import Cost, CostFamily, FAMILIES, LINEAR, QUEUE, SAT
+from .network import (CECNetwork, Flows, Phi, compute_flows, cost_of_flows,
+                      is_loop_free, offload_phi, refeasibilize, spt_phi,
+                      total_cost, uniform_phi)
+from .marginals import Marginals, compute_marginals, phi_gradients
+from .sgp import SGPConsts, make_consts, project_rows, run, sgp_step
+from .baselines import run_all, run_lcor, run_lpr, run_spoo
+from .optimality import (flow_domain_optimum, marginals_vs_autodiff,
+                         theorem1_residual)
+from .scenarios import (TABLE_II, ScenarioSpec, enforce_feasibility,
+                        fail_node, make_scenario)
+from .distributed import run_distributed, task_mesh
+from . import moe_bridge, topologies
+
+__all__ = [
+    "Cost", "CostFamily", "FAMILIES", "LINEAR", "QUEUE", "SAT",
+    "CECNetwork", "Flows", "Phi", "compute_flows", "cost_of_flows",
+    "is_loop_free", "offload_phi", "refeasibilize", "spt_phi",
+    "total_cost", "uniform_phi",
+    "Marginals", "compute_marginals", "phi_gradients",
+    "SGPConsts", "make_consts", "project_rows", "run", "sgp_step",
+    "run_all", "run_lcor", "run_lpr", "run_spoo",
+    "flow_domain_optimum", "marginals_vs_autodiff", "theorem1_residual",
+    "TABLE_II", "ScenarioSpec", "enforce_feasibility", "fail_node",
+    "make_scenario", "topologies",
+]

@@ -1,0 +1,267 @@
+"""Baseline algorithms of §V: GP, SPOO, LCOR, LPR.
+
+GP is `sgp.run(..., variant="gp")`.  SPOO and LCOR are restricted SGP
+runs (the paper defines them as optimizing a subset of variables with the
+rest fixed).  LPR re-implements the linear-program-rounded joint method
+of Liu et al. [8]: single-path (non-partial) offloading over shortest
+paths with linearized costs and a 0.7 capacity saturate-factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import sgp
+from .costs import SAT
+from .network import CECNetwork, Phi, spt_phi, total_cost
+
+
+# ------------------------------------------------------------ shortest paths
+def all_pairs_next_hop(adj: np.ndarray, weight: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Floyd-Warshall: (dist[i,j], next_hop[i,j]) under edge weights."""
+    V = adj.shape[0]
+    INF = 1e30
+    dist = np.where(adj, weight, INF).astype(np.float64)
+    np.fill_diagonal(dist, 0.0)
+    nxt = np.where(adj, np.arange(V)[None, :], -1)
+    for k in range(V):
+        alt = dist[:, k:k + 1] + dist[k:k + 1, :]
+        better = alt < dist
+        dist = np.where(better, alt, dist)
+        nxt = np.where(better, nxt[:, k:k + 1], nxt)
+    return dist, nxt
+
+
+def _zero_flow_weights(net: CECNetwork) -> np.ndarray:
+    V = net.V
+    w = np.asarray(net.link_cost.d1(jnp.zeros((V, V))))
+    return np.where(np.asarray(net.adj), np.maximum(w, 1e-12), 1e30)
+
+
+def _path(nxt: np.ndarray, i: int, j: int):
+    """Edge list of the shortest path i -> j (empty if i == j)."""
+    path = []
+    u = i
+    for _ in range(nxt.shape[0] + 1):
+        if u == j:
+            return path
+        v = nxt[u, j]
+        if v < 0:
+            return None
+        path.append((u, int(v)))
+        u = int(v)
+    return None  # cycle guard
+
+
+# -------------------------------------------------------------------- SPOO
+def run_spoo(net: CECNetwork, n_iters: int = 200, **kw):
+    """Shortest Path Optimal Offloading: routing pinned to the SP tree
+    toward each destination; only offloading fractions optimized."""
+    adj = np.asarray(net.adj)
+    V, S = net.V, net.S
+    w = _zero_flow_weights(net)
+    _, nxt = all_pairs_next_hop(adj, w)
+    dests = np.asarray(net.dest)
+
+    allowed_d = np.zeros((S, V, V + 1), dtype=bool)
+    allowed_d[..., -1] = True
+    allowed_r = np.zeros((S, V, V), dtype=bool)
+    for s in range(S):
+        d = int(dests[s])
+        for i in range(V):
+            if i == d:
+                continue
+            h = nxt[i, d]
+            if h >= 0:
+                allowed_d[s, i, h] = True
+                allowed_r[s, i, h] = True
+
+    phi0 = spt_phi(net)
+    return sgp.run(net, phi0, n_iters=n_iters,
+                   allowed_data=jnp.asarray(allowed_d),
+                   allowed_result=jnp.asarray(allowed_r),
+                   use_blocking=False, **kw)
+
+
+# -------------------------------------------------------------------- LCOR
+def run_lcor(net: CECNetwork, n_iters: int = 200, **kw):
+    """Local Computation Optimal Routing: φ⁻_i0 ≡ 1; optimize result
+    routing with scaled gradient projection [25]."""
+    V, S = net.V, net.S
+    allowed_d = np.zeros((S, V, V + 1), dtype=bool)
+    allowed_d[..., -1] = True
+    phi0 = spt_phi(net)
+    return sgp.run(net, phi0, n_iters=n_iters,
+                   allowed_data=jnp.asarray(allowed_d), **kw)
+
+
+# --------------------------------------------------------------------- LPR
+def run_lpr(net: CECNetwork, saturate: float = 0.7,
+            max_lp_vars: int = 60000) -> Dict:
+    """Linear Program Rounded [8], adapted per the paper's §V.
+
+    * linearized costs: marginal cost at zero flow;
+    * no partial offloading: each (task, source) assigned to ONE compute
+      node (LP relaxation + rounding to argmax);
+    * data flow capped at `saturate` × capacity on queueing links /
+      compute units; result flow takes shortest paths, uncapped;
+    * evaluated under the TRUE convex cost of the resulting flows.
+    """
+    adj = np.asarray(net.adj)
+    V, S = net.V, net.S
+    w0 = _zero_flow_weights(net)
+    dist, nxt = all_pairs_next_hop(adj, w0)
+    dests = np.asarray(net.dest)
+    r = np.asarray(net.r)
+    a = np.asarray(net.a)
+    wmat = np.asarray(net.w)  # [S, V]
+    Cp0 = np.asarray(net.comp_cost.d1(jnp.zeros(V)))
+
+    pairs = [(s, i) for s in range(S) for i in range(V) if r[s, i] > 0]
+    nP = len(pairs)
+    nvars = nP * V
+
+    # objective coefficients c[(s,i),k]
+    c = np.zeros((nP, V))
+    for p, (s, i) in enumerate(pairs):
+        c[p] = r[s, i] * (dist[i] + wmat[s] * Cp0 + a[s] * dist[:, dests[s]])
+
+    x = None
+    if nvars <= max_lp_vars:
+        x = _solve_lp(net, pairs, c, dist, nxt, saturate)
+    if x is None:
+        x = _greedy_assign(net, pairs, c, saturate)
+
+    # round: one compute node per (task, source)
+    choice = np.argmax(x, axis=1)
+
+    # build true flows along shortest paths
+    F = np.zeros((V, V))
+    G = np.zeros(V)
+    hops_d, hops_r, mass = 0.0, 0.0, 0.0
+    for p, (s, i) in enumerate(pairs):
+        k = int(choice[p])
+        rate = r[s, i]
+        pd = _path(nxt, i, k) or []
+        pr = _path(nxt, k, int(dests[s])) or []
+        for (u, v) in pd:
+            F[u, v] += rate
+        for (u, v) in pr:
+            F[u, v] += a[s] * rate
+        G[k] += wmat[s, k] * rate
+        hops_d += rate * len(pd)
+        hops_r += rate * len(pr)
+        mass += rate
+
+    link = np.where(adj, np.asarray(net.link_cost.value(jnp.asarray(F))), 0.0)
+    T = float(np.sum(link) + np.sum(np.asarray(net.comp_cost.value(jnp.asarray(G)))))
+    return {"final_cost": T, "F": F, "G": G,
+            "L_data": hops_d / max(mass, 1e-12),
+            "L_result": hops_r / max(mass, 1e-12)}
+
+
+def _solve_lp(net, pairs, c, dist, nxt, saturate):
+    try:
+        from scipy.optimize import linprog
+        from scipy.sparse import lil_matrix
+    except ImportError:  # pragma: no cover
+        return None
+    adj = np.asarray(net.adj)
+    V = net.V
+    r = np.asarray(net.r)
+    a = np.asarray(net.a)
+    wmat = np.asarray(net.w)
+    nP = len(pairs)
+    n = nP * V
+
+    A_eq = lil_matrix((nP, n))
+    for p in range(nP):
+        A_eq[p, p * V:(p + 1) * V] = 1.0
+    b_eq = np.ones(nP)
+
+    rows, caps = [], []
+    if net.link_cost.family == "queue":
+        edges = [(u, v) for u in range(V) for v in range(V) if adj[u, v]]
+        eidx = {e: q for q, e in enumerate(edges)}
+        A_l = lil_matrix((len(edges), n))
+        used = np.zeros(len(edges), dtype=bool)
+        for p, (s, i) in enumerate(pairs):
+            for k in range(V):
+                pd = _path(nxt, i, k)
+                if pd is None:
+                    continue
+                for e in pd:
+                    q = eidx[e]
+                    A_l[q, p * V + k] += r[s, i]
+                    used[q] = True
+        capl = saturate * np.asarray(net.link_cost.params)[tuple(zip(*edges))] \
+            if edges else np.zeros(0)
+        keep = np.where(used)[0]
+        if len(keep):
+            rows.append(A_l.tocsr()[keep])
+            caps.append(capl[keep])
+    if net.comp_cost.family == "queue":
+        A_c = lil_matrix((V, n))
+        for p, (s, i) in enumerate(pairs):
+            for k in range(V):
+                A_c[k, p * V + k] = wmat[s, k] * r[s, i]
+        rows.append(A_c.tocsr())
+        caps.append(saturate * np.asarray(net.comp_cost.params))
+
+    if rows:
+        from scipy.sparse import vstack
+        A_ub = vstack(rows)
+        b_ub = np.concatenate(caps)
+    else:
+        A_ub, b_ub = None, None
+
+    res = linprog(c.ravel(), A_ub=A_ub, b_ub=b_ub, A_eq=A_eq.tocsr(),
+                  b_eq=b_eq, bounds=(0, 1), method="highs")
+    if not res.success:
+        return None
+    return res.x.reshape(nP, V)
+
+
+def _greedy_assign(net, pairs, c, saturate):
+    """Capacity-respecting greedy fallback for very large instances."""
+    V = net.V
+    r = np.asarray(net.r)
+    wmat = np.asarray(net.w)
+    cap = (saturate * np.asarray(net.comp_cost.params)
+           if net.comp_cost.family == "queue" else np.full(V, np.inf))
+    load = np.zeros(V)
+    x = np.zeros((len(pairs), V))
+    order = np.argsort([-r[s, i] for (s, i) in pairs])
+    for p in order:
+        s, i = pairs[p]
+        best, bestc = None, np.inf
+        for k in np.argsort(c[p]):
+            if load[k] + wmat[s, k] * r[s, i] <= cap[k]:
+                best, bestc = k, c[p, k]
+                break
+        if best is None:
+            best = int(np.argmin(load / np.maximum(cap, 1e-12)))
+        x[p, best] = 1.0
+        load[best] += wmat[s, best] * r[s, i]
+    return x
+
+
+# ------------------------------------------------------------------ summary
+def run_all(net: CECNetwork, n_iters: int = 200, min_scale: float = 0.05
+            ) -> Dict[str, float]:
+    """Fig. 4 driver: final total cost per algorithm on one scenario."""
+    phi0 = spt_phi(net)
+    out = {}
+    _, h = sgp.run(net, phi0, n_iters=n_iters, variant="sgp",
+                   min_scale=min_scale)
+    out["SGP"] = h["final_cost"]
+    _, h = run_spoo(net, n_iters=n_iters)
+    out["SPOO"] = h["final_cost"]
+    _, h = run_lcor(net, n_iters=n_iters)
+    out["LCOR"] = h["final_cost"]
+    out["LPR"] = run_lpr(net)["final_cost"]
+    return out

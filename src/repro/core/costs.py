@@ -1,0 +1,185 @@
+"""Congestion-aware convex cost families D_ij(F) and C_i(G).
+
+The paper requires increasing, continuously differentiable, convex costs.
+We implement the two families used in Table II plus extras:
+
+  * ``linear``  : D(F) = d * F                       (unit cost d)
+  * ``queue``   : D(F) = F / (cap - F)               (M/M/1 queueing delay)
+  * ``power``   : D(F) = d * F^p, p >= 1
+  * ``barrier`` : smooth approximation of a hard capacity F <= cap
+
+Queueing costs diverge at capacity.  During optimization an iterate may
+transiently exceed capacity, so we barrier-smooth: above ``SAT * cap`` the
+cost continues as the second-order Taylor expansion of F/(cap-F) around
+``SAT * cap`` (quadratic => still convex, increasing, C^1-continuous, and
+finite everywhere).  Feasible optima sit strictly inside the barrier, so
+the optimum is unchanged; tests verify this.
+
+All functions are vectorized: ``params`` are arrays broadcast against F.
+Every family exposes value / d1 (first derivative) / d2 (second
+derivative) / d2_sup(T0) — the last one is the paper's
+``A_ij(T0) = sup_{D(F) <= T0} D''(F)`` used in the SGP scaling matrix
+(Eq. 16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# Fraction of capacity where the quadratic extension of queue costs begins.
+SAT = 0.95
+
+
+@dataclasses.dataclass(frozen=True)
+class CostFamily:
+    """A convex cost family with closed-form derivatives."""
+
+    name: str
+    value: Callable  # (F, params) -> cost
+    d1: Callable     # (F, params) -> first derivative
+    d2: Callable     # (F, params) -> second derivative
+    d2_sup: Callable  # (T0, params) -> sup of d2 on the T0-sublevel set
+
+
+# ----------------------------------------------------------------- linear
+def _linear_value(F, d):
+    return d * F
+
+
+def _linear_d1(F, d):
+    return d * jnp.ones_like(F)
+
+
+def _linear_d2(F, d):
+    return jnp.zeros_like(F * d)
+
+
+def _linear_d2_sup(T0, d):
+    return jnp.zeros_like(jnp.asarray(d, dtype=jnp.result_type(float)))
+
+
+LINEAR = CostFamily("linear", _linear_value, _linear_d1, _linear_d2, _linear_d2_sup)
+
+
+# ------------------------------------------------------------------ queue
+def _queue_raw(F, cap):
+    return F / (cap - F)
+
+
+def _queue_raw_d1(F, cap):
+    return cap / (cap - F) ** 2
+
+
+def _queue_raw_d2(F, cap):
+    return 2.0 * cap / (cap - F) ** 3
+
+
+def _queue_value(F, cap):
+    """M/M/1 delay with quadratic extension above SAT * cap."""
+    Fs = SAT * cap
+    v0 = _queue_raw(Fs, cap)
+    g0 = _queue_raw_d1(Fs, cap)
+    h0 = _queue_raw_d2(Fs, cap)
+    dF = F - Fs
+    ext = v0 + g0 * dF + 0.5 * h0 * dF ** 2
+    inner = _queue_raw(jnp.minimum(F, Fs), cap)
+    return jnp.where(F <= Fs, inner, ext)
+
+
+def _queue_d1(F, cap):
+    Fs = SAT * cap
+    g0 = _queue_raw_d1(Fs, cap)
+    h0 = _queue_raw_d2(Fs, cap)
+    inner = _queue_raw_d1(jnp.minimum(F, Fs), cap)
+    return jnp.where(F <= Fs, inner, g0 + h0 * (F - Fs))
+
+
+def _queue_d2(F, cap):
+    Fs = SAT * cap
+    h0 = _queue_raw_d2(Fs, cap)
+    inner = _queue_raw_d2(jnp.minimum(F, Fs), cap)
+    return jnp.where(F <= Fs, inner, h0)
+
+
+def _queue_d2_sup(T0, cap):
+    """sup of D'' over {F : D(F) <= T0}.
+
+    D is increasing, so the sublevel set is [0, F̄] with D(F̄) = T0:
+    F̄ = cap * T0 / (1 + T0) (when below the saturation knee).  D'' is
+    increasing, so the sup is attained at min(F̄, SAT*cap) — the quadratic
+    extension has constant D'' equal to its value at the knee.
+    """
+    T0 = jnp.asarray(T0)
+    Fbar = cap * T0 / (1.0 + T0)
+    Fbar = jnp.minimum(Fbar, SAT * cap)
+    return _queue_raw_d2(Fbar, cap)
+
+
+QUEUE = CostFamily("queue", _queue_value, _queue_d1, _queue_d2, _queue_d2_sup)
+
+
+# ------------------------------------------------------------------ power
+_POWER_P = 3.0  # fixed exponent family; params = unit weight d
+
+
+def _power_value(F, d):
+    return d * F ** _POWER_P
+
+
+def _power_d1(F, d):
+    return d * _POWER_P * F ** (_POWER_P - 1.0)
+
+
+def _power_d2(F, d):
+    return d * _POWER_P * (_POWER_P - 1.0) * F ** (_POWER_P - 2.0)
+
+
+def _power_d2_sup(T0, d):
+    # D(F) = d F^p <= T0  =>  F̄ = (T0/d)^(1/p);  D'' increasing in F.
+    d = jnp.asarray(d)
+    Fbar = (jnp.asarray(T0) / jnp.maximum(d, 1e-30)) ** (1.0 / _POWER_P)
+    return _power_d2(Fbar, d)
+
+
+POWER = CostFamily("power", _power_value, _power_d1, _power_d2, _power_d2_sup)
+
+FAMILIES = {"linear": LINEAR, "queue": QUEUE, "power": POWER}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cost:
+    """A concrete cost: family + per-element parameter array.
+
+    For link costs ``params`` has shape [V, V] (masked by adjacency);
+    for compute costs shape [V].
+    """
+
+    family: str
+    params: jnp.ndarray
+
+    def value(self, F):
+        return FAMILIES[self.family].value(F, self.params)
+
+    def d1(self, F):
+        return FAMILIES[self.family].d1(F, self.params)
+
+    def d2(self, F):
+        return FAMILIES[self.family].d2(F, self.params)
+
+    def d2_sup(self, T0):
+        return FAMILIES[self.family].d2_sup(T0, self.params)
+
+    def tree_flatten(self):
+        return (self.params,), self.family
+
+    @classmethod
+    def tree_unflatten(cls, family, children):
+        return cls(family, children[0])
+
+
+jax.tree_util.register_pytree_node(
+    Cost, Cost.tree_flatten, Cost.tree_unflatten
+)

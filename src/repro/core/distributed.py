@@ -1,0 +1,136 @@
+"""Distributed SGP: the paper's per-node algorithm mapped onto JAX SPMD.
+
+The paper distributes Algorithm 1 over NETWORK nodes with a broadcast
+protocol.  On an accelerator cluster the natural SPMD decomposition is
+over TASKS: each device owns a shard of the |S| tasks (a task's routing
+variables, traffic solves, marginal recursions and QP projections are
+all task-local), and the only cross-task coupling — total link flows
+F_ij and workloads G_i, i.e. the paper's "measurement" phase — is a
+single `psum` per iteration.
+
+This scales the optimizer itself: a 512-chip pod solves 512× the tasks
+per iteration at the cost of one all-reduce of a [V,V]+[V] buffer, and
+is the engine behind the serving-layer request router
+(`repro.serving.router`), where |S| is the number of active request
+classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .network import CECNetwork, Phi
+from .sgp import SGPConsts, _sgp_step_impl, make_consts
+
+AXIS = "tasks"
+
+
+def task_mesh(n_devices: Optional[int] = None) -> Mesh:
+    devs = np.asarray(jax.devices()[: n_devices or len(jax.devices())])
+    return Mesh(devs, (AXIS,))
+
+
+def pad_tasks(net: CECNetwork, phi: Phi, n_shards: int):
+    """Pad the task dimension to a multiple of the device count.
+
+    Padding tasks have zero input rate: they generate no flow, no cost,
+    and their (irrelevant) routing variables stay feasible.
+    """
+    S = net.S
+    Sp = ((S + n_shards - 1) // n_shards) * n_shards
+    if Sp == S:
+        return net, phi, S
+
+    def pad(x, fill=0.0):
+        widths = [(0, Sp - S)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    net_p = dataclasses.replace(
+        net, dest=pad(net.dest), r=pad(net.r),
+        a=pad(net.a, 1.0), w=pad(net.w, 1.0), task_type=pad(net.task_type))
+    # padded φ: all-local data, result parked one-hot on the first
+    # out-neighbor (any feasible loop-free row works: rate is zero)
+    data = pad(phi.data)
+    data = data.at[S:, :, -1].set(1.0)
+    first_nbr = jnp.argmax(net.adj, axis=1)                    # [V]
+    onehot = jax.nn.one_hot(first_nbr, net.V, dtype=phi.result.dtype)
+    result = pad(phi.result)
+    result = result.at[S:].set(onehot[None])
+    result = result.at[S:, 0, :].set(0.0)  # dest of padded tasks = node 0
+    return net_p, Phi(data, result), S
+
+
+def make_distributed_step(mesh: Mesh, variant: str = "sgp",
+                          scaling: str = "adaptive", kappa: float = 0.0,
+                          method: str = "dense"):
+    """Build the jitted shard_map SGP step for a 1-D task mesh."""
+    task_sharded = CECNetwork(
+        adj=P(), link_cost=P(), comp_cost=P(),
+        dest=P(AXIS), r=P(AXIS), a=P(AXIS), w=P(AXIS), task_type=P(AXIS))
+    phi_spec = Phi(P(AXIS), P(AXIS))
+    consts_spec = SGPConsts(P(), P(), P(), P())
+
+    def step(net, phi, consts, sigma):
+        new_phi, aux = _sgp_step_impl(
+            net, phi, consts, variant=variant, scaling=scaling,
+            sigma=sigma, kappa=kappa, method=method, psum_axis=AXIS)
+        return new_phi, aux["cost"]
+
+    sharded = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(task_sharded, phi_spec, consts_spec, P()),
+        out_specs=(phi_spec, P()),
+        check_vma=False)
+    return jax.jit(sharded)
+
+
+def run_distributed(net: CECNetwork, phi0: Phi, n_iters: int = 200,
+                    mesh: Optional[Mesh] = None, variant: str = "sgp",
+                    scaling: str = "adaptive", kappa: float = 0.0,
+                    min_scale: float = 0.05):
+    """Driver: distributed SGP with the same safeguard as `sgp.run`.
+
+    Returns (phi_final [original S], history).  Bitwise-equivalent to the
+    single-device path up to reduction order (validated in tests).
+    """
+    from .network import total_cost as _tc
+
+    mesh = mesh or task_mesh()
+    n_dev = mesh.devices.size
+    net_p, phi_p, S = pad_tasks(net, phi0, n_dev)
+    step = make_distributed_step(mesh, variant=variant, scaling=scaling,
+                                 kappa=kappa)
+    T0 = _tc(net_p, phi_p)
+    consts = make_consts(net_p, T0, min_scale)
+
+    # device placement
+    def shard_spec(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    costs = [float(T0)]
+    sigma = 1.0
+    n_rejected = 0
+    phi = phi_p
+    for _ in range(n_iters):
+        phi_new, cost = step(net_p, phi, consts, jnp.asarray(sigma))
+        new_cost = float(_tc(net_p, phi_new))
+        if scaling == "adaptive" and variant == "sgp" \
+                and new_cost > costs[-1] * (1.0 + 1e-12):
+            sigma *= 4.0
+            n_rejected += 1
+            if sigma > 1e12:
+                break
+        else:
+            phi = phi_new
+            costs.append(new_cost)
+            sigma = max(sigma / 1.5, 1.0)
+    phi_out = Phi(phi.data[:S], phi.result[:S])
+    return phi_out, {"costs": costs, "final_cost": costs[-1],
+                     "n_rejected": n_rejected}

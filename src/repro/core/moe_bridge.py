@@ -1,0 +1,83 @@
+"""Congestion-aware MoE routing — the paper's δ-marginals inside the model.
+
+Expert dispatch IS a one-hop instance of the paper's offloading problem:
+
+  * experts  = compute units with convex congestion cost C_e(G_e)
+    (M/M/1-style queueing delay as expert load approaches its capacity —
+    exactly the paper's computation cost family);
+  * the dispatch all-to-all fabric = congestible links D_e(F_e);
+  * a (result/data ratio) = combine-traffic / dispatch-traffic (1 for
+    standard MoE: each token comes back once).
+
+Theorem 1 says flow should only be sent to experts whose marginal cost
+  δ⁻_e = D'_e(F_e) + w_e · C'_e(G_e) + a · D'_e(F_e)
+is minimal.  We realize this as a LOGIT BIAS: the gate adds -η·δ_e before
+top-k selection, with expert loads tracked by an EMA across steps.  This
+replaces auxiliary load-balancing losses with the paper's optimality
+condition (aux-loss-free, like DeepSeek-V3's bias method — but with a
+principled marginal-cost form instead of a heuristic additive update).
+
+Pure-jnp and jit/pjit-safe; used by `repro.models.layers.moe`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .costs import FAMILIES
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CongestionState:
+    """Per-MoE-layer router state, carried across train/serve steps."""
+    load_ema: jnp.ndarray   # [E] EMA of tokens-per-expert (dispatch rate)
+    step: jnp.ndarray       # scalar int32
+
+
+def init_state(num_experts: int, dtype=jnp.float32) -> CongestionState:
+    return CongestionState(
+        load_ema=jnp.zeros((num_experts,), dtype=dtype),
+        step=jnp.zeros((), dtype=jnp.int32))
+
+
+def congestion_bias(state: CongestionState, capacity: jnp.ndarray,
+                    *, eta: float = 1e-2, a: float = 1.0,
+                    w: jnp.ndarray | float = 1.0,
+                    link_capacity: jnp.ndarray | None = None,
+                    family: str = "queue") -> jnp.ndarray:
+    """-η·δ_e per expert (Eq. 13 specialized to the one-hop MoE graph).
+
+    capacity: [E] expert compute capacity in tokens/step (G cap).
+    link_capacity: [E] optional dispatch-link capacity (defaults to the
+    expert capacity — a balanced fabric).
+    """
+    fam = FAMILIES[family]
+    G = state.load_ema
+    Cp = fam.d1(G, capacity)                       # w·C'(G)
+    link_cap = capacity if link_capacity is None else link_capacity
+    Dp = fam.d1(G, link_cap)                       # D'(F) dispatch
+    delta = Dp + w * Cp + a * Dp                   # δ⁻_e, one-hop form
+    return -eta * delta
+
+
+def update_state(state: CongestionState, counts: jnp.ndarray,
+                 decay: float = 0.99) -> CongestionState:
+    """EMA update from this step's tokens-per-expert counts [E]."""
+    ema = decay * state.load_ema + (1.0 - decay) * counts.astype(
+        state.load_ema.dtype)
+    return CongestionState(load_ema=ema, step=state.step + 1)
+
+
+def expert_counts(top_idx: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """tokens-per-expert from the [tokens, k] top-k index matrix."""
+    onehot = jax.nn.one_hot(top_idx, num_experts, dtype=jnp.float32)
+    return jnp.sum(onehot, axis=tuple(range(onehot.ndim - 1)))
+
+
+def load_imbalance(counts: jnp.ndarray) -> jnp.ndarray:
+    """max/mean load ratio — 1.0 is perfectly balanced."""
+    mean = jnp.mean(counts)
+    return jnp.max(counts) / jnp.maximum(mean, 1e-9)

@@ -1,0 +1,291 @@
+"""The CEC flow model (paper §II).
+
+State layout (all dense, fixed-shape, jit-friendly; V nodes, S tasks):
+
+  adj        [V, V]   bool   directed edges (i -> j)
+  dest       [S]      int    destination node of each task
+  r          [S, V]   float  exogenous data input rates r_i(d,m)
+  a          [S]      float  result-size ratio a_m of the task's type
+  w          [S, V]   float  computation weight w_{i, m_s}
+  task_type  [S]      int    computation type m of each task (bookkeeping)
+
+Routing/offloading strategy phi (paper's φ):
+
+  data    [S, V, V+1]  φ⁻: columns 0..V-1 forward to neighbor j, column V
+                       is the local-offload fraction φ⁻_i0 ("0" in paper)
+  result  [S, V, V]    φ⁺: result forwarding fractions; row dest[s] ≡ 0
+
+Flow computation: with loop-free φ the supports are DAGs, so the traffic
+recursions (1)-(2) are nonsingular sparse triangular-like systems
+
+  t⁻ = r + (Φ⁻)ᵀ t⁻        (data traffic)
+  t⁺ = a·g + (Φ⁺)ᵀ t⁺      (result traffic),  g = t⁻ ⊙ φ_local
+
+solved either by batched dense ``jnp.linalg.solve`` (default; V ≤ a few
+hundred) or by |V|-step fixed-point iteration (`method="broadcast"`),
+which mirrors the paper's hop-by-hop broadcast and is what the
+distributed shard_map version uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .costs import Cost
+
+LOCAL = -1  # alias: phi.data[..., -1] is the local-offload column
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CECNetwork:
+    adj: jnp.ndarray        # [V, V] bool
+    link_cost: Cost         # params [V, V]
+    comp_cost: Cost         # params [V]
+    dest: jnp.ndarray       # [S] int32
+    r: jnp.ndarray          # [S, V]
+    a: jnp.ndarray          # [S]
+    w: jnp.ndarray          # [S, V]
+    task_type: jnp.ndarray  # [S] int32
+
+    @property
+    def V(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def S(self) -> int:
+        return self.dest.shape[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Phi:
+    data: jnp.ndarray    # [S, V, V+1]
+    result: jnp.ndarray  # [S, V, V]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Flows:
+    t_data: jnp.ndarray    # [S, V] data traffic t⁻
+    t_result: jnp.ndarray  # [S, V] result traffic t⁺
+    g: jnp.ndarray         # [S, V] computational input rate
+    F: jnp.ndarray         # [V, V] total link flow
+    G: jnp.ndarray         # [V] computation workload
+    f_data: jnp.ndarray    # [S, V, V] per-task data link flow
+    f_result: jnp.ndarray  # [S, V, V] per-task result link flow
+
+
+# --------------------------------------------------------------------------
+def _solve_traffic(phi_nbr: jnp.ndarray, inject: jnp.ndarray,
+                   method: str = "dense") -> jnp.ndarray:
+    """Solve t = inject + Φᵀ t for each task.
+
+    phi_nbr: [S, V, V] neighbor-forwarding fractions, inject: [S, V].
+    """
+    S, V, _ = phi_nbr.shape
+    if method == "dense":
+        eye = jnp.eye(V, dtype=phi_nbr.dtype)
+        A = eye[None] - jnp.swapaxes(phi_nbr, -1, -2)  # I - Φᵀ
+        return jnp.linalg.solve(A, inject[..., None])[..., 0]
+    elif method == "broadcast":
+        # Paper-faithful hop-by-hop propagation. Loop-free Φ is nilpotent
+        # with index <= V, so V rounds reach the exact fixed point.
+        def body(t, _):
+            t = inject + jnp.einsum("sij,si->sj", phi_nbr, t)
+            return t, None
+        t, _ = jax.lax.scan(body, inject, None, length=V)
+        return t
+    raise ValueError(f"unknown method {method}")
+
+
+def compute_flows(net: CECNetwork, phi: Phi, method: str = "dense") -> Flows:
+    """Forward pass of the flow model: φ -> all traffic and flows."""
+    adjf = net.adj.astype(phi.data.dtype)
+    phi_d_nbr = phi.data[..., :-1] * adjf[None]   # mask non-edges
+    phi_loc = phi.data[..., -1]                   # [S, V]
+    phi_r = phi.result * adjf[None]
+
+    t_data = _solve_traffic(phi_d_nbr, net.r, method)
+    g = t_data * phi_loc
+    t_result = _solve_traffic(phi_r, net.a[:, None] * g, method)
+
+    f_data = t_data[..., None] * phi_d_nbr
+    f_result = t_result[..., None] * phi_r
+    F = jnp.sum(f_data + f_result, axis=0)
+    G = jnp.sum(net.w * g, axis=0)
+    return Flows(t_data, t_result, g, F, G, f_data, f_result)
+
+
+def total_cost(net: CECNetwork, phi: Phi, method: str = "dense") -> jnp.ndarray:
+    fl = compute_flows(net, phi, method)
+    return cost_of_flows(net, fl)
+
+
+def cost_of_flows(net: CECNetwork, fl: Flows) -> jnp.ndarray:
+    link = jnp.where(net.adj, net.link_cost.value(fl.F), 0.0)
+    return jnp.sum(link) + jnp.sum(net.comp_cost.value(fl.G))
+
+
+# --------------------------------------------------------------------------
+def uniform_phi(net: CECNetwork) -> Phi:
+    """A trivially feasible (NOT loop-free) φ — only for shape plumbing."""
+    V, S = net.V, net.S
+    deg = jnp.sum(net.adj, axis=1)
+    data = jnp.zeros((S, V, V + 1))
+    data = data.at[..., -1].set(1.0)  # all-local offload
+    result = jnp.where(net.adj[None], 1.0 / jnp.maximum(deg, 1)[None, :, None],
+                       0.0) * jnp.ones((S, 1, 1))
+    result = result.at[jnp.arange(S), net.dest, :].set(0.0)
+    return Phi(data, result)
+
+
+def shortest_path_tree(adj: np.ndarray, weight: np.ndarray,
+                       dest: int) -> np.ndarray:
+    """Next hop toward `dest` under edge weights (Floyd-Warshall, numpy).
+
+    Returns next_hop[i] (== dest's own entry is arbitrary/self)."""
+    V = adj.shape[0]
+    INF = 1e30
+    dist = np.where(adj, weight, INF).astype(np.float64)
+    np.fill_diagonal(dist, 0.0)
+    nxt = np.where(adj, np.arange(V)[None, :], -1)
+    for k in range(V):
+        alt = dist[:, k:k + 1] + dist[k:k + 1, :]
+        better = alt < dist
+        dist = np.where(better, alt, dist)
+        nxt = np.where(better, nxt[:, k:k + 1], nxt)
+    return nxt[:, dest]
+
+
+def spt_phi(net: CECNetwork, weight: np.ndarray | None = None) -> Phi:
+    """Feasible loop-free initial strategy φ⁰ (the paper's requirement).
+
+    Data: fully local offload (φ⁻_i0 = 1).  Result: forwarded along the
+    shortest-path tree toward each task's destination, with edge weights
+    = marginal link cost at zero flow (propagation-only, no queueing).
+    """
+    adj = np.asarray(net.adj)
+    V, S = net.V, net.S
+    if weight is None:
+        weight = np.asarray(net.link_cost.d1(jnp.zeros((V, V))))
+    data = np.zeros((S, V, V + 1))
+    data[..., -1] = 1.0
+    result = np.zeros((S, V, V))
+    dests = np.asarray(net.dest)
+    for s in range(S):
+        nxt = shortest_path_tree(adj, weight, int(dests[s]))
+        for i in range(V):
+            if i != dests[s] and nxt[i] >= 0:
+                result[s, i, nxt[i]] = 1.0
+    return Phi(jnp.asarray(data), jnp.asarray(result))
+
+
+def offload_phi(net: CECNetwork, compute_nodes, weight: np.ndarray | None = None
+                ) -> Phi:
+    """Feasible loop-free φ⁰ that computes only at `compute_nodes`.
+
+    Data: each node forwards along the shortest path toward its nearest
+    compute node (zero-flow marginal weights); compute nodes offload
+    locally.  Result: shortest-path tree toward each destination.
+    Used when some nodes (serving frontends) must not compute.
+    """
+    adj = np.asarray(net.adj)
+    V, S = net.V, net.S
+    if weight is None:
+        weight = np.asarray(net.link_cost.d1(jnp.zeros((V, V))))
+    INF = 1e30
+    dist = np.where(adj, weight, INF).astype(np.float64)
+    np.fill_diagonal(dist, 0.0)
+    nxt = np.where(adj, np.arange(V)[None, :], -1)
+    for k in range(V):
+        alt = dist[:, k:k + 1] + dist[k:k + 1, :]
+        better = alt < dist
+        dist = np.where(better, alt, dist)
+        nxt = np.where(better, nxt[:, k:k + 1], nxt)
+
+    compute_nodes = list(compute_nodes)
+    nearest = np.asarray(compute_nodes)[
+        np.argmin(dist[:, compute_nodes], axis=1)]        # [V]
+
+    data = np.zeros((S, V, V + 1))
+    for i in range(V):
+        if i in compute_nodes:
+            data[:, i, -1] = 1.0
+        else:
+            h = nxt[i, nearest[i]]
+            data[:, i, h if h >= 0 else -1] = 1.0
+
+    result = np.zeros((S, V, V))
+    dests = np.asarray(net.dest)
+    for s in range(S):
+        for i in range(V):
+            d = int(dests[s])
+            if i != d and nxt[i, d] >= 0:
+                result[s, i, nxt[i, d]] = 1.0
+    return Phi(jnp.asarray(data), jnp.asarray(result))
+
+
+# --------------------------------------------------------------------------
+def support_matrices(net: CECNetwork, phi: Phi, tol: float = 0.0
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Boolean support of data / result forwarding (neighbors only)."""
+    sup_d = (phi.data[..., :-1] > tol) & net.adj[None]
+    sup_r = (phi.result > tol) & net.adj[None]
+    return sup_d, sup_r
+
+
+def is_loop_free(net: CECNetwork, phi: Phi, tol: float = 0.0) -> jnp.ndarray:
+    """True iff both supports are DAGs for every task (boolean closure)."""
+    sup_d, sup_r = support_matrices(net, phi, tol)
+
+    def has_cycle(sup):
+        V = sup.shape[-1]
+        reach = sup
+        n = max(1, int(np.ceil(np.log2(max(V, 2)))))
+        for _ in range(n):
+            reach = reach | (jnp.einsum("sik,skj->sij", reach.astype(jnp.float32),
+                                        reach.astype(jnp.float32)) > 0)
+        diag = jnp.diagonal(reach, axis1=-2, axis2=-1)
+        return jnp.any(diag)
+
+    return ~(has_cycle(sup_d) | has_cycle(sup_r))
+
+
+def refeasibilize(net: CECNetwork, phi: Phi) -> Phi:
+    """Project φ back to feasibility after topology change (node failure).
+
+    Zeroes mass on removed edges and renormalizes; data rows left with
+    no mass fall back to local offload; result rows left with no mass
+    fall back to the shortest-path tree toward their destination on the
+    NEW graph (spreading over all out-edges can close a loop and make
+    the traffic solve singular).
+    """
+    adjf = net.adj.astype(phi.data.dtype)
+    data_nbr = phi.data[..., :-1] * adjf[None]
+    data = jnp.concatenate([data_nbr, phi.data[..., -1:]], axis=-1)
+    dsum = jnp.sum(data, axis=-1, keepdims=True)
+    # missing mass goes to local offload
+    data = data.at[..., -1].add(jnp.maximum(0.0, 1.0 - dsum[..., 0]))
+    data = data / jnp.maximum(jnp.sum(data, axis=-1, keepdims=True), 1e-30)
+
+    result = phi.result * adjf[None]
+    rsum = jnp.sum(result, axis=-1)                       # [S, V]
+    S, V = net.S, net.V
+    is_dest = (jnp.arange(V)[None] == net.dest[:, None])  # [S, V]
+    # A task whose routing lost mass anywhere is rebuilt ENTIRELY from
+    # the shortest-path tree on the new graph: mixing surviving rows
+    # with repaired rows can close a loop (making the traffic solve
+    # singular); per-task SPT replacement is always loop-free.
+    alive = jnp.any(net.adj, axis=-1)[None] | is_dest     # nodes with exits
+    broken = jnp.any((rsum <= 1e-12) & ~is_dest & alive, axis=-1)  # [S]
+    spt = spt_phi(net).result
+    result = result / jnp.maximum(rsum[..., None], 1e-30)
+    result = jnp.where(rsum[..., None] > 1e-12, result, 0.0)
+    result = jnp.where(broken[:, None, None], spt, result)
+    result = jnp.where(is_dest[..., None], 0.0, result)
+    return Phi(data, result)

@@ -1,0 +1,181 @@
+"""Optimality certificates (Lemma 1, Theorem 1) and an independent
+convex flow-domain reference solver.
+
+The paper's key structural fact: T is NON-convex in φ but jointly convex
+in the flow variables (f⁻, f⁺, g) over a polytope.  `flow_domain_optimum`
+solves that convex program directly (scipy trust-constr on small
+instances) — giving an independent global-optimum value that SGP must
+match (Theorem 1 ⇒ Theorem 2).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .marginals import BIG, compute_marginals
+from .network import CECNetwork, Phi, compute_flows, is_loop_free
+
+
+def theorem1_residual(net: CECNetwork, phi: Phi, tol: float = 1e-6) -> Dict:
+    """Max violation of the Theorem-1 conditions.
+
+    For every (i, task): active coordinates (φ > tol) must achieve the
+    row-min of δ.  Returns the worst absolute gap (δ_active - δ_min) and
+    the corresponding Lemma-1 gap (scaled by traffic).
+    """
+    fl = compute_flows(net, phi)
+    mg = compute_marginals(net, phi, fl)
+    V = net.V
+    is_dest = jnp.arange(V)[None] == net.dest[:, None]
+
+    def gaps(phi_mat, delta, row_valid):
+        active = phi_mat > tol
+        dmin = jnp.min(jnp.where(delta < BIG / 2, delta, BIG), axis=-1,
+                       keepdims=True)
+        gap = jnp.where(active, delta - dmin, 0.0)
+        gap = jnp.where(row_valid[..., None], gap, 0.0)
+        return jnp.max(gap)
+
+    g_d = gaps(phi.data, mg.delta_data, jnp.ones((net.S, V), dtype=bool))
+    g_r = gaps(phi.result, mg.delta_result, ~is_dest)
+
+    # Lemma-1 residual = traffic-weighted (the non-sufficient condition)
+    l_d = gaps(phi.data, fl.t_data[..., None] * mg.delta_data,
+               jnp.ones((net.S, V), dtype=bool))
+    l_r = gaps(phi.result, fl.t_result[..., None] * mg.delta_result, ~is_dest)
+
+    return {"theorem1": float(jnp.maximum(g_d, g_r)),
+            "lemma1": float(jnp.maximum(l_d, l_r)),
+            "loop_free": bool(is_loop_free(net, phi, tol=tol))}
+
+
+def marginals_vs_autodiff(net: CECNetwork, phi: Phi) -> float:
+    """Cross-check Eq. 9-12 closed forms against jax.grad of total cost.
+
+    Returns the max abs difference between the analytic gradient
+    t⊙δ (Lemma 1) and automatic differentiation through the flow solve.
+    Feasibility constraints are not imposed on the perturbation —
+    both sides measure the same unconstrained partial derivative.
+    """
+    from .network import cost_of_flows
+
+    def T_of(phi_):
+        return cost_of_flows(net, compute_flows(net, phi_))
+
+    g_auto = jax.grad(lambda p: T_of(p))(phi)
+    fl = compute_flows(net, phi)
+    mg = compute_marginals(net, phi, fl)
+    gd = fl.t_data[..., None] * mg.delta_data
+    gr = fl.t_result[..., None] * mg.delta_result
+
+    adjf = net.adj
+    mask_d = jnp.concatenate(
+        [jnp.broadcast_to(adjf[None], (net.S, net.V, net.V)),
+         jnp.ones((net.S, net.V, 1), dtype=bool)], axis=-1)
+    err_d = jnp.max(jnp.abs(jnp.where(mask_d, g_auto.data - gd, 0.0)))
+    err_r = jnp.max(jnp.abs(jnp.where(adjf[None], g_auto.result - gr, 0.0)))
+    return float(jnp.maximum(err_d, err_r))
+
+
+# ----------------------------------------------------------- convex reference
+def flow_domain_optimum(net: CECNetwork, maxiter: int = 800) -> float:
+    """Global optimum via the convex flow-domain program (24), scipy.
+
+    Variables per task s: f⁻[e], f⁺[e] on directed edges, g[i].
+    Conservation:  r_i + Σ_in f⁻ = Σ_out f⁻ + g_i          (data)
+                   a_s g_i + Σ_in f⁺ = Σ_out f⁺            (result, i≠d)
+    Intended for small instances (V ≤ ~12, S ≤ ~4) in tests.
+    """
+    from scipy.optimize import LinearConstraint, minimize
+
+    adj = np.asarray(net.adj)
+    V, S = net.V, net.S
+    edges = [(u, v) for u in range(V) for v in range(V) if adj[u, v]]
+    E = len(edges)
+    nvar = S * (2 * E + V)
+
+    def unpack(z):
+        z = z.reshape(S, 2 * E + V)
+        return z[:, :E], z[:, E:2 * E], z[:, 2 * E:]
+
+    lp = np.asarray(net.link_cost.params)[tuple(zip(*edges))]
+    cpar = np.asarray(net.comp_cost.params)
+    r = np.asarray(net.r)
+    a = np.asarray(net.a)
+    w = np.asarray(net.w)
+    dests = np.asarray(net.dest)
+    fam_l = net.link_cost.family
+    fam_c = net.comp_cost.family
+
+    from .costs import FAMILIES
+
+    def obj(z):
+        fd, fr, g = unpack(z)
+        F = (fd + fr).sum(axis=0)
+        G = (w * g).sum(axis=0)
+        val = FAMILIES[fam_l].value(jnp.asarray(F), jnp.asarray(lp)).sum() \
+            + FAMILIES[fam_c].value(jnp.asarray(G), jnp.asarray(cpar)).sum()
+        return float(val)
+
+    def grad(z):
+        fd, fr, g = unpack(z)
+        F = (fd + fr).sum(axis=0)
+        G = (w * g).sum(axis=0)
+        dF = np.asarray(FAMILIES[fam_l].d1(jnp.asarray(F), jnp.asarray(lp)))
+        dG = np.asarray(FAMILIES[fam_c].d1(jnp.asarray(G), jnp.asarray(cpar)))
+        out = np.zeros((S, 2 * E + V))
+        out[:, :E] = dF[None]
+        out[:, E:2 * E] = dF[None]
+        out[:, 2 * E:] = w * dG[None]
+        return out.ravel()
+
+    # conservation constraints
+    rows = []
+    rhs = []
+    for s in range(S):
+        base = s * (2 * E + V)
+        for i in range(V):
+            row = np.zeros(nvar)
+            for q, (u, v) in enumerate(edges):
+                if v == i:
+                    row[base + q] += 1.0
+                if u == i:
+                    row[base + q] -= 1.0
+            row[base + 2 * E + i] = -1.0
+            rows.append(row)
+            rhs.append(-r[s, i])
+        for i in range(V):
+            if i == dests[s]:
+                continue
+            row = np.zeros(nvar)
+            for q, (u, v) in enumerate(edges):
+                if v == i:
+                    row[base + E + q] += 1.0
+                if u == i:
+                    row[base + E + q] -= 1.0
+            row[base + 2 * E + i] = a[s]
+            rows.append(row)
+            rhs.append(0.0)
+    A = np.asarray(rows)
+    b = np.asarray(rhs)
+
+    # feasible start: compute locally (g_i = r_i), route result via flows
+    # from the φ⁰ strategy
+    from .network import spt_phi
+    fl0 = compute_flows(net, spt_phi(net))
+    z0 = np.zeros((S, 2 * E + V))
+    fd0 = np.asarray(fl0.f_data)
+    fr0 = np.asarray(fl0.f_result)
+    for q, (u, v) in enumerate(edges):
+        z0[:, q] = fd0[:, u, v]
+        z0[:, E + q] = fr0[:, u, v]
+    z0[:, 2 * E:] = np.asarray(fl0.g)
+
+    res = minimize(obj, z0.ravel(), jac=grad, method="SLSQP",
+                   bounds=[(0, None)] * nvar,
+                   constraints=[LinearConstraint(A, b, b)],
+                   options={"maxiter": maxiter, "ftol": 1e-12})
+    return float(res.fun)

@@ -1,0 +1,154 @@
+"""Table II scenario sampler.
+
+Samples tasks, rates, result ratios a_m, weights w_im, link/compute cost
+parameters exactly as described in the paper's §V, and enforces the
+paper's feasibility requirement: the initial strategy φ⁰ (pure-local
+computation + shortest-path result routing) must have finite cost — for
+queueing costs that means all flows strictly inside capacity.  If the
+sampled capacities are too tight, they are scaled up (the paper only
+"simulates scenarios where pure-local computation is feasible").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import topologies
+from .costs import Cost, SAT
+from .network import CECNetwork, Phi, compute_flows, spt_phi
+
+
+@dataclasses.dataclass
+class ScenarioSpec:
+    topology: str = "connected_er"
+    V: Optional[int] = None          # topology default if None
+    S: int = 15                      # number of tasks
+    R: int = 5                       # active data sources per task
+    M: int = 5                       # computation types
+    link: str = "queue"              # 'linear' | 'queue'
+    comp: str = "queue"
+    d_mean: float = 10.0             # mean link cap (queue) / unit cost (linear)
+    s_mean: float = 12.0             # mean compute cap / speed
+    r_min: float = 0.5
+    r_max: float = 1.5
+    a_mean: float = 0.5              # exponential mean, truncated [0.1, 5]
+    seed: int = 0
+
+
+# Table II rows.
+TABLE_II = {
+    "connected_er": ScenarioSpec("connected_er", 20, 15, 5, 5, "queue", "queue", 10, 12),
+    "balanced_tree": ScenarioSpec("balanced_tree", 15, 20, 5, 5, "queue", "queue", 20, 15),
+    "fog": ScenarioSpec("fog", 19, 30, 5, 5, "queue", "queue", 20, 17),
+    "abilene": ScenarioSpec("abilene", 11, 10, 3, 5, "queue", "queue", 15, 10),
+    "lhc": ScenarioSpec("lhc", 16, 30, 5, 5, "queue", "queue", 15, 15),
+    "geant": ScenarioSpec("geant", 22, 40, 7, 5, "queue", "queue", 20, 20),
+    "sw_linear": ScenarioSpec("small_world", 100, 120, 10, 5, "linear", "linear", 20, 20),
+    "sw_queue": ScenarioSpec("small_world", 100, 120, 10, 5, "queue", "queue", 20, 20),
+}
+
+
+def _mk_adj(spec: ScenarioSpec) -> np.ndarray:
+    gen = topologies.TOPOLOGIES[spec.topology]
+    if spec.topology in ("connected_er", "small_world"):
+        return gen(seed=spec.seed)
+    return gen()
+
+
+def make_scenario(spec: ScenarioSpec, rate_scale: float = 1.0,
+                  feasibility_margin: float = 0.75) -> CECNetwork:
+    rng = np.random.RandomState(spec.seed)
+    adj = _mk_adj(spec)
+    V = adj.shape[0]
+    S, M = spec.S, spec.M
+
+    # tasks: random destination + type; R random sources with U[rmin,rmax]
+    dest = rng.randint(0, V, size=S)
+    ttype = rng.randint(0, M, size=S)
+    a_m = np.clip(rng.exponential(spec.a_mean, size=M), 0.1, 5.0)
+    r = np.zeros((S, V))
+    for s in range(S):
+        src = rng.choice(V, size=min(spec.R, V), replace=False)
+        r[s, src] = rng.uniform(spec.r_min, spec.r_max, size=len(src)) * rate_scale
+
+    w_im = rng.uniform(1.0, 5.0, size=(V, M))
+    w = w_im[:, ttype].T                      # [S, V]
+    a = a_m[ttype]                            # [S]
+
+    # link params d_ij ~ U[0, 2 d_mean] (floored: degenerate near-zero
+    # capacities make the Eq. 16 curvature bound A(T0) = 2(1+T0)^3/cap^2
+    # astronomically conservative; the paper's instances are non-degenerate)
+    d_ij = rng.uniform(0.0, 2.0 * spec.d_mean, size=(V, V))
+    d_ij = np.where(adj, np.maximum(d_ij, 0.05 * spec.d_mean), 1.0)
+    if spec.comp == "queue":
+        s_i = np.maximum(rng.exponential(spec.s_mean, size=V),
+                         0.05 * spec.s_mean)
+    else:
+        s_i = rng.uniform(0.0, 2.0 * spec.s_mean, size=V) + 1e-2
+
+    net = CECNetwork(
+        adj=jnp.asarray(adj),
+        link_cost=Cost(spec.link, jnp.asarray(d_ij)),
+        comp_cost=Cost(spec.comp, jnp.asarray(s_i)),
+        dest=jnp.asarray(dest, dtype=jnp.int32),
+        r=jnp.asarray(r),
+        a=jnp.asarray(a),
+        w=jnp.asarray(w),
+        task_type=jnp.asarray(ttype, dtype=jnp.int32),
+    )
+
+    if spec.link == "queue" or spec.comp == "queue":
+        net = enforce_feasibility(net, margin=feasibility_margin)
+    return net
+
+
+def enforce_feasibility(net: CECNetwork, margin: float = 0.75,
+                        phi0: Phi | None = None) -> CECNetwork:
+    """Scale queue capacities so φ⁰ keeps flows below margin*SAT*capacity."""
+    if phi0 is None:
+        phi0 = spt_phi(net)
+    fl = compute_flows(net, phi0)
+    limit = margin * SAT
+    if net.link_cost.family == "queue":
+        F = np.asarray(fl.F)
+        cap = np.asarray(net.link_cost.params)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            need = np.where(cap > 0, F / (limit * np.maximum(cap, 1e-30)), 0.0)
+        scale = max(1.0, float(np.max(need)))
+        net = dataclasses.replace(
+            net, link_cost=Cost("queue", jnp.asarray(cap * scale)))
+    if net.comp_cost.family == "queue":
+        G = np.asarray(fl.G)
+        cap = np.asarray(net.comp_cost.params)
+        need = G / (limit * np.maximum(cap, 1e-30))
+        scale = max(1.0, float(np.max(need)))
+        net = dataclasses.replace(
+            net, comp_cost=Cost("queue", jnp.asarray(cap * scale)))
+    return net
+
+
+def fail_node(net: CECNetwork, node: int) -> CECNetwork:
+    """Paper Fig. 5b: node failure — links removed, compute disabled,
+    its exogenous inputs stop; tasks destined to it are dropped (rates
+    zeroed) since their results can no longer be delivered."""
+    adj = np.asarray(net.adj).copy()
+    adj[node, :] = False
+    adj[:, node] = False
+    r = np.asarray(net.r).copy()
+    r[:, node] = 0.0
+    dead = np.asarray(net.dest) == node
+    r[dead, :] = 0.0
+    comp = np.asarray(net.comp_cost.params).copy()
+    if net.comp_cost.family == "queue":
+        comp[node] = 1e-3   # effectively no capacity
+    else:
+        comp[node] = 1e6    # prohibitively expensive
+    return dataclasses.replace(
+        net,
+        adj=jnp.asarray(adj),
+        r=jnp.asarray(r),
+        comp_cost=Cost(net.comp_cost.family, jnp.asarray(comp)),
+    )

@@ -1,0 +1,388 @@
+"""Algorithm 1 — Scaled Gradient Projection (paper §IV).
+
+Per iteration, each (node, task) solves the QP (Eq. 15): a
+diagonally-scaled projection of φ_i(d,m) onto the simplex with blocked
+coordinates pinned to zero.  Components:
+
+* **Blocked sets** (loop-freedom): Gallager-style taint protocol.  An
+  edge (i,j) with φ_ij > 0 is *improper* if the downstream marginal does
+  not strictly decrease (ρ_j >= ρ_i).  A node is *tainted* if any
+  support path from it contains an improper edge.  Node i may not ADD
+  flow toward j (φ_ij == 0 is kept at 0) if ρ_j >= ρ_i or j is tainted.
+  Existing positive entries are never force-dropped (their δ is large so
+  the projection drains them) — this is the paper's §IV "blocked nodes"
+  mechanism, which it inherits from Gallager [20] / Xi-Yeh [21].
+
+* **Scaling matrices** (Eq. 16): diagonal Hessian upper bounds built
+  from A_ij(T0) = sup_{T<=T0} D''_ij and path-length bounds h. They give
+  stepsize-free descent (Theorem 2).
+
+* **Zero-traffic rows** jump one-hot to the δ-argmin over permitted
+  coordinates (the M ∝ t scaling degenerates at t=0; the jump is the
+  limit behaviour and matches [21]).
+
+The whole update is one fixed-shape jitted function over all (S, V) rows
+at once; asynchronous updates (Theorem 2) are expressed with row masks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .costs import Cost
+from .marginals import BIG, Marginals, compute_marginals
+from .network import CECNetwork, Flows, Phi, compute_flows, cost_of_flows
+
+SUPPORT_TOL = 1e-9   # φ below this is treated as zero support
+SNAP_TOL = 1e-12     # post-projection snap-to-zero
+TRAFFIC_EPS = 1e-9   # rows with traffic below this take the one-hot jump
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SGPConsts:
+    """Iteration-invariant constants of Algorithm 1 (line 2)."""
+    A_link: jnp.ndarray   # [V, V] sup D''_ij on the T0-sublevel set
+    A_comp: jnp.ndarray   # [V]    sup C''_i  on the T0-sublevel set
+    A_max: jnp.ndarray    # scalar A(T0)
+    min_scale: jnp.ndarray  # scalar floor on diag(M)/t (linear-cost case)
+
+
+def make_consts(net: CECNetwork, T0: jnp.ndarray,
+                min_scale: float = 0.05) -> SGPConsts:
+    A_link = jnp.where(net.adj, net.link_cost.d2_sup(T0), 0.0)
+    A_comp = net.comp_cost.d2_sup(T0)
+    A_max = jnp.maximum(jnp.max(A_link), jnp.max(A_comp))
+    return SGPConsts(A_link, A_comp, A_max, jnp.asarray(min_scale))
+
+
+# ------------------------------------------------------------- blocked sets
+def _taint(sup: jnp.ndarray, rho: jnp.ndarray) -> jnp.ndarray:
+    """[S, V] bool: node has an improper edge on some downstream support path."""
+    improper = sup & (rho[:, None, :] >= rho[:, :, None])  # [S, i, j]
+    has_improper = jnp.any(improper, axis=-1)              # [S, i]
+    V = sup.shape[-1]
+
+    def body(t, _):
+        t = has_improper | jnp.any(sup & t[:, None, :], axis=-1)
+        return t, None
+
+    t, _ = jax.lax.scan(body, has_improper, None, length=V)
+    return t
+
+
+def blocked_sets(net: CECNetwork, phi: Phi, mg: Marginals):
+    """Returns permitted coordinate masks (True = free to carry flow)."""
+    adj = net.adj[None]
+    sup_d = (phi.data[..., :-1] > SUPPORT_TOL) & adj
+    sup_r = (phi.result > SUPPORT_TOL) & adj
+
+    taint_d = _taint(sup_d, mg.rho_data)
+    taint_r = _taint(sup_r, mg.rho_result)
+
+    def permitted(sup, rho, taint):
+        uphill = rho[:, None, :] >= rho[:, :, None]
+        block_new = (~sup) & (uphill | taint[:, None, :])
+        return adj & ~block_new  # support edges always permitted
+
+    perm_d_nbr = permitted(sup_d, mg.rho_data, taint_d)
+    perm_r = permitted(sup_r, mg.rho_result, taint_r)
+
+    # local offload column: always permitted (a sink for data flow)
+    S, V = net.S, net.V
+    perm_d = jnp.concatenate(
+        [perm_d_nbr, jnp.ones((S, V, 1), dtype=bool)], axis=-1)
+    # destinations are result sinks: no outgoing result coordinates
+    is_dest = jnp.arange(V)[None] == net.dest[:, None]
+    perm_r = jnp.where(is_dest[..., None], False, perm_r)
+    return perm_d, perm_r
+
+
+# --------------------------------------------------------------- path bounds
+def _max_path_len(sup: jnp.ndarray) -> jnp.ndarray:
+    """h[s,i] = longest support path length (in hops) starting at i.
+
+    Rows without outgoing support (path terminals: the destination for
+    result flow, pure-local-offload nodes for data flow) have h = 0."""
+    V = sup.shape[-1]
+    h = jnp.zeros(sup.shape[:2], dtype=jnp.float32)
+
+    def body(h, _):
+        nbr = jnp.where(sup, 1.0 + h[:, None, :], 0.0)
+        return jnp.max(nbr, axis=-1), None
+
+    h, _ = jax.lax.scan(body, h, None, length=V)
+    return h
+
+
+# ---------------------------------------------------------------- projection
+def project_rows(phi_row: jnp.ndarray, delta: jnp.ndarray, M: jnp.ndarray,
+                 permitted: jnp.ndarray, n_iter: int = 60) -> jnp.ndarray:
+    """Scaled projection onto the simplex with pinned coordinates (Eq. 14/15).
+
+    Solves  min_v  δ·(v-φ) + (v-φ)ᵀ diag(M) (v-φ)
+            s.t.   Σv = 1, v >= 0, v[~permitted] = 0
+    via bisection on the simplex dual λ:
+            v_j(λ) = max(0, φ_j - (δ_j + λ) / (2 M_j)).
+
+    All inputs are [..., K]; fully vectorized over leading dims.
+    This is the pure-jnp oracle for kernels/simplex_project.
+    """
+    Msafe = jnp.where(permitted, jnp.maximum(M, 1e-12), 1.0)
+    phi0 = jnp.where(permitted, phi_row, 0.0)
+    d = jnp.where(permitted, delta, BIG)
+
+    lam_lo = jnp.min(jnp.where(permitted, -d - 2.0 * Msafe * (1.0 - phi0), BIG),
+                     axis=-1, keepdims=True)
+    lam_hi = jnp.max(jnp.where(permitted, -d + 2.0 * Msafe * phi0, -BIG),
+                     axis=-1, keepdims=True)
+
+    def v_of(lam):
+        v = phi0 - (d + lam) / (2.0 * Msafe)
+        return jnp.where(permitted, jnp.maximum(v, 0.0), 0.0)
+
+    def body(carry, _):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        s = jnp.sum(v_of(mid), axis=-1, keepdims=True)
+        lo = jnp.where(s > 1.0, mid, lo)
+        hi = jnp.where(s > 1.0, hi, mid)
+        return (lo, hi), None
+
+    (lo, hi), _ = jax.lax.scan(body, (lam_lo, lam_hi), None, length=n_iter)
+    v = v_of(0.5 * (lo + hi))
+    v = jnp.where(v > SNAP_TOL, v, 0.0)
+    s = jnp.sum(v, axis=-1, keepdims=True)
+    # guard: if everything snapped to zero, fall back to argmin-δ one-hot
+    onehot = jax.nn.one_hot(jnp.argmin(d, axis=-1), d.shape[-1],
+                            dtype=phi_row.dtype)
+    return jnp.where(s > 0.0, v / jnp.maximum(s, 1e-30), onehot)
+
+
+def gp_rows(phi_row: jnp.ndarray, delta: jnp.ndarray, t: jnp.ndarray,
+            permitted: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """Unscaled GP baseline row update (paper §V, Gallager's rule).
+
+    M = (t/β) diag(1,..,1,0@argmin,1,..,1): non-minimal coordinates move
+    down by β(δ_j - δ_min)/(2t), clipped at 0; the δ-argmin coordinate
+    absorbs the released mass.
+    """
+    d = jnp.where(permitted, delta, BIG)
+    jmin = jnp.argmin(d, axis=-1)
+    onehot = jax.nn.one_hot(jmin, d.shape[-1], dtype=phi_row.dtype)
+    dmin = jnp.min(d, axis=-1, keepdims=True)
+    phi0 = jnp.where(permitted, phi_row, 0.0)
+    step = beta * (d - dmin) / (2.0 * jnp.maximum(t[..., None], TRAFFIC_EPS))
+    v = jnp.maximum(phi0 - step, 0.0) * (1.0 - onehot)
+    v = jnp.where(permitted, v, 0.0)
+    vmin = 1.0 - jnp.sum(v, axis=-1, keepdims=True)
+    v = v + onehot * vmin
+    v = jnp.where(v > SNAP_TOL, v, 0.0)
+    s = jnp.sum(v, axis=-1, keepdims=True)
+    return jnp.where(s > 0.0, v / jnp.maximum(s, 1e-30), onehot)
+
+
+# ------------------------------------------------------------------ the step
+def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
+                   variant: str = "sgp", beta: float = 1.0,
+                   mask_data: Optional[jnp.ndarray] = None,
+                   mask_result: Optional[jnp.ndarray] = None,
+                   allowed_data: Optional[jnp.ndarray] = None,
+                   allowed_result: Optional[jnp.ndarray] = None,
+                   method: str = "dense", use_blocking: bool = True,
+                   scaling: str = "adaptive",
+                   sigma: jnp.ndarray | float = 1.0,
+                   kappa: jnp.ndarray | float = 1.0,
+                   psum_axis: Optional[str] = None):
+    """One synchronized iteration of Algorithm 1 over every (node, task).
+
+    mask_* : [S, V] bool — rows that update this iteration (Theorem 2
+             asynchrony; default: all).
+    allowed_* : extra permission masks for restricted baselines
+             (SPOO/LCOR); ANDed into the blocked-set permission.
+    use_blocking=False skips the taint protocol — only valid when the
+             allowed masks themselves guarantee loop-freedom (SPOO's
+             fixed shortest-path tree).
+    scaling : "paper"  — Eq. 16 verbatim: curvature sup over the
+                          T0-sublevel set.  Guaranteed descent but
+                          extremely conservative when any link has small
+                          capacity (A ∝ (1+T0)³/cap²).
+              "adaptive" — same Eq. 16 structure, with curvature at the
+                          CURRENT flows times safety factor `sigma`; the
+                          driver enforces monotone descent by rejecting
+                          uphill steps and raising sigma (backtracking).
+    """
+    fl = compute_flows(net, phi, method)
+    if psum_axis is not None:
+        # Distributed mode (shard_map over the task axis): per-task
+        # traffic is local; total link flow / workload — the only
+        # cross-task coupling — is one all-reduce, exactly the paper's
+        # link-measurement phase.
+        fl = dataclasses.replace(
+            fl,
+            F=jax.lax.psum(fl.F, psum_axis),
+            G=jax.lax.psum(fl.G, psum_axis))
+    mg = compute_marginals(net, phi, fl, method)
+    if use_blocking:
+        perm_d, perm_r = blocked_sets(net, phi, mg)
+    else:
+        S, V = net.S, net.V
+        perm_d = jnp.concatenate(
+            [jnp.broadcast_to(net.adj[None], (S, V, V)),
+             jnp.ones((S, V, 1), dtype=bool)], axis=-1)
+        perm_r = jnp.broadcast_to(net.adj[None], (S, V, V))
+        is_dest_ = jnp.arange(V)[None] == net.dest[:, None]
+        perm_r = jnp.where(is_dest_[..., None], False, perm_r)
+    if allowed_data is not None:
+        perm_d = perm_d & allowed_data
+    if allowed_result is not None:
+        perm_r = perm_r & allowed_result
+
+    S, V = net.S, net.V
+    adj = net.adj[None]
+    sup_d = (phi.data[..., :-1] > SUPPORT_TOL) & adj
+    sup_r = (phi.result > SUPPORT_TOL) & adj
+
+    if variant == "sgp":
+        # Eq. 16 scaling matrices.
+        h_r = _max_path_len(sup_r)                            # [S, V]
+        h_d = _max_path_len(sup_d)
+        n_r = jnp.sum(perm_r, axis=-1).astype(phi.result.dtype)
+        n_d = jnp.sum(perm_d, axis=-1).astype(phi.data.dtype)
+
+        if scaling == "paper":
+            A_link, A_comp, A_max = consts.A_link, consts.A_comp, consts.A_max
+        else:  # current-flow curvature, safeguarded by the driver
+            A_link = jnp.where(net.adj, net.link_cost.d2(fl.F), 0.0) * sigma
+            A_comp = net.comp_cost.d2(fl.G) * sigma
+            A_max = jnp.maximum(jnp.max(A_link), jnp.max(A_comp))
+
+        kap = jnp.asarray(kappa, dtype=phi.result.dtype)
+        diag_r = A_link[None] + kap * n_r[..., None] * h_r[:, None, :] * A_max
+        Mr = 0.5 * fl.t_result[..., None] * diag_r
+        diag_d_nbr = (A_link[None]
+                      + kap * n_d[..., None] * h_d[:, None, :] * A_max)
+        a2 = (net.a ** 2)[:, None]
+        diag_d_loc = (A_comp[None]
+                      + kap * n_d * a2 * (1.0 + h_r) * A_max)
+        diag_d = jnp.concatenate([diag_d_nbr, diag_d_loc[..., None]], axis=-1)
+        Md = 0.5 * fl.t_data[..., None] * diag_d
+        # floor for flat (linear) costs: behaves like conservative GP
+        Mr = jnp.maximum(Mr, consts.min_scale * fl.t_result[..., None])
+        Md = jnp.maximum(Md, consts.min_scale * fl.t_data[..., None])
+
+        new_d = project_rows(phi.data, mg.delta_data, Md, perm_d)
+        new_r = project_rows(phi.result, mg.delta_result, Mr, perm_r)
+    elif variant == "gp":
+        new_d = gp_rows(phi.data, mg.delta_data, fl.t_data, perm_d, beta)
+        new_r = gp_rows(phi.result, mg.delta_result, fl.t_result, perm_r, beta)
+    else:
+        raise ValueError(variant)
+
+    # zero-traffic rows jump one-hot to the δ-argmin over permitted coords
+    def onehot_min(delta, perm, dtype):
+        d = jnp.where(perm, delta, BIG)
+        return jax.nn.one_hot(jnp.argmin(d, axis=-1), d.shape[-1], dtype=dtype)
+
+    jump_d = onehot_min(mg.delta_data, perm_d, phi.data.dtype)
+    jump_r = onehot_min(mg.delta_result, perm_r, phi.result.dtype)
+    new_d = jnp.where((fl.t_data > TRAFFIC_EPS)[..., None], new_d, jump_d)
+    new_r = jnp.where((fl.t_result > TRAFFIC_EPS)[..., None], new_r, jump_r)
+
+    # destination rows carry no result flow
+    is_dest = jnp.arange(V)[None] == net.dest[:, None]
+    new_r = jnp.where(is_dest[..., None], 0.0, new_r)
+
+    # asynchronous row masks (Theorem 2)
+    if mask_data is not None:
+        new_d = jnp.where(mask_data[..., None], new_d, phi.data)
+    if mask_result is not None:
+        new_r = jnp.where(mask_result[..., None], new_r, phi.result)
+
+    cost = cost_of_flows(net, fl)
+    return Phi(new_d, new_r), {"cost": cost, "flows": fl, "marginals": mg}
+
+
+sgp_step = jax.jit(
+    _sgp_step_impl,
+    static_argnames=("variant", "method", "use_blocking", "scaling",
+                     "psum_axis"))
+
+
+# ------------------------------------------------------------------- driver
+def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
+        variant: str = "sgp", beta: float = 1.0,
+        allowed_data=None, allowed_result=None,
+        min_scale: float = 0.05, method: str = "dense",
+        rng: Optional[jax.Array] = None, async_frac: float = 0.0,
+        tol: float = 0.0, callback=None, use_blocking: bool = True,
+        refresh_every: int = 20, scaling: str = "adaptive",
+        kappa: float = 0.0):
+    """Python-loop driver around the jitted step.
+
+    async_frac > 0 simulates Theorem-2 asynchrony: each iteration only a
+    random fraction of (node, task) rows update.
+
+    scaling="paper": Eq. 16 constants, refreshed from the CURRENT cost
+    every `refresh_every` iterations.  Sound: descent is monotone
+    (Theorem 2), so all future iterates stay in the T^t-sublevel set and
+    A(T^t) <= A(T^0) remains a valid curvature bound.
+
+    scaling="adaptive" (default): Eq. 16 structure with current-flow
+    curvature × safety factor sigma.  Monotone descent is ENFORCED:
+    an uphill step is rejected (φ reverted) and sigma ×= 4; accepted
+    steps decay sigma toward 1.  Converges orders of magnitude faster on
+    instances with small-capacity links, where the paper's sublevel-sup
+    constants are astronomically conservative.
+
+    Returns (phi_final, history dict of per-iteration costs).
+    """
+    from .network import total_cost as _tc
+    if scaling == "paper":
+        kappa = 1.0  # Eq. 16 verbatim
+    T0 = _tc(net, phi0, method)
+    consts = make_consts(net, T0, min_scale)
+    phi = phi0
+    costs = [float(T0)]
+    sigma = 1.0
+    n_rejected = 0
+    for it in range(n_iters):
+        if (scaling == "paper" and refresh_every and it > 0
+                and it % refresh_every == 0):
+            consts = make_consts(net, jnp.asarray(costs[-1]), min_scale)
+        mask_d = mask_r = None
+        if async_frac > 0.0 and rng is not None:
+            rng, k1, k2 = jax.random.split(rng, 3)
+            mask_d = jax.random.bernoulli(k1, 1.0 - async_frac, (net.S, net.V))
+            mask_r = jax.random.bernoulli(k2, 1.0 - async_frac, (net.S, net.V))
+        phi_new, aux = sgp_step(net, phi, consts, variant=variant, beta=beta,
+                                mask_data=mask_d, mask_result=mask_r,
+                                allowed_data=allowed_data,
+                                allowed_result=allowed_result, method=method,
+                                use_blocking=use_blocking, scaling=scaling,
+                                sigma=sigma, kappa=kappa)
+        new_cost = float(_tc(net, phi_new, method))
+        if not np.isfinite(new_cost) or (
+                scaling == "adaptive" and variant == "sgp"
+                and new_cost > costs[-1] * (1.0 + 1e-12)):
+            sigma *= 4.0          # reject: step too aggressive
+            n_rejected += 1
+            if sigma > 1e12:      # numerically stuck: stop
+                break
+        else:
+            phi = phi_new
+            costs.append(new_cost)
+            sigma = max(sigma / 1.5, 1.0)
+        if callback is not None:
+            callback(it, phi, aux)
+        if tol > 0.0 and len(costs) > 4:
+            if abs(costs[-2] - costs[-1]) <= tol * max(costs[-1], 1e-12):
+                break
+    final_cost = costs[-1]
+    return phi, {"costs": costs, "final_cost": final_cost,
+                 "n_rejected": n_rejected}

@@ -1,0 +1,2 @@
+from .pipeline import (DataConfig, StragglerSimulator, SyntheticCorpus,
+                       microbatches, packed_batches)

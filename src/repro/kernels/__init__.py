@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+<name>.py  — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+ops.py     — jit'd public wrappers with backend dispatch
+ref.py     — pure-jnp oracles (the allclose references)
+
+Validated on CPU via interpret=True; see tests/test_kernels.py.
+"""
+from . import ops, ref

@@ -1,0 +1,101 @@
+"""Single-token decode attention against a KV cache (flash-decode).
+
+Grid (B, KV, num_s_blocks): the cache-sequence axis is innermost, with
+online-softmax scratch carried across blocks.  The per-request valid
+length is a scalar-prefetch operand (SMEM) used to mask unwritten cache
+slots.  GQA group dimension rides inside the block (q block is
+[groups, hd] — groups ≤ 16 keeps it register/VMEM-friendly).
+
+Cache layout here is [B, KV, S, hd] (ops.py transposes from the engine's
+[B, S, KV, hd] view once per call — fused by XLA into the producer).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_s: int, num_s_blocks: int):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bs, hd]
+    v = v_ref[0, 0].astype(jnp.float32)            # [bs, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [G,bs]
+
+    length = len_ref[b]
+    pos = si * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    m_scr[...] = m_cur
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(si == num_s_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, lengths: jnp.ndarray,
+                     block_s: int = 512, interpret: bool = False
+                     ) -> jnp.ndarray:
+    """q [B, KV, G, hd]; caches [B, KV, S, hd]; lengths [B] int32
+    -> [B, KV, G, hd]."""
+    B, KV, G, hd = q.shape
+    S = k_cache.shape[2]
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    ns = S // block_s
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_kernel, scale=scale, block_s=block_s,
+                               num_s_blocks=ns)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, si, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd),
+                         lambda b, h, si, lens: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, block_s, hd),
+                         lambda b, h, si, lens: (b, h, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, si, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

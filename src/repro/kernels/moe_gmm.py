@@ -1,0 +1,62 @@
+"""Grouped (per-expert) matmul for MoE FFNs.
+
+Grid (E, C_blocks, F_blocks, D_blocks): one expert's [bc, bd] x [bd, bf]
+tile per step, accumulated in f32 VMEM scratch over the contraction
+(innermost) axis.  Tiles default to 128-aligned MXU shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_scr, *, num_d_blocks: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)   # [bc, bd]
+    w = w_ref[0].astype(jnp.float32)   # [bd, bf]
+    acc_scr[...] += jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())))
+
+    @pl.when(di == num_d_blocks - 1)
+    def _finalize():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f",
+                                             "block_d", "interpret"))
+def moe_gmm(x: jnp.ndarray, w: jnp.ndarray, block_c: int = 128,
+            block_f: int = 128, block_d: int = 256,
+            interpret: bool = False) -> jnp.ndarray:
+    """x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
+    E, C, D = x.shape
+    F = w.shape[-1]
+    block_c = min(block_c, C)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    assert C % block_c == 0 and F % block_f == 0 and D % block_d == 0
+    nc, nf, nd = C // block_c, F // block_f, D // block_d
+
+    kernel = functools.partial(_kernel, num_d_blocks=nd)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, nc, nf, nd),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,83 @@
+"""Public jit'd wrappers with backend dispatch.
+
+Every op picks the Pallas TPU kernel on TPU backends and the pure-jnp
+reference otherwise (CPU CI, the 512-host-device dry-run).  Pass
+`impl="pallas_interpret"` to force the kernel body through the Pallas
+interpreter (the CPU validation mode used by the kernel tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .decode_attention import decode_attention as _decode_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .moe_gmm import moe_gmm as _gmm_pallas
+from .simplex_project import simplex_project as _proj_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _pick(impl: Optional[str]) -> str:
+    if impl is not None:
+        return impl
+    return "pallas" if _backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    impl: Optional[str] = None, **kw):
+    """q [B,H,S,hd]; k,v [B,KV,S,hd] -> [B,H,S,hd]."""
+    mode = _pick(impl)
+    if mode == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash_pallas(q, k, v, causal=causal,
+                         interpret=(mode == "pallas_interpret"), **kw)
+
+
+def decode_attention(q, k_cache, v_cache, lengths,
+                     impl: Optional[str] = None, **kw):
+    """q [B,KV,G,hd]; caches [B,KV,S,hd]; lengths [B]."""
+    mode = _pick(impl)
+    if mode == "ref":
+        B, KV, G, hd = q.shape
+        out = _ref.decode_attention_ref(
+            q.reshape(B, KV * G, hd),
+            jnp.swapaxes(k_cache, 1, 2), jnp.swapaxes(v_cache, 1, 2),
+            lengths)
+        return out.reshape(B, KV, G, hd)
+    return _decode_pallas(q, k_cache, v_cache, lengths,
+                          interpret=(mode == "pallas_interpret"), **kw)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, impl: Optional[str] = None, **kw):
+    """x [B,L,H,P], dt [B,L,H], A [H], Bm/Cm [B,L,N] -> [B,L,H,P]."""
+    mode = _pick(impl)
+    if mode == "ref":
+        y, _ = _ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+        return y
+    return _ssd_pallas(x, dt, A, Bm, Cm,
+                       interpret=(mode == "pallas_interpret"), **kw)
+
+
+def moe_gmm(x, w, impl: Optional[str] = None, **kw):
+    """x [E,C,D] @ w [E,D,F] -> [E,C,F]."""
+    mode = _pick(impl)
+    if mode == "ref":
+        return _ref.moe_gmm_ref(x, w)
+    return _gmm_pallas(x, w, interpret=(mode == "pallas_interpret"), **kw)
+
+
+def simplex_project(phi, delta, M, permitted, impl: Optional[str] = None,
+                    **kw):
+    """Batched Eq. 15 QP rows [R, K]."""
+    mode = _pick(impl)
+    if mode == "ref":
+        return _ref.simplex_project_ref(phi, delta, M, permitted)
+    return _proj_pallas(phi, delta, M, permitted,
+                        interpret=(mode == "pallas_interpret"), **kw)

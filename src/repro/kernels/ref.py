@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True) -> jnp.ndarray:
+    """q [B, H, S, hd]; k, v [B, KV, S, hd] -> [B, H, S, hd]."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    g = H // KV
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths) -> jnp.ndarray:
+    """q [B, H, hd]; caches [B, S, KV, hd]; lengths [B] -> [B, H, hd]."""
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[1]
+    g = H // KV
+    qg = q.reshape(B, KV, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = s * hd ** -0.5
+    valid = jnp.arange(S)[None] < lengths[:, None]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache)
+    return o.reshape(B, H, hd)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence (see models.layers.ssd.ssd_sequential)."""
+    from repro.models.layers.ssd import ssd_sequential
+    return ssd_sequential(x, dt, A, Bm, Cm)
+
+
+def moe_gmm_ref(x, w):
+    """x [E, C, D] @ w [E, D, F] -> [E, C, F] (grouped matmul)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def simplex_project_ref(phi, delta, M, permitted, n_iter: int = 60):
+    """Paper Eq. 15 scaled projection (see core.sgp.project_rows)."""
+    from repro.core.sgp import project_rows
+    return project_rows(phi, delta, M, permitted, n_iter=n_iter)

@@ -1,0 +1,93 @@
+"""The paper's per-(node, task) QP (Eq. 15) as a batched Pallas kernel.
+
+Each row solves  min_v δ·(v-φ) + (v-φ)ᵀ diag(M)(v-φ)  over the simplex
+with blocked coordinates pinned to 0, via bisection on the simplex dual.
+This is the inner-loop hot-spot of Algorithm 1 (one QP per node × task ×
+{data, result} per iteration); the paper §IV suggests a commercial QP
+solver per node — here the whole batch is one kernel launch with rows
+tiled into VMEM, the TPU-native adaptation.
+
+Grid (num_row_blocks,): each step loads a [br, K] row tile and runs the
+fixed 60-iteration bisection entirely in registers/VMEM.  K is padded to
+the 128-lane boundary by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e12
+SNAP_TOL = 1e-12
+
+
+def _kernel(phi_ref, delta_ref, M_ref, perm_ref, out_ref, *, n_iter: int):
+    phi = phi_ref[...].astype(jnp.float32)
+    delta = delta_ref[...].astype(jnp.float32)
+    M = M_ref[...].astype(jnp.float32)
+    perm = perm_ref[...] != 0
+
+    Msafe = jnp.where(perm, jnp.maximum(M, 1e-12), 1.0)
+    phi0 = jnp.where(perm, phi, 0.0)
+    d = jnp.where(perm, delta, BIG)
+
+    lam_lo = jnp.min(jnp.where(perm, -d - 2.0 * Msafe * (1.0 - phi0), BIG),
+                     axis=-1, keepdims=True)
+    lam_hi = jnp.max(jnp.where(perm, -d + 2.0 * Msafe * phi0, -BIG),
+                     axis=-1, keepdims=True)
+
+    def v_of(lam):
+        v = phi0 - (d + lam) / (2.0 * Msafe)
+        return jnp.where(perm, jnp.maximum(v, 0.0), 0.0)
+
+    def body(i, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        s = jnp.sum(v_of(mid), axis=-1, keepdims=True)
+        lo = jnp.where(s > 1.0, mid, lo)
+        hi = jnp.where(s > 1.0, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, n_iter, body, (lam_lo, lam_hi))
+    v = v_of(0.5 * (lo + hi))
+    v = jnp.where(v > SNAP_TOL, v, 0.0)
+    s = jnp.sum(v, axis=-1, keepdims=True)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
+              == jnp.argmin(d, axis=-1, keepdims=True)).astype(jnp.float32)
+    v = jnp.where(s > 0.0, v / jnp.maximum(s, 1e-30), onehot)
+    out_ref[...] = v.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iter", "block_rows",
+                                             "interpret"))
+def simplex_project(phi: jnp.ndarray, delta: jnp.ndarray, M: jnp.ndarray,
+                    permitted: jnp.ndarray, n_iter: int = 60,
+                    block_rows: int = 256, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """All inputs [R, K] (permitted is bool); returns projected rows."""
+    R, K = phi.shape
+    block_rows = min(block_rows, R)
+    # pad rows to a multiple of the block (padded rows are fully blocked
+    # -> their argmin-fallback output is discarded by the caller)
+    Rp = ((R + block_rows - 1) // block_rows) * block_rows
+    if Rp != R:
+        pad = ((0, Rp - R), (0, 0))
+        phi = jnp.pad(phi, pad)
+        delta = jnp.pad(delta, pad)
+        M = jnp.pad(M, pad, constant_values=1.0)
+        permitted = jnp.pad(permitted, pad)
+    nb = Rp // block_rows
+
+    kernel = functools.partial(_kernel, n_iter=n_iter)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_rows, K), lambda i: (i, 0))] * 3
+        + [pl.BlockSpec((block_rows, K), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, K), phi.dtype),
+        interpret=interpret,
+    )(phi, delta, M, permitted.astype(jnp.int32))
+    return out[:R]

@@ -1,0 +1,116 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid (B, head_blocks, num_chunks) with the CHUNK axis innermost: the
+inter-chunk SSM state lives in VMEM scratch and is carried across the
+sequential chunk iterations (initialized at chunk 0).  Within a chunk
+the computation is dense MXU work:
+
+  intra:  (C Bᵀ ⊙ causal-decay ⊙ dt) @ x
+  state:  Sₕ ← exp(Σ dA)·Sₕ + (decay-to-end ⊙ dt ⊙ B)ᵀ x
+  inter:  C Sₕ_prev ⊙ exp(cumsum dA)
+
+VMEM budget per step (Q=128, bh=8, N=128, P=64):
+  x/y 2×Q·bh·P·4 = 512 KB, decay [Q,Q,bh] 512 KB, state bh·N·P·4 = 256 KB
+  -> ~1.5 MB, comfortably inside 16 MB with double buffering.
+The B/C projections are shared across heads (single Mamba2 group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, state_scr, *,
+            chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)       # [Q, bh, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)     # [Q, bh]
+    A = A_ref[...].astype(jnp.float32)        # [bh]
+    Bm = B_ref[0, 0].astype(jnp.float32)      # [Q, N]
+    Cm = C_ref[0, 0].astype(jnp.float32)      # [Q, N]
+
+    dA = dt * A[None, :]                      # [Q, bh] (<= 0)
+    cum = jnp.cumsum(dA, axis=0)              # [Q, bh]
+    total = cum[-1]                           # [bh]
+
+    # ---- intra-chunk (causal quadratic) -------------------------------
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # [Q,Q]
+    diff = cum[:, None, :] - cum[None, :, :]                        # [Q,Q,bh]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    diff = jnp.where(causal[..., None], diff, -1e30)  # mask pre-exp
+    Ldec = jnp.exp(diff)
+    w = scores[..., None] * Ldec * dt[None, :, :]                   # [Q,Q,bh]
+    wt = jnp.transpose(w, (2, 0, 1))                                # [bh,Q,Q]
+    xt = jnp.transpose(x, (1, 0, 2))                                # [bh,Q,P]
+    y_intra = jax.lax.dot_general(
+        wt, xt, (((2,), (1,)), ((0,), (0,))))                       # [bh,Q,P]
+
+    # ---- inter-chunk (state read) -------------------------------------
+    state = state_scr[...]                                          # [bh,N,P]
+    bh = state.shape[0]
+    Cb = jnp.broadcast_to(Cm[None], (bh,) + Cm.shape)               # [bh,Q,N]
+    y_inter = jax.lax.dot_general(
+        Cb, state, (((2,), (1,)), ((0,), (0,))))                    # [bh,Q,P]
+    y_inter = y_inter * jnp.exp(cum).T[:, :, None]
+
+    y = jnp.transpose(y_intra + y_inter, (1, 0, 2))                 # [Q,bh,P]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # ---- state update --------------------------------------------------
+    z = x * (jnp.exp(total[None] - cum) * dt)[:, :, None]           # [Q,bh,P]
+    zb = jnp.transpose(z, (1, 0, 2))                                # [bh,Q,P]
+    Bb = jnp.broadcast_to(Bm[None], (bh,) + Bm.shape)               # [bh,Q,N]
+    S_loc = jax.lax.dot_general(
+        Bb, zb, (((1,), (1,)), ((0,), (0,))))                       # [bh,N,P]
+    state_scr[...] = state * jnp.exp(total)[:, None, None] + S_loc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_h", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int = 128,
+             block_h: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """x [B,L,H,P], dt [B,L,H], A [H], Bm/Cm [B,L,N] -> y [B,L,H,P]."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, L)
+    block_h = min(block_h, H)
+    assert L % chunk == 0 and H % block_h == 0, (L, chunk, H, block_h)
+    nc = L // chunk
+    nh = H // block_h
+
+    xr = x.reshape(B, nc, chunk, H, P)
+    dtr = dt.reshape(B, nc, chunk, H)
+    Br = Bm.reshape(B, nc, chunk, N)
+    Cr = Cm.reshape(B, nc, chunk, N)
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, block_h, P),
+                         lambda b, hi, ci: (b, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, chunk, block_h),
+                         lambda b, hi, ci: (b, ci, 0, hi)),
+            pl.BlockSpec((block_h,), lambda b, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, hi, ci: (b, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, hi, ci: (b, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, block_h, P),
+                               lambda b, hi, ci: (b, ci, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, chunk, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_h, N, P), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, A, Br, Cr)
+    return out.reshape(B, L, H, P)

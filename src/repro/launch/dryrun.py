@@ -1,0 +1,401 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the
+# device count at backend init, and the production dry-run needs 512
+# placeholder host devices to build the (2, 16, 16) multi-pod mesh.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh WITHOUT allocating — inputs are ShapeDtypeStructs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out report.json
+
+Per cell this prints/collects:
+  * compiled.memory_analysis()  (per-device bytes: args/temp/output)
+  * compiled.cost_analysis()    (per-device HLO FLOPs and bytes)
+  * per-device collective-traffic bytes parsed from the post-SPMD HLO
+    (all-reduce / all-gather / reduce-scatter / all-to-all /
+    collective-permute), the input to the §Roofline collective term.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import build_model, module
+from repro.optim import OptConfig
+from repro.train import TrainConfig, build_serve_step, build_train_step
+from repro.launch import mesh as meshlib
+
+HBM_PER_CHIP = 16 * 1024 ** 3  # v5e
+
+# gradient-accumulation microbatches per train step (memory/perf knob;
+# §Perf iterates these).  1M tokens/step doesn't fit activations for the
+# largest archs without accumulation — exactly as in production.
+MICROBATCH = {
+    "yi-34b": 4,
+    "jamba-v0.1-52b": 8,
+    "qwen3-moe-30b-a3b": 2,
+    "granite-3-8b": 2,
+    "phi4-mini-3.8b": 2,
+    "qwen2-vl-7b": 2,
+}
+
+
+# ------------------------------------------------------------------ state
+def abstract_params(model):
+    return module.abstract(model.param_specs())
+
+
+def abstract_train_state(model):
+    params = abstract_params(model)
+    f32like = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
+    mstate = module.abstract(model.state_specs())
+    return {"params": params,
+            "opt": {"mu": f32like, "nu": f32like,
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            "model_state": mstate}
+
+
+def train_state_pspecs(model, rules):
+    pspecs = module.partition_specs(model.param_specs(), rules)
+    mspecs = module.partition_specs(model.state_specs(), rules)
+    return {"params": pspecs,
+            "opt": {"mu": pspecs, "nu": pspecs, "count": P()},
+            "model_state": mspecs}
+
+
+def abstract_batch(cfg, shape: configs.ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["enc_feats"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_enc_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["vis_embed"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+# -------------------------------------------------------------- HLO parse
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\b")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+# effective bytes-on-wire multiplier per collective kind (ring algorithms)
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shapes_bytes(region: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(region):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved per collective kind (post-SPMD module).
+
+    Sums the OUTPUT shape bytes (tuple outputs included) of each
+    collective op, times a ring wire factor (all-reduce moves ~2x)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        m = _COLL_RE.search(rhs)
+        if not m:
+            continue
+        region = rhs[:m.start()]
+        if "%" in region:   # match was inside the operand list, not the op
+            continue
+        kind = m.group(1)
+        nbytes = _shapes_bytes(region)
+        out[kind] = out.get(kind, 0.0) + nbytes * _WIRE_FACTOR[kind]
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ------------------------------------------------------------------ cells
+def build_cell(arch: str, shape_name: str, mesh,
+               cfg_overrides: Optional[dict] = None,
+               n_microbatch: Optional[int] = None):
+    """Returns (jitted step, abstract args, meta)."""
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    base_rules = meshlib.rules_for(cfg, mesh, shape.global_batch)
+    overrides = {"seq_shard_axis": "model",   # production defaults: SP
+                 "moe_groups": meshlib.moe_groups_for(
+                     cfg, mesh, shape.global_batch),
+                 "shard_rules": tuple(sorted(
+                     (k, v) for k, v in base_rules.items()))}
+    overrides.update(cfg_overrides or {})
+    cfg = cfg.replace(**overrides)
+    if cfg_overrides and "shard_rules" in cfg_overrides:
+        # keep the jit in/out shardings consistent with overridden rules
+        base_rules = dict(cfg_overrides["shard_rules"])
+    model = build_model(cfg)
+    rules = meshlib.rules_for(cfg, mesh, shape.global_batch)
+    meta = {"arch": arch, "shape": shape_name, "rules": {
+        k: (list(v) if isinstance(v, tuple) else v) for k, v in rules.items()}}
+
+    if shape.kind == "train":
+        tc = TrainConfig(opt=OptConfig(),
+                         n_microbatch=(n_microbatch if n_microbatch
+                                       else MICROBATCH.get(arch, 1)))
+        fn = build_train_step(model, tc)
+        state = abstract_train_state(model)
+        st_specs = train_state_pspecs(model, base_rules)
+        batch = abstract_batch(cfg, shape)
+        bspec = meshlib.batch_specs(mesh, shape.global_batch)
+        dp = bspec[0] if len(bspec) else None
+        b_specs = {}
+        for k, v in batch.items():
+            b_specs[k] = P(dp, *([None] * (v.ndim - 1)))
+        in_shardings = (jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                     st_specs,
+                                     is_leaf=lambda x: isinstance(x, P)),
+                        {k: NamedSharding(mesh, s)
+                         for k, s in b_specs.items()})
+        out_shardings = (in_shardings[0], None)
+        step = jax.jit(lambda st, b: fn(st, b),
+                       in_shardings=in_shardings,
+                       out_shardings=out_shardings,
+                       donate_argnums=(0,))
+        return step, (state, batch), meta
+
+    # ---- decode / prefill -------------------------------------------
+    B, S = shape.global_batch, shape.seq_len
+    rules = base_rules
+    p_abs = abstract_params(model)
+    p_specs = module.partition_specs(model.param_specs(), rules)
+    m_abs = module.abstract(model.state_specs())
+    m_specs = module.partition_specs(model.state_specs(), rules)
+    cache_specs_tree = model.init_cache_specs(B, S)
+    cache_abs = module.abstract(cache_specs_tree)
+    cache_specs = module.partition_specs(cache_specs_tree, rules)
+    bspec = meshlib.batch_specs(mesh, B)
+    dp = bspec[0] if len(bspec) else None
+
+    def ns(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "decode":
+        fn = build_serve_step(model)
+        toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+        in_sh = (ns(p_specs), ns(m_specs), ns(cache_specs),
+                 NamedSharding(mesh, P(dp, None)),
+                 NamedSharding(mesh, P(dp)))
+        out_sh = (NamedSharding(mesh, P(dp)), ns(m_specs), ns(cache_specs))
+        step = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=(2,))
+        return step, (p_abs, m_abs, cache_abs, toks, pos), meta
+
+    # prefill: full-prompt forward that seeds the caches
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        feats = jax.ShapeDtypeStruct((B, cfg.n_enc_frames, cfg.d_model),
+                                     jnp.bfloat16)
+
+        def fn(p, ms, c, t, f):
+            return model.prefill(p, ms, c, t, enc_feats=f)
+
+        in_sh = (ns(p_specs), ns(m_specs), ns(cache_specs),
+                 NamedSharding(mesh, P(dp, None)),
+                 NamedSharding(mesh, P(dp, None, None)))
+        args = (p_abs, m_abs, cache_abs, toks, feats)
+    else:
+        def fn(p, ms, c, t):
+            return model.prefill(p, ms, c, t)
+
+        in_sh = (ns(p_specs), ns(m_specs), ns(cache_specs),
+                 NamedSharding(mesh, P(dp, None)))
+        args = (p_abs, m_abs, cache_abs, toks)
+    out_sh = (NamedSharding(mesh, P(dp)), ns(m_specs), ns(cache_specs))
+    step = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(2,))
+    return step, args, meta
+
+
+# Accounting lowerings: XLA's HloCostAnalysis counts while-loop bodies
+# ONCE, so the production (scanned) lowering undercounts FLOPs / bytes /
+# collective traffic.  Every per-cell metric is exactly affine in the
+# layer count, cost(L) = outer + per_layer * L (grad stacks, FSDP
+# gathers and optimizer work all scale with L; embed/logits/loss do
+# not), so we compile two SMALL loop-free variants at L = period and
+# L = 2*period — unrolled python layer loop, microbatch=1, NAIVE
+# attention (identical FLOPs; bytes upper-bound the blocked/flash
+# schedule, noted in EXPERIMENTS.md) — solve for (outer, per_layer),
+# and extrapolate to the real depth.  Memory/fits still come from the
+# production lowering.
+def _acct_cfg(cfg, n_layers: int):
+    # blocked attention with LARGE unrolled tiles: naive attention would
+    # materialize (and make XLA communicate) the S^2 logits, poisoning
+    # both the bytes and the collective totals; small tiles would blow
+    # up compile time.  2048x4096 tiles keep FLOPs exact and bytes an
+    # honest blocked-schedule estimate.
+    over = {"scan_layers": False, "attn_unroll": True,
+            "attn_block_q": 2048, "attn_block_k": 4096,
+            "n_layers": n_layers, "remat": cfg.remat}
+    if cfg.family == "encdec":
+        over["n_enc_layers"] = n_layers
+    return over
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             mesh=None, verbose: bool = True,
+             accounting: bool = True,
+             cfg_overrides: Optional[dict] = None) -> Dict[str, Any]:
+    skip = configs.shape_applicable(arch, shape_name)
+    if skip is not None:
+        return {"arch": arch, "shape": shape_name, "skipped": skip}
+    if mesh is None:
+        mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    step, args, meta = build_cell(arch, shape_name, mesh,
+                                  cfg_overrides=cfg_overrides)
+    with mesh:
+        lowered = step.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+
+    res = dict(meta)
+    res.update({
+        "mesh": list(mesh.shape.values()),
+        "multi_pod": multi_pod,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "arg_bytes": int(ma.argument_size_in_bytes),
+        "out_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_est_bytes": int(ma.argument_size_in_bytes
+                              + ma.output_size_in_bytes
+                              + ma.temp_size_in_bytes
+                              - ma.alias_size_in_bytes),
+        "fits_hbm": bool(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                         + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+                         < HBM_PER_CHIP),
+    })
+    del compiled, lowered, step
+
+    if accounting:
+        cfg0 = configs.get_config(arch)
+        period = cfg0.scan_period()
+        t0 = time.time()
+
+        def measure(n_layers):
+            over = _acct_cfg(cfg0, n_layers)
+            over.update(cfg_overrides or {})
+            over.update(_acct_cfg(cfg0, n_layers))  # acct keys win
+            step_a, args_a, _ = build_cell(arch, shape_name, mesh,
+                                           cfg_overrides=over,
+                                           n_microbatch=1)
+            with mesh:
+                compiled_a = step_a.lower(*args_a).compile()
+            ca = compiled_a.cost_analysis() or {}
+            coll = collective_bytes(compiled_a.as_text())
+            return (float(ca.get("flops", 0.0)),
+                    float(ca.get("bytes accessed", 0.0)), coll)
+
+        f1, b1, c1 = measure(period)
+        f2, b2, c2 = measure(2 * period)
+        L = cfg0.n_layers
+
+        def extrap(v1, v2):
+            per_layer = (v2 - v1) / period
+            outer = v1 - per_layer * period
+            return max(outer + per_layer * L, 0.0)
+
+        coll = {k: extrap(c1.get(k, 0.0), c2.get(k, 0.0))
+                for k in set(c1) | set(c2)}
+        res.update({
+            "acct_s": round(time.time() - t0, 2),
+            "flops_per_device": extrap(f1, f2),
+            "bytes_per_device": extrap(b1, b2),
+            "collective_bytes_per_device": coll,
+        })
+    else:
+        res.update({"flops_per_device": -1.0, "bytes_per_device": -1.0,
+                    "collective_bytes_per_device": {"total": -1.0}})
+
+    if verbose:
+        coll = res["collective_bytes_per_device"]
+        print(f"[{arch} x {shape_name} | mesh={res['mesh']}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"acct {res.get('acct_s', 0):.1f}s | "
+              f"flops/dev {res['flops_per_device']:.3e} "
+              f"bytes/dev {res['bytes_per_device']:.3e} "
+              f"coll/dev {coll.get('total', 0):.3e} | "
+              f"peak {res['peak_est_bytes'] / 2**30:.2f} GiB "
+              f"fits={res['fits_hbm']}", flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(configs.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    results = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = (configs.cells() if args.all
+             else [(args.arch, args.shape,
+                    configs.shape_applicable(args.arch, args.shape))])
+    for arch, shape, skip in cells:
+        for mp in meshes:
+            if skip is not None:
+                print(f"[{arch} x {shape}] SKIP: {skip}", flush=True)
+                results.append({"arch": arch, "shape": shape,
+                                "multi_pod": mp, "skipped": skip})
+                continue
+            try:
+                results.append(run_cell(arch, shape, multi_pod=mp))
+            except Exception as e:  # noqa: BLE001 — report and continue
+                print(f"[{arch} x {shape} mp={mp}] FAILED: {e}", flush=True)
+                results.append({"arch": arch, "shape": shape,
+                                "multi_pod": mp, "error": str(e)[:500]})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"\n{len(results)} cells, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

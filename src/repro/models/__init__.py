@@ -1,0 +1,12 @@
+"""Model zoo: pure-JAX definitions of the 10 assigned architectures."""
+from .config import ModelConfig, reduced
+from .lm import LM
+from .encdec import EncDecLM
+from . import module
+
+
+def build_model(cfg: ModelConfig):
+    """cfg -> model object (LM or EncDecLM; uniform surface)."""
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return LM(cfg)

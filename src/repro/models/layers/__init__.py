@@ -1,0 +1,1 @@
+from . import attention, mamba, mlp, moe, norms, rope, ssd

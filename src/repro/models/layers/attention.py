@@ -1,0 +1,242 @@
+"""Grouped-query attention: prefill (full-sequence causal) and decode
+(single token against a KV cache).
+
+The jnp path here is the portable reference used on CPU and in the
+dry-run lowering; on TPU the `repro.kernels.ops` dispatcher swaps in the
+Pallas flash kernels (same signatures, validated against these paths).
+
+Supports: GQA (n_kv < n_heads), optional qk-norm (Qwen3), RoPE / M-RoPE
+applied by the caller, packed-sequence segment masking.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..module import ParamSpec
+from .norms import rmsnorm, rmsnorm_spec
+
+NEG_INF = -1e30
+
+
+def attention_specs(cfg) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    specs = {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": ParamSpec((d, KV, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": ParamSpec((d, KV, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed"), dt),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = rmsnorm_spec(hd, "head_dim")
+        specs["k_norm"] = rmsnorm_spec(hd, "head_dim")
+    return specs
+
+
+def qkv(params, x, cfg, cos, sin, rope_fn):
+    """x [B, L, D] -> q [B, L, H, hd], k/v [B, L, KV, hd] (RoPE applied)."""
+    cd = cfg.compute_dtype
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"].astype(cd))
+    k = jnp.einsum("bld,dhk->blhk", x, params["wk"].astype(cd))
+    v = jnp.einsum("bld,dhk->blhk", x, params["wv"].astype(cd))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = rope_fn(q, cos, sin)
+    k = rope_fn(k, cos, sin)
+    return q, k, v
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def naive_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    segment_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """O(L²)-memory reference (tests / tiny shapes only)."""
+    B, L, H, hd = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = hd ** -0.5
+    logits = jnp.einsum("blhk,bmhk->bhlm", q, k).astype(jnp.float32) * scale
+    mask = None
+    if causal:
+        mask = jnp.tril(jnp.ones((L, L), dtype=bool))[None, None]
+    if segment_ids is not None:
+        seg = (segment_ids[:, :, None] == segment_ids[:, None, :])[:, None]
+        mask = seg if mask is None else (mask & seg)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhlm,bmhk->blhk", probs, v)
+
+
+def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   causal: bool = True,
+                   segment_ids: Optional[jnp.ndarray] = None,
+                   block_q: int = 512, block_k: int = 1024,
+                   unroll: bool = False) -> jnp.ndarray:
+    """Blocked flash-style attention in pure jnp (online softmax).
+
+    Never materializes more than [B, H, block_q, block_k] of logits —
+    required for the 32k prefill shapes (a naive [B,H,S,S] would need
+    ~8 GB/device).  XLA maps the double `lax.scan` onto the same fused
+    streaming loop the Pallas kernel expresses explicitly on TPU.
+    q [B,L,H,hd], k/v [B,KV_heads,<=L? no: [B,L,KV,hd]] -> [B,L,H,hd].
+    """
+    B, L, H, hd = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    if k.shape[1] != L:
+        # cross-attention (q and kv lengths differ): block over q only
+        return _cross_attention_qblocked(q, k, v, block_q, unroll)
+    if L <= block_q:  # small-sequence fast path
+        return naive_attention(q, k, v, causal, segment_ids)
+    bq = min(block_q, L)
+    bk = min(block_k, L)
+    if L % bq or L % bk:
+        return naive_attention(q, k, v, causal, segment_ids)
+    nq, nk = L // bq, L // bk
+    scale = hd ** -0.5
+
+    # [B,L,KV,hd] -> [nk, B, KV, bk, hd]
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, KV, hd), 1, 0).transpose(
+        0, 1, 3, 2, 4)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, KV, hd), 1, 0).transpose(
+        0, 1, 3, 2, 4)
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, H, hd), 1, 0).transpose(
+        0, 1, 3, 2, 4)                                   # [nq,B,H,bq,hd]
+    segb = (jnp.moveaxis(segment_ids.reshape(B, nk, bk), 1, 0)
+            if segment_ids is not None else None)
+
+    @jax.checkpoint  # recompute per-q-block in backward: without this the
+    # kv-scan saves its per-block probabilities — the full [B,H,L,L]
+    # attention matrix — as residuals, defeating the blocking entirely.
+    def q_block(_, qi_and_q):
+        qi, qblk = qi_and_q                              # qblk [B,H,bq,hd]
+        seg_q = (jnp.moveaxis(segment_ids.reshape(B, nq, bq), 1, 0)[qi]
+                 if segment_ids is not None else None)
+
+        def kv_block(carry, ki_and_kv):
+            m, l, acc = carry
+            if segb is not None:
+                ki, kblk, vblk, seg_k = ki_and_kv
+            else:
+                ki, kblk, vblk = ki_and_kv
+            kr = _repeat_kv(jnp.moveaxis(kblk, 1, 2), groups)  # [B,bk,H,hd]
+            vr = _repeat_kv(jnp.moveaxis(vblk, 1, 2), groups)
+            s = jnp.einsum("bhqd,bkhd->bhqk", qblk, kr).astype(
+                jnp.float32) * scale
+            if causal:
+                qpos = qi * bq + jnp.arange(bq)
+                kpos = ki * bk + jnp.arange(bk)
+                s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+            if segb is not None:
+                s = jnp.where((seg_q[:, :, None] == seg_k[:, None, :]
+                               )[:, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(q.dtype), vr).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        a0 = jnp.zeros((B, H, bq, hd), jnp.float32)
+        xs = ((jnp.arange(nk), kb, vb, segb) if segb is not None
+              else (jnp.arange(nk), kb, vb))
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), xs,
+                                      unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)                 # [B,H,bq,hd]
+
+    _, ob = jax.lax.scan(q_block, None, (jnp.arange(nq), qb),
+                         unroll=unroll)
+    # [nq,B,H,bq,hd] -> [B,L,H,hd]
+    return jnp.moveaxis(ob, 0, 1).transpose(0, 1, 3, 2, 4).reshape(
+        B, L, H, hd)
+
+
+def _cross_attention_qblocked(q, k, v, block_q: int, unroll: bool):
+    """Cross-attention with q-length != kv-length: scan over q blocks
+    against the full (short) kv — bounds memory at [B,H,bq,F]."""
+    B, L, H, hd = q.shape
+    F = k.shape[1]
+    KV = k.shape[2]
+    groups = H // KV
+    if L <= block_q or L % block_q:
+        return naive_attention(q, k, v, causal=False)
+    nq = L // block_q
+    kr = _repeat_kv(k, groups)
+    vr = _repeat_kv(v, groups)
+    scale = hd ** -0.5
+    qb = jnp.moveaxis(q.reshape(B, nq, block_q, H, hd), 1, 0)
+
+    def q_block(_, qblk):
+        s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kr).astype(
+            jnp.float32) * scale
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return None, jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+
+    _, ob = jax.lax.scan(q_block, None, qb, unroll=unroll)
+    return jnp.moveaxis(ob, 0, 1).reshape(B, L, H, hd)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, lengths: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """One-token decode. q [B,1,H,hd]; caches [B,S,KV,hd]; lengths [B].
+
+    Positions >= lengths[b] are masked (cache slots not yet written).
+    """
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    groups = H // KV
+    qg = q.reshape(B, 1, KV, groups, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bokgh,bskh->bkgs", qg, k_cache)
+    logits = logits.astype(jnp.float32) * scale
+    valid = jnp.arange(S)[None] < lengths[:, None]           # [B, S]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def out_proj(params, attn_out, cfg):
+    return jnp.einsum("blhk,hkd->bld", attn_out,
+                      params["wo"].astype(cfg.compute_dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    """Helper for building per-layer cache specs [B, S_max, KV, hd]."""
+    batch: int
+    max_len: int
+    n_kv_heads: int
+    head_dim: int
+    dtype: object = jnp.bfloat16
+
+    @property
+    def shape(self):
+        return (self.batch, self.max_len, self.n_kv_heads, self.head_dim)
+
+
+def cache_update(k_cache, v_cache, k_new, v_new, pos):
+    """Insert new K/V at position `pos` [B] (decode step)."""
+    B = k_cache.shape[0]
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, pos].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, pos].set(v_new[:, 0].astype(v_cache.dtype))
+    return k_cache, v_cache

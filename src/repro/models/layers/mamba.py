@@ -1,0 +1,177 @@
+"""Mamba2 block: split projections -> causal depthwise conv -> SSD ->
+gated norm -> out-proj, single B/C group (Mamba2 defaults).
+
+TP note: the fused zxbcdt projection of the reference implementation is
+split into separate z/x/B/C/dt projections so the two dominant matmuls
+([D, d_inner]) shard cleanly on the `mlp` logical axis; B/C/dt are small
+and replicated.  Same math (depthwise conv distributes over the split).
+
+Decode caches per layer: SSM state [B, H, N, P] (f32) + conv tails for
+the x/B/C streams.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..module import ParamSpec
+from .norms import rmsnorm, rmsnorm_spec
+from .ssd import ssd_chunked, ssd_decode_step
+
+CONV_K = 4
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def mamba_specs(cfg) -> dict:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    N = cfg.ssm_state
+    H = n_ssm_heads(cfg)
+    dt = cfg.param_dtype
+    return {
+        "in_z": ParamSpec((d, di), ("embed", "mlp"), dt),
+        "in_x": ParamSpec((d, di), ("embed", "mlp"), dt),
+        "in_B": ParamSpec((d, N), ("embed", None), dt),
+        "in_C": ParamSpec((d, N), ("embed", None), dt),
+        "in_dt": ParamSpec((d, H), ("embed", "heads"), dt),
+        "conv_x": ParamSpec((CONV_K, di), (None, "mlp"), dt,
+                            init="normal", scale=0.1),
+        "conv_B": ParamSpec((CONV_K, N), (None, None), dt,
+                            init="normal", scale=0.1),
+        "conv_C": ParamSpec((CONV_K, N), (None, None), dt,
+                            init="normal", scale=0.1),
+        "conv_bx": ParamSpec((di,), ("mlp",), dt, init="zeros"),
+        "conv_bB": ParamSpec((N,), (None,), dt, init="zeros"),
+        "conv_bC": ParamSpec((N,), (None,), dt, init="zeros"),
+        "A_log": ParamSpec((H,), ("heads",), jnp.float32, init="zeros"),
+        "D": ParamSpec((H,), ("heads",), jnp.float32, init="ones"),
+        "dt_bias": ParamSpec((H,), ("heads",), jnp.float32, init="zeros"),
+        "norm": rmsnorm_spec(di, "mlp"),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed"), dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, kernel CONV_K.  x [B, L, C]."""
+    pad = jnp.pad(x, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + x.shape[1]] * w[k][None, None]
+              for k in range(CONV_K))
+    return out + b[None, None]
+
+
+def _project(params, x, cfg):
+    cd = cfg.compute_dtype
+    z = jnp.einsum("bld,de->ble", x, params["in_z"].astype(cd))
+    xr = jnp.einsum("bld,de->ble", x, params["in_x"].astype(cd))
+    Br = jnp.einsum("bld,dn->bln", x, params["in_B"].astype(cd))
+    Cr = jnp.einsum("bld,dn->bln", x, params["in_C"].astype(cd))
+    dtv = jnp.einsum("bld,dh->blh", x, params["in_dt"].astype(cd))
+    return z, xr, Br, Cr, dtv
+
+
+def mamba(params, x, cfg, init_state: Optional[jnp.ndarray] = None,
+          return_cache: bool = False):
+    """x [B, L, D] -> (y [B, L, D], state_or_cache)."""
+    B, L, D = x.shape
+    cd = cfg.compute_dtype
+    H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    di = d_inner(cfg)
+
+    z, xr, Br, Cr, dtv = _project(params, x, cfg)
+    xc = jax.nn.silu(_causal_conv(xr, params["conv_x"].astype(cd),
+                                  params["conv_bx"].astype(cd)))
+    Bc = jax.nn.silu(_causal_conv(Br, params["conv_B"].astype(cd),
+                                  params["conv_bB"].astype(cd)))
+    Cc = jax.nn.silu(_causal_conv(Cr, params["conv_C"].astype(cd),
+                                  params["conv_bC"].astype(cd)))
+    xs = xc.reshape(B, L, H, P)
+
+    # pin head sharding through the SSD: the [B,nc,Q,Q,H] decay tensors
+    # replicate across the model axis if propagation drops it (several
+    # GB/device at Jamba scale)
+    rules = dict(cfg.shard_rules) if cfg.shard_rules else {}
+    h_rule, b_rule = rules.get("heads"), rules.get("batch")
+    if (h_rule or b_rule) is not None:
+        U = jax.sharding.PartitionSpec.UNCONSTRAINED
+        xs = jax.lax.with_sharding_constraint(
+            xs, jax.sharding.PartitionSpec(b_rule, U, h_rule, U))
+        dtv = jax.lax.with_sharding_constraint(
+            dtv, jax.sharding.PartitionSpec(b_rule, U, h_rule))
+
+    dt = jax.nn.softplus(dtv.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    A = -jnp.exp(params["A_log"])
+    y, state = ssd_chunked(xs, dt, A, Bc, Cc,
+                           chunk=min(cfg.ssm_chunk, L),
+                           init_state=init_state)
+    y = y + params["D"][None, None, :, None].astype(cd) * xs
+    y = y.reshape(B, L, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(cd))
+    if return_cache:
+        def tail(t, width):
+            tl = t[:, -(CONV_K - 1):]
+            pad = jnp.zeros((B, max(0, CONV_K - 1 - L), width), t.dtype)
+            return jnp.concatenate([pad, tl], axis=1).astype(cfg.cache_dtype)
+        cache = {"ssm": state, "conv_x": tail(xr, di),
+                 "conv_B": tail(Br, N), "conv_C": tail(Cr, N)}
+        return out, cache
+    return out, state
+
+
+def mamba_cache_shapes(cfg, batch: int):
+    H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    return {"ssm": (batch, H, N, P),
+            "conv_x": (batch, CONV_K - 1, d_inner(cfg)),
+            "conv_B": (batch, CONV_K - 1, N),
+            "conv_C": (batch, CONV_K - 1, N)}
+
+
+def _conv_step(window, new, w, b):
+    """window [B, K-1, C] + new [B, 1, C] -> (out [B,1,C], new window)."""
+    full = jnp.concatenate([window.astype(new.dtype), new], axis=1)
+    out = sum(full[:, k:k + 1] * w[k][None, None]
+              for k in range(CONV_K)) + b[None, None]
+    return out, full[:, 1:]
+
+
+def mamba_decode(params, cache, x, cfg):
+    """One-token decode.  x [B, 1, D]."""
+    B = x.shape[0]
+    cd = cfg.compute_dtype
+    H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    di = d_inner(cfg)
+
+    z, xr, Br, Cr, dtv = _project(params, x, cfg)
+    xc, wx = _conv_step(cache["conv_x"], xr, params["conv_x"].astype(cd),
+                        params["conv_bx"].astype(cd))
+    Bc, wB = _conv_step(cache["conv_B"], Br, params["conv_B"].astype(cd),
+                        params["conv_bB"].astype(cd))
+    Cc, wC = _conv_step(cache["conv_C"], Cr, params["conv_C"].astype(cd),
+                        params["conv_bC"].astype(cd))
+    xs = jax.nn.silu(xc)[:, 0].reshape(B, H, P)
+    Bc = jax.nn.silu(Bc)[:, 0]
+    Cc = jax.nn.silu(Cc)[:, 0]
+
+    dt = jax.nn.softplus(dtv[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None])
+    A = -jnp.exp(params["A_log"])
+    y, state = ssd_decode_step(cache["ssm"], xs, dt, A, Bc, Cc)
+    y = y + params["D"][None, :, None].astype(cd) * xs
+    y = y.reshape(B, 1, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(cd))
+    new_cache = {"ssm": state,
+                 "conv_x": wx.astype(cache["conv_x"].dtype),
+                 "conv_B": wB.astype(cache["conv_B"].dtype),
+                 "conv_C": wC.astype(cache["conv_C"].dtype)}
+    return out, new_cache

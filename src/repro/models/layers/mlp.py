@@ -1,0 +1,26 @@
+"""SwiGLU feed-forward block (dense MLP)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..module import ParamSpec
+
+
+def mlp_specs(cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    return {
+        "wg": ParamSpec((d, f), ("embed", "mlp"), dt),
+        "wu": ParamSpec((d, f), ("embed", "mlp"), dt),
+        "wd": ParamSpec((f, d), ("mlp", "embed"), dt),
+    }
+
+
+def mlp(params, x, cfg):
+    cd = cfg.compute_dtype
+    g = jnp.einsum("bld,df->blf", x, params["wg"].astype(cd))
+    u = jnp.einsum("bld,df->blf", x, params["wu"].astype(cd))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("blf,fd->bld", h, params["wd"].astype(cd))

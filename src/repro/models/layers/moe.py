@@ -1,0 +1,293 @@
+"""Mixture-of-Experts layer: top-k routing, group-local capacity-bounded
+scatter dispatch, SwiGLU experts, and the paper's congestion-aware gate.
+
+Dispatch design (TPU adaptation):
+
+* Tokens are split into `cfg.moe_groups` groups (launchers set this to
+  the DP shard count).  Capacity is group-local, so the dispatch buffer
+  is [G, E, C_g, D] — sharded over BOTH the data axes (G) and the model
+  axis (E) — and the scatter/gather never crosses DP shards.
+* Instead of the GShard one-hot einsum (which multiplies mostly-zeros
+  and inflates HLO FLOPs by ~T·E·C·D), token vectors are scattered into
+  the buffer and gathered back.  HLO FLOPs stay proportional to ACTIVE
+  expert compute (capacity_factor overhead only), keeping the roofline
+  MODEL_FLOPS/HLO_FLOPs ratio honest.
+
+router_bias="congestion" engages `repro.core.moe_bridge`: gate logits
+are biased by -η·δ_e, the paper's Theorem-1 marginal cost of expert e
+under its current EMA load — aux-loss-free load balancing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import moe_bridge
+from ..module import ParamSpec
+
+
+def moe_specs(cfg) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    dt = cfg.param_dtype
+    return {
+        "router": ParamSpec((d, E), ("embed", "experts"), jnp.float32),
+        "wg": ParamSpec((E, d, f), ("experts", "embed", "mlp"), dt),
+        "wu": ParamSpec((E, d, f), ("experts", "embed", "mlp"), dt),
+        "wd": ParamSpec((E, f, d), ("experts", "mlp", "embed"), dt),
+    }
+
+
+def moe_state_specs(cfg) -> dict:
+    """Mutable router state (congestion EMA), threaded through steps."""
+    return {"load_ema": ParamSpec((cfg.n_experts,), ("experts",),
+                                  jnp.float32, init="zeros")}
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    cap = int(tokens_per_group * cfg.top_k * cfg.capacity_factor
+              / cfg.n_experts)
+    return max(4, min(cap, tokens_per_group))
+
+
+# --------------------------------------------------------------------------
+# Gather-only permutation (custom VJPs).
+#
+# Dispatch and combine are inverse permutations (plus drops), so each
+# direction's backward pass is the OTHER direction's gather.  With
+# custom VJPs the whole MoE data path is gathers — no feature-vector
+# scatter anywhere.  (XLA's SPMD scatter lowering materializes u32
+# per-element index maps of size [G,E,C,D] — ~10 GB/device at Jamba
+# train_4k; gathers partition cleanly over the leading group dim.)
+# Index tensors: slot_tok / slot_k [G, E, C] (token id and top-k slot
+# occupying each expert slot; invalid -> Tg sentinel), e_idx / p_idx
+# [G, Tg, K] (expert slot of each assignment).
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def _dispatch(x, slot_tok, valid, e_idx, p_idx, keep):
+    return _dispatch_fwd(x, slot_tok, valid, e_idx, p_idx, keep)[0]
+
+
+def _dispatch_fwd(x, slot_tok, valid, e_idx, p_idx, keep):
+    # x [G, Tg, D] -> buf [G, E, C, D]
+    take = jax.vmap(lambda xg, ig: xg[jnp.minimum(ig, xg.shape[0] - 1)])
+    buf = take(x, slot_tok) * valid[..., None].astype(x.dtype)
+    witness = jnp.zeros((), x.dtype)
+    return buf, (witness, slot_tok, valid, e_idx, p_idx, keep)
+
+
+def _dispatch_bwd(res, d_buf):
+    witness, slot_tok, valid, e_idx, p_idx, keep = res
+    d_buf = d_buf * valid[..., None].astype(d_buf.dtype)
+    # dx[g, t] = sum_k keep[g,t,k] * d_buf[g, e_idx, p_idx]
+    take = jax.vmap(lambda bg, eg, pg: bg[eg, pg])
+    dslots = take(d_buf, e_idx, p_idx)            # [G, Tg, K, D]
+    dx = jnp.sum(dslots * keep[..., None].astype(d_buf.dtype), axis=2)
+    return (dx.astype(witness.dtype), None, None, None, None, None)
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@jax.custom_vjp
+def _combine(out, w, slot_tok, slot_k, valid, e_idx, p_idx):
+    return _combine_fwd(out, w, slot_tok, slot_k, valid, e_idx, p_idx)[0]
+
+
+def _combine_fwd(out, w, slot_tok, slot_k, valid, e_idx, p_idx):
+    # out [G, E, C, D], w [G, Tg, K] -> y [G, Tg, D]
+    take = jax.vmap(lambda og, eg, pg: og[eg, pg])
+    slots = take(out, e_idx, p_idx)               # [G, Tg, K, D]
+    y = jnp.einsum("gtk,gtkd->gtd", w.astype(out.dtype), slots)
+    return y, (out, w, slot_tok, slot_k, valid, e_idx, p_idx)
+
+
+def _combine_bwd(res, dy):
+    out, w, slot_tok, slot_k, valid, e_idx, p_idx = res
+    Tg = w.shape[1]
+    # d_out[g,e,c] = valid * w[g, slot_tok, slot_k] * dy[g, slot_tok]
+    take_dy = jax.vmap(lambda dg, ig: dg[jnp.minimum(ig, Tg - 1)])
+    dy_slots = take_dy(dy, slot_tok)              # [G, E, C, D]
+    take_w = jax.vmap(lambda wg, tg, kg: wg[jnp.minimum(tg, Tg - 1), kg])
+    w_slots = take_w(w, slot_tok, slot_k)         # [G, E, C]
+    d_out = dy_slots * (w_slots * valid)[..., None].astype(dy.dtype)
+    # d_w[g,t,k] = dy[g,t] . out[g, e_idx, p_idx]
+    take_out = jax.vmap(lambda og, eg, pg: og[eg, pg])
+    slots = take_out(out, e_idx, p_idx)           # [G, Tg, K, D]
+    d_w = jnp.einsum("gtd,gtkd->gtk", dy, slots).astype(w.dtype)
+    return (d_out.astype(out.dtype), d_w, None, None, None, None, None)
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+# --------------------------------------------------------------------------
+# EP-friendly variant: when experts are sharded over the model axis, a
+# gather FROM an E-sharded tensor makes XLA mask-and-psum the full
+# [G,Tg,K,D] gather result over the model axis.  Re-expressing the
+# E-sourced directions (combine fwd, dispatch bwd) as SCATTER-ADDS into
+# token space lets each shard pre-reduce its local experts, so only the
+# [G,Tg,D] accumulator is all-reduced — top_k x fewer bytes on the wire.
+# Selected via cfg.moe_ep_scatter (the production lowering turns it on).
+# --------------------------------------------------------------------------
+def _segsum_to_tokens(src, slot_tok, w_slot, Tg):
+    """sum_e,c  w_slot[g,e,c] * src[g,e,c,:]  into token rows [G,Tg,D]."""
+    G, E, C, D = src.shape
+    weighted = src * w_slot[..., None].astype(src.dtype)
+    flat = weighted.reshape(G, E * C, D)
+    idx = jnp.minimum(slot_tok.reshape(G, E * C), Tg)  # Tg = drop row
+    out = jnp.zeros((G, Tg + 1, D), src.dtype)
+    out = jax.vmap(lambda o, i, u: o.at[i].add(u))(out, idx, flat)
+    return out[:, :Tg]
+
+
+@jax.custom_vjp
+def _combine_ep(out, w, slot_tok, slot_k, valid, e_idx, p_idx):
+    return _combine_ep_fwd(out, w, slot_tok, slot_k, valid, e_idx,
+                           p_idx)[0]
+
+
+def _combine_ep_fwd(out, w, slot_tok, slot_k, valid, e_idx, p_idx):
+    Tg = w.shape[1]
+    take_w = jax.vmap(lambda wg, tg, kg: wg[jnp.minimum(tg, Tg - 1), kg])
+    w_slot = take_w(w, slot_tok, slot_k) * valid       # [G, E, C]
+    y = _segsum_to_tokens(out, slot_tok, w_slot, Tg)
+    return y, (out, w, slot_tok, slot_k, valid, e_idx, p_idx)
+
+
+def _combine_ep_bwd(res, dy):
+    out, w, slot_tok, slot_k, valid, e_idx, p_idx = res
+    G, E, C, D = out.shape
+    Tg = w.shape[1]
+    K = w.shape[2]
+    # d_out: gather dy (token space, unsharded over model -> local)
+    take_dy = jax.vmap(lambda dg, ig: dg[jnp.minimum(ig, Tg - 1)])
+    dy_slots = take_dy(dy, slot_tok)              # [G, E, C, D]
+    take_w = jax.vmap(lambda wg, tg, kg: wg[jnp.minimum(tg, Tg - 1), kg])
+    w_slots = take_w(w, slot_tok, slot_k)         # [G, E, C]
+    d_out = dy_slots * (w_slots * valid)[..., None].astype(dy.dtype)
+    # d_w in SLOT space (local per-slot dot), then a scalar scatter back
+    # to (t, k) — avoids gathering the E-sharded `out` into [G,Tg,K,D]
+    dw_slot = jnp.sum(dy_slots * out, axis=-1) * valid       # [G, E, C]
+    gi = jnp.repeat(jnp.arange(G), E * C)
+    ti = jnp.minimum(slot_tok, Tg).reshape(-1)
+    ki = slot_k.reshape(-1)
+    d_w = jnp.zeros((G, Tg + 1, K), jnp.float32).at[
+        gi, ti, ki].add(dw_slot.reshape(-1))[:, :Tg]
+    return (d_out.astype(out.dtype), d_w.astype(w.dtype),
+            None, None, None, None, None)
+
+
+_combine_ep.defvjp(_combine_ep_fwd, _combine_ep_bwd)
+
+
+@jax.custom_vjp
+def _dispatch_ep(x, slot_tok, valid, e_idx, p_idx, keep):
+    return _dispatch_fwd(x, slot_tok, valid, e_idx, p_idx, keep)[0]
+
+
+def _dispatch_ep_bwd(res, d_buf):
+    witness, slot_tok, valid, e_idx, p_idx, keep = res
+    Tg = e_idx.shape[1]
+    dx = _segsum_to_tokens(d_buf, slot_tok, valid, Tg)
+    return (dx.astype(witness.dtype), None, None, None, None, None)
+
+
+_dispatch_ep.defvjp(_dispatch_fwd, _dispatch_ep_bwd)
+
+
+def moe(params, state, x, cfg):
+    """x [B, L, D] -> (y [B, L, D], new_state, metrics)."""
+    B, L, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * L
+    G = cfg.moe_groups if T % cfg.moe_groups == 0 else 1
+    Tg = T // G
+    C = _capacity(Tg, cfg)
+    cd = cfg.compute_dtype
+    xt = x.reshape(G, Tg, D)
+
+    # pin the group dim to the DP axes: XLA loses the batch sharding
+    # through the [B,S,D] -> [G,Tg,D] reshape otherwise, replicating the
+    # whole dispatch pipeline across data shards.
+    rules = dict(cfg.shard_rules) if cfg.shard_rules else {}
+    dp_rule = rules.get("batch")
+    ep_rule = rules.get("experts")
+
+    def pin(t, *axes):
+        if cfg.shard_rules is None or all(a is None for a in axes):
+            return t
+        U = jax.sharding.PartitionSpec.UNCONSTRAINED
+        spec = jax.sharding.PartitionSpec(
+            *axes, *([U] * (t.ndim - len(axes))))
+        return jax.lax.with_sharding_constraint(t, spec)
+
+    if G > 1:
+        xt = pin(xt, dp_rule)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    sel_logits = logits
+    if cfg.router_bias == "congestion":
+        st = moe_bridge.CongestionState(state["load_ema"],
+                                        jnp.zeros((), jnp.int32))
+        # tight capacity: the queueing-delay marginal must grow sharply
+        # as an expert approaches its fair-share budget for the bias to
+        # compete with O(1) logit differences
+        cap_per_expert = jnp.full((E,), T * cfg.top_k / E * 1.3,
+                                  dtype=jnp.float32)
+        bias = moe_bridge.congestion_bias(st, cap_per_expert,
+                                          eta=cfg.router_bias_eta)
+        sel_logits = logits + bias[None, None, :]  # bias selects; probs weight
+
+    top_vals, top_idx = jax.lax.top_k(sel_logits, K)       # [G, Tg, K]
+    gate = jnp.take_along_axis(probs, top_idx, axis=-1)    # [G, Tg, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # slot-major position of each assignment within its (group, expert)
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.int32)   # [G, Tg, K, E]
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, K * Tg, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat             # [G, K*Tg, E]
+    pos = jnp.take_along_axis(
+        pos_flat.reshape(G, K, Tg, E).transpose(0, 2, 1, 3),
+        top_idx[..., None], axis=-1)[..., 0]               # [G, Tg, K]
+    keep = pos < C
+    counts = jnp.sum(flat, axis=(0, 1)).astype(jnp.float32)  # [E] pre-drop
+
+    # scalar index scatters (tiny: [G, E, C+1] ints, no feature dim)
+    tok_ids = jnp.broadcast_to(jnp.arange(Tg)[None, :, None], (G, Tg, K))
+    k_ids = jnp.broadcast_to(jnp.arange(K)[None, None, :], (G, Tg, K))
+    g_idx = jnp.broadcast_to(jnp.arange(G)[:, None],
+                             (G, Tg * K)).reshape(-1)
+    e_flat = top_idx.reshape(-1)
+    p_flat = jnp.where(keep, pos, C).reshape(-1)
+    sent = Tg  # sentinel for empty slots
+    slot_tok = jnp.full((G, E, C + 1), sent, jnp.int32).at[
+        g_idx, e_flat, p_flat].set(tok_ids.reshape(-1), mode="drop")[..., :C]
+    slot_k = jnp.zeros((G, E, C + 1), jnp.int32).at[
+        g_idx, e_flat, p_flat].set(k_ids.reshape(-1), mode="drop")[..., :C]
+    valid = (slot_tok < sent).astype(jnp.float32)
+
+    e_idx = top_idx
+    p_idx = jnp.where(keep, pos, 0)
+
+    dispatch_fn = _dispatch_ep if cfg.moe_ep_scatter else _dispatch
+    combine_fn = _combine_ep if cfg.moe_ep_scatter else _combine
+    buf = dispatch_fn(xt.astype(cd), slot_tok, valid, e_idx, p_idx, keep)
+    buf = pin(buf, dp_rule, ep_rule)
+
+    # expert SwiGLU (E sharded on the model axis, G on the data axes)
+    g = jnp.einsum("gecd,edf->gecf", buf, params["wg"].astype(cd))
+    u = jnp.einsum("gecd,edf->gecf", buf, params["wu"].astype(cd))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("gecf,efd->gecd", h, params["wd"].astype(cd))
+    out = pin(out, dp_rule, ep_rule)
+
+    w = (gate * keep).astype(cd)
+    y = combine_fn(out, w, slot_tok, slot_k, valid, e_idx, p_idx)
+
+    new_state = {"load_ema": 0.9 * state["load_ema"] + 0.1 * counts}
+    metrics = {"moe_imbalance": moe_bridge.load_imbalance(counts),
+               "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y.reshape(B, L, D), new_state, metrics

@@ -1,0 +1,19 @@
+"""RMSNorm (+ helpers). Computed in float32 for stability, cast back."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..module import ParamSpec
+
+
+def rmsnorm_spec(dim: int, name_axis: str = "embed") -> ParamSpec:
+    return ParamSpec((dim,), (name_axis,), init="ones")
+
+
+def rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6
+            ) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (var + eps) ** -0.5
+    return (y * scale.astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,59 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE splits the head dim into sections rotated by (temporal, height,
+width) position components.  For the stub vision frontend, position ids
+are provided per-modality by `input_specs()`; text-only tokens pass the
+same position for all three components (equivalent to standard RoPE).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+
+def rope_angles(head_dim: int, theta: float, positions: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [..., L] -> (cos, sin) of shape [..., L, head_dim/2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x [..., L, H, D]; cos/sin broadcastable to [..., L, 1, D/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def mrope_angles(head_dim: int, theta: float, positions: jnp.ndarray,
+                 sections: Sequence[int]
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """M-RoPE: positions [3, ..., L] (t/h/w), sections sum to head_dim/2.
+
+    Each frequency band is driven by the position component its section
+    belongs to (Qwen2-VL §3.1).
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=half)
+    # positions: [3, *batch, L] -> per-band positions [*batch, L, half]
+    pos_band = jnp.moveaxis(positions, 0, -1)[..., sec_id]
+    ang = pos_band.astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def make_positions(batch: int, seq: int, offset: Optional[jnp.ndarray] = None
+                   ) -> jnp.ndarray:
+    pos = jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+    if offset is not None:
+        pos = pos + offset[:, None]
+    return pos

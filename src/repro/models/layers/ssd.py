@@ -1,0 +1,115 @@
+"""State-Space Duality (Mamba2) selective scan.
+
+Two jnp implementations:
+  ssd_sequential — O(L) recurrence via lax.scan; the correctness oracle.
+  ssd_chunked    — the SSD block algorithm (intra-chunk "attention-like"
+                   quadratic term + inter-chunk state recurrence); the
+                   production path; mathematically identical (tests
+                   assert allclose).  The Pallas kernel
+                   `repro.kernels.ssd_scan` mirrors the chunked form.
+
+Shapes (single B/C group):
+  x  [B, L, H, P]   inputs per head
+  dt [B, L, H]      discretization steps (post-softplus)
+  A  [H]            negative decay rates
+  Bm [B, L, N]      input projection (shared across heads)
+  Cm [B, L, N]      output projection
+returns y [B, L, H, P] and final state [B, H, N, P].
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential(x, dt, A, Bm, Cm,
+                   init_state: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    state = (jnp.zeros((B, H, N, P), f32) if init_state is None
+             else init_state.astype(f32))
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp            # [B,H,P], [B,H], [B,N], [B,N]
+        dA = jnp.exp(dt_t * A[None])         # [B, H]
+        dBx = jnp.einsum("bh,bn,bhp->bhnp", dt_t, B_t, x_t)
+        state = state * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhnp->bhp", C_t, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0), jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(Bm.astype(f32), 1, 0), jnp.moveaxis(Cm.astype(f32), 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int = 256,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    f32 = jnp.float32
+
+    xc = x.astype(f32).reshape(B, nc, chunk, H, P)
+    dtc = dt.astype(f32).reshape(B, nc, chunk, H)
+    Bc = Bm.astype(f32).reshape(B, nc, chunk, N)
+    Cc = Cm.astype(f32).reshape(B, nc, chunk, N)
+
+    dA = dtc * A[None, None, None]                   # [B,nc,Q,H] (<= 0)
+    cum = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+    total = cum[:, :, -1]                            # [B,nc,H]
+
+    # --- intra-chunk (quadratic, causal) ---------------------------------
+    # decay(i,j) = exp(cum_i - cum_j) for i >= j.  The mask is applied
+    # INSIDE the exp: masked (i < j) entries have positive diff that can
+    # overflow, and inf * 0 in the backward of a masked exp is NaN.
+    diff = cum[:, :, :, None] - cum[:, :, None]      # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = jnp.where(causal[None, None, ..., None], diff, -1e30)
+    Ldec = jnp.exp(diff)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)   # [B,nc,Q,Q]
+    w = scores[..., None] * Ldec * dtc[:, :, None]   # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # --- chunk-local final states ----------------------------------------
+    decay_to_end = jnp.exp(total[:, :, None] - cum)  # [B,nc,Q,H]
+    S_loc = jnp.einsum("bcqh,bcqn,bcqhp->bchnp",
+                       decay_to_end * dtc, Bc, xc)   # [B,nc,H,N,P]
+
+    # --- inter-chunk recurrence (scan over chunks) ------------------------
+    S0 = (jnp.zeros((B, H, N, P), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def chunk_step(S_prev, inp):
+        S_c, tot_c = inp                             # [B,H,N,P], [B,H]
+        S_new = S_prev * jnp.exp(tot_c)[..., None, None] + S_c
+        return S_new, S_prev
+
+    S_final, S_prevs = jax.lax.scan(
+        chunk_step, S0,
+        (jnp.moveaxis(S_loc, 1, 0), jnp.moveaxis(total, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)            # [B,nc,H,N,P]
+
+    # --- inter-chunk contribution ----------------------------------------
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp", Cc, S_prevs) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, L, H, P)
+    return y.astype(x.dtype), S_final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token state update.  state [B,H,N,P]; returns (y [B,H,P], state)."""
+    f32 = jnp.float32
+    state = state.astype(f32)
+    dA = jnp.exp(dt_t.astype(f32) * A[None])
+    dBx = jnp.einsum("bh,bn,bhp->bhnp", dt_t.astype(f32),
+                     B_t.astype(f32), x_t.astype(f32))
+    state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(f32), state)
+    return y.astype(x_t.dtype), state

@@ -1,0 +1,412 @@
+"""Decoder language model covering the dense / MoE / hybrid / SSM / VLM
+families, with layer-stacked `lax.scan` (compile-time O(1) in depth — the
+512-way dry-runs depend on this) and slot-wise heterogeneous patterns
+(Jamba's 1:7 attention:mamba interleave with MoE every other layer).
+
+Layers are grouped by the smallest repeating period p of the layer
+pattern; parameters of slot j are stacked across the n_layers/p groups
+and the scan body applies the p slots in order.
+
+Public surface:
+  LM(cfg).param_specs() / .state_specs()
+  LM(cfg).loss(params, state, batch)            -> (loss, new_state, metrics)
+  LM(cfg).init_cache_specs(batch, max_len)      -> cache ParamSpec tree
+  LM(cfg).decode_step(params, cache, tokens, pos) -> (logits, new_cache)
+  LM(cfg).prefill(params, cache, batch)         -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import module
+from .config import ModelConfig
+from .module import ParamSpec
+from .layers import attention as attn
+from .layers import mamba as mb
+from .layers import mlp as mlpl
+from .layers import moe as moel
+from .layers.norms import rmsnorm, rmsnorm_spec
+from .layers.rope import apply_rope, mrope_angles, rope_angles
+
+
+def _stack(specs, g: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((g,) + s.shape, ("layers",) + s.axes, s.dtype,
+                            s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.period = cfg.scan_period()
+        self.n_groups = cfg.n_layers // self.period
+        self.pattern = cfg.layer_pattern()[: self.period]
+
+    # ------------------------------------------------------------- specs
+    def _slot_specs(self, mixer: str, ffn: str) -> dict:
+        cfg = self.cfg
+        d = {}
+        d["ln1"] = rmsnorm_spec(cfg.d_model)
+        if mixer == "attn":
+            d["mixer"] = attn.attention_specs(cfg)
+        else:
+            d["mixer"] = mb.mamba_specs(cfg)
+        if ffn != "none":
+            d["ln2"] = rmsnorm_spec(cfg.d_model)
+            d["ffn"] = (moel.moe_specs(cfg) if ffn == "moe"
+                        else mlpl.mlp_specs(cfg))
+        return d
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        # the embedding table gets its own d_model logical axis: FSDP
+        # ("embed"->data) on the table conflicts with batch->data at the
+        # token gather and XLA resolves it by replicating the batch.
+        tbl_axes = (("vocab_off", "embed_tbl_d") if cfg.embed_tbl_shard
+                    else ("vocab", "embed_tbl"))
+        specs: Dict[str, Any] = {
+            "embed": ParamSpec((cfg.vocab, cfg.d_model), tbl_axes,
+                               cfg.param_dtype, init="normal", scale=0.02),
+            "final_norm": rmsnorm_spec(cfg.d_model),
+        }
+        blocks = {}
+        for j, (mixer, ffn) in enumerate(self.pattern):
+            blocks[f"slot_{j:02d}"] = _stack(
+                self._slot_specs(mixer, ffn), self.n_groups)
+        specs["blocks"] = blocks
+        if not cfg.tie_embeddings:
+            specs["unembed"] = ParamSpec(
+                (cfg.d_model, cfg.vocab), ("embed_tbl", "vocab"),
+                cfg.param_dtype, init="fan_in")
+        return specs
+
+    # ----------------------------------------------------- act constraints
+    def _rules(self) -> dict:
+        return dict(self.cfg.shard_rules) if self.cfg.shard_rules else {}
+
+    def _wsc_batch(self, x):
+        """Pin the batch dim of activations to the DP axes: sharding
+        conflicts at the embedding gather otherwise make XLA replicate
+        the batch through the whole network."""
+        b = self._rules().get("batch")
+        if b is None:
+            return x
+        U = jax.sharding.PartitionSpec.UNCONSTRAINED
+        spec = jax.sharding.PartitionSpec(b, *([U] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def _wsc_logits(self, x):
+        rules = self._rules()
+        b, v = rules.get("batch"), rules.get("vocab")
+        if b is None and v is None:
+            return x
+        U = jax.sharding.PartitionSpec.UNCONSTRAINED
+        spec = jax.sharding.PartitionSpec(b, U, v)
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def state_specs(self) -> dict:
+        """Mutable model state: MoE router load EMAs (the paper's G_e)."""
+        out = {}
+        for j, (_, ffn) in enumerate(self.pattern):
+            if ffn == "moe":
+                out[f"slot_{j:02d}"] = _stack(
+                    moel.moe_state_specs(self.cfg), self.n_groups)
+        return out
+
+    # -------------------------------------------------------------- rope
+    def _angles(self, positions):
+        cfg = self.cfg
+        if cfg.mrope_sections:
+            return mrope_angles(cfg.hd, cfg.rope_theta, positions,
+                                cfg.mrope_sections)
+        return rope_angles(cfg.hd, cfg.rope_theta, positions)
+
+    # ---------------------------------------------------------- training
+    def loss(self, params, state, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]                       # [B, S]
+        labels = batch["labels"]                       # [B, S] (-1 masked)
+        B, S = tokens.shape
+        x = self._wsc_batch(params["embed"].astype(cfg.compute_dtype)[tokens])
+        if "vis_embed" in batch:                       # VLM stub frontend
+            x = x + batch["vis_embed"].astype(cfg.compute_dtype)
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            if cfg.mrope_sections:
+                positions = jnp.broadcast_to(positions[None], (3, B, S))
+        cos, sin = self._angles(positions)
+        seg = batch.get("segment_ids")
+
+        x, new_state, _, metrics = self._run_blocks(params, state, x, cos,
+                                                    sin, seg)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x)
+        loss = _xent(logits, labels)
+        metrics["loss"] = loss
+        return loss, new_state, metrics
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            w = params["embed"].astype(cfg.compute_dtype)
+            out = jnp.einsum("bld,vd->blv", x, w)
+        else:
+            out = jnp.einsum("bld,dv->blv", x,
+                             params["unembed"].astype(cfg.compute_dtype))
+        return self._wsc_logits(out)
+
+    # --------------------------------------------------------- block scan
+    def _run_blocks(self, params, state, x, cos, sin, seg,
+                    caches=None, pos=None, prefill=False):
+        """Shared by loss (caches=None), decode, and prefill."""
+        cfg = self.cfg
+        decode = caches is not None and not prefill
+
+        def constrain(x):
+            if (cfg.seq_shard_axis and x.ndim == 3 and x.shape[1] > 1
+                    and x.shape[1] % cfg.seq_shard_multiple == 0):
+                U = jax.sharding.PartitionSpec.UNCONSTRAINED
+                return jax.lax.with_sharding_constraint(
+                    x, jax.sharding.PartitionSpec(
+                        U, cfg.seq_shard_axis, U))
+            return x
+
+        def body(x, slices):
+            x = constrain(x)
+            p_slices, s_slices, c_slices = slices
+            if cfg.shard_rules is not None:
+                rules = dict(cfg.shard_rules)
+
+                def pin_cast(arr, spec):
+                    # constrain sharded, THEN downcast big matrices: the
+                    # FSDP all-gather at first use moves bf16, not f32,
+                    # halving gathered transients and collective bytes.
+                    arr = jax.lax.with_sharding_constraint(arr, spec)
+                    if arr.ndim >= 2 and arr.dtype == jnp.float32:
+                        arr = arr.astype(cfg.compute_dtype)
+                    return arr
+
+                p_slices = {
+                    key: jax.tree.map(
+                        pin_cast, p_slices[key],
+                        module.partition_specs(
+                            self._slot_specs(mixer, ffn), rules))
+                    for key, (mixer, ffn) in
+                    ((f"slot_{j:02d}", mf)
+                     for j, mf in enumerate(self.pattern))}
+            new_s, new_c, mets = {}, {}, []
+            for j, (mixer, ffn) in enumerate(self.pattern):
+                key = f"slot_{j:02d}"
+                sp = p_slices[key]
+                h = rmsnorm(sp["ln1"], x, cfg.norm_eps)
+                if mixer == "attn":
+                    if decode:
+                        out, kc, vc = self._attn_decode(
+                            sp["mixer"], h, cos, sin,
+                            c_slices[key]["k"], c_slices[key]["v"], pos)
+                        new_c[key] = {"k": kc, "v": vc}
+                    elif prefill:
+                        out, kc, vc = self._attn_prefill(
+                            sp["mixer"], h, cos, sin, seg,
+                            c_slices[key]["k"], c_slices[key]["v"])
+                        new_c[key] = {"k": kc, "v": vc}
+                    else:
+                        out = self._attn_train(sp["mixer"], h, cos, sin, seg)
+                else:
+                    if decode:
+                        out, cc = mb.mamba_decode(sp["mixer"],
+                                                  c_slices[key], h, cfg)
+                        new_c[key] = cc
+                    elif prefill:
+                        out, cc = mb.mamba(sp["mixer"], h, cfg,
+                                           return_cache=True)
+                        new_c[key] = cc
+                    else:
+                        out, _ = mb.mamba(sp["mixer"], h, cfg)
+                x = x + out
+                if ffn != "none":
+                    h = rmsnorm(sp["ln2"], x, cfg.norm_eps)
+                    if ffn == "moe":
+                        out, st, met = moel.moe(sp["ffn"], s_slices[key],
+                                                h, cfg)
+                        new_s[key] = st
+                        mets.append(met)
+                    else:
+                        out = mlpl.mlp(sp["ffn"], h, cfg)
+                    x = x + out
+            met = _mean_metrics(mets)
+            return x, (new_s, new_c, met)
+
+        if cfg.remat == "layer":
+            body = jax.checkpoint(body)
+
+        p_stack = params["blocks"]
+        s_stack = state if state else {}
+        c_stack = caches if caches is not None else {}
+        xs = (p_stack, s_stack, c_stack)
+
+        if cfg.scan_layers and self.n_groups > 1:
+            x, (new_s, new_c, mets) = jax.lax.scan(body, x, xs)
+            mets = jax.tree.map(jnp.mean, mets)
+        else:
+            new_s_l, new_c_l, mets_l = [], [], []
+            for g in range(self.n_groups):
+                sl = jax.tree.map(lambda a: a[g], xs)
+                x, (ns, nc, mt) = body(x, sl)
+                new_s_l.append(ns)
+                new_c_l.append(nc)
+                mets_l.append(mt)
+            new_s = _stack_trees(new_s_l)
+            new_c = _stack_trees(new_c_l)
+            mets = _mean_metrics(mets_l)
+        return x, new_s, new_c, (mets or {})
+
+    def _run_blocks_decode(self, params, state, x, cos, sin, cache, pos):
+        x, new_s, new_c, _ = self._run_blocks(params, state, x, cos, sin,
+                                              None, caches=cache, pos=pos)
+        return x, new_s, new_c
+
+    def _attn_prefill(self, p, h, cos, sin, seg, k_cache, v_cache):
+        cfg = self.cfg
+        L = h.shape[1]
+        q, k, v = attn.qkv(p, h, cfg, cos, sin, apply_rope)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, 0, 0, 0))
+        o = attn.full_attention(q, k, v, causal=True, segment_ids=seg,
+                                block_q=cfg.attn_block_q,
+                                block_k=cfg.attn_block_k,
+                                unroll=cfg.attn_unroll)
+        return attn.out_proj(p, o, cfg), k_cache, v_cache
+
+    def prefill(self, params, state, cache, tokens):
+        """Full-prompt forward that seeds the decode caches.
+
+        tokens [B, L] (L <= cache max_len).  Returns
+        (last-position logits [B, vocab], new_state, cache)."""
+        cfg = self.cfg
+        B, L = tokens.shape
+        x = params["embed"].astype(cfg.compute_dtype)[tokens]
+        positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, B, L))
+        cos, sin = self._angles(positions)
+        x, new_s, new_c, _ = self._run_blocks(params, state, x, cos, sin,
+                                              None, caches=cache,
+                                              prefill=True)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, new_s, new_c
+
+    def _attn_train(self, p, h, cos, sin, seg):
+        cfg = self.cfg
+        q, k, v = attn.qkv(p, h, cfg, cos, sin, apply_rope)
+        if cfg.pin_attn_heads and cfg.shard_rules is not None:
+            rules = dict(cfg.shard_rules)
+            U = jax.sharding.PartitionSpec.UNCONSTRAINED
+            hr, kr = rules.get("heads"), rules.get("kv_heads")
+            br = rules.get("batch")
+            if hr is not None:
+                q = jax.lax.with_sharding_constraint(
+                    q, jax.sharding.PartitionSpec(br, U, hr, U))
+            if kr is not None:
+                kspec = jax.sharding.PartitionSpec(br, U, kr, U)
+                k = jax.lax.with_sharding_constraint(k, kspec)
+                v = jax.lax.with_sharding_constraint(v, kspec)
+        o = attn.full_attention(q, k, v, causal=True, segment_ids=seg,
+                                block_q=cfg.attn_block_q,
+                                block_k=cfg.attn_block_k,
+                                unroll=cfg.attn_unroll)
+        return attn.out_proj(p, o, cfg)
+
+    def _attn_decode(self, p, h, cos, sin, k_cache, v_cache, pos):
+        cfg = self.cfg
+        q, k, v = attn.qkv(p, h, cfg, cos, sin, apply_rope)
+        k_cache, v_cache = attn.cache_update(k_cache, v_cache, k, v, pos)
+        o = attn.decode_attention(q, k_cache, v_cache, pos + 1)
+        return attn.out_proj(p, o, cfg), k_cache, v_cache
+
+    # ------------------------------------------------------------ decode
+    def init_cache_specs(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        out = {}
+        for j, (mixer, _) in enumerate(self.pattern):
+            key = f"slot_{j:02d}"
+            if mixer == "attn":
+                kv = ParamSpec((batch, max_len, cfg.n_kv_heads, cfg.hd),
+                               ("batch", "cache_seq", "kv_heads", "head_dim"),
+                               cfg.cache_dtype, init="zeros")
+                out[key] = {"k": kv, "v": kv}
+            else:
+                sh = mb.mamba_cache_shapes(cfg, batch)
+                out[key] = {
+                    "ssm": ParamSpec(sh["ssm"],
+                                     ("batch", "heads", None, None),
+                                     jnp.float32, init="zeros"),
+                    "conv_x": ParamSpec(sh["conv_x"], ("batch", None, "mlp"),
+                                        cfg.cache_dtype, init="zeros"),
+                    "conv_B": ParamSpec(sh["conv_B"], ("batch", None, None),
+                                        cfg.cache_dtype, init="zeros"),
+                    "conv_C": ParamSpec(sh["conv_C"], ("batch", None, None),
+                                        cfg.cache_dtype, init="zeros"),
+                }
+        return {k: _stack(v, self.n_groups) for k, v in out.items()}
+
+    def decode_step(self, params, state, cache, tokens, pos):
+        """tokens [B, 1], pos [B] -> (logits [B, vocab], state, new_cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = self._wsc_batch(params["embed"].astype(cfg.compute_dtype)[tokens])
+        positions = pos[:, None]
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, B, 1))
+        cos, sin = self._angles(positions)
+        x, new_state, new_cache = self._run_blocks_decode(
+            params, state, x, cos, sin, cache, pos)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_state, new_cache
+
+
+def _has_leaves(tree) -> bool:
+    return len(jax.tree.leaves(tree)) > 0
+
+
+def _mean_metrics(mets: list) -> dict:
+    if not mets:
+        return {}
+    keys = mets[0].keys()
+    return {k: jnp.mean(jnp.stack([m[k] for m in mets])) for k in keys}
+
+
+def _stack_trees(trees: list):
+    if not trees or not any(_has_leaves(t) for t in trees):
+        return {}
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _xent(logits, labels):
+    """Masked next-token cross-entropy (labels < 0 are padding).
+
+    TP-safe formulation: the label log-prob is a one-hot contraction
+    (fuses to a masked reduce that partitions over a vocab-sharded
+    logits axis with one psum), and logsumexp reduces without
+    materializing an f32 [B, S, vocab] buffer.  A take_along_axis here
+    would make XLA all-gather full-vocab tensors (several GB/device).
+    """
+    mask = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(
+        logits.astype(jnp.float32), axis=-1)              # fused reduce
+    onehot = jax.nn.one_hot(lab, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.sum(logits * onehot, axis=-1).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

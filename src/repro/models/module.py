@@ -1,0 +1,103 @@
+"""Minimal functional parameter system (no flax dependency).
+
+A model is a pytree of `ParamSpec` leaves.  Three materializers:
+
+  abstract(specs)            -> ShapeDtypeStruct tree (dry-run: no alloc)
+  init(specs, key)           -> initialized array tree
+  partition_specs(specs, rules) -> PartitionSpec tree (logical -> mesh)
+
+Every ParamSpec carries LOGICAL axis names; `rules` maps logical axes to
+mesh axes (or None = replicated).  This is the MaxText "logical axis"
+pattern distilled: swap the rules dict to re-shard the whole model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]    # logical axis per dim
+    dtype: Any = jnp.float32
+    init: str = "fan_in"               # fan_in | normal | zeros | ones
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def abstract(specs) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=_is_spec)
+
+
+def init(specs, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.init == "zeros":
+            arr = jnp.zeros(s.shape, s.dtype)
+        elif s.init == "ones":
+            arr = jnp.ones(s.shape, s.dtype)
+        elif s.init == "normal":
+            arr = (s.scale * jax.random.normal(k, s.shape)).astype(s.dtype)
+        elif s.init == "fan_in":
+            fan_in = s.shape[0] if len(s.shape) else 1
+            std = s.scale / np.sqrt(max(fan_in, 1))
+            arr = (std * jax.random.normal(k, s.shape)).astype(s.dtype)
+        else:
+            raise ValueError(s.init)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def partition_specs(specs, rules: dict) -> Any:
+    """Logical axes -> PartitionSpec via `rules` (missing axis = None).
+
+    Rule values may be a mesh axis name or a tuple of names (e.g. the
+    batch axis mapping to ("pod", "data")).  A mesh axis is used at most
+    once per spec; later duplicates degrade to replication."""
+    def one(s: ParamSpec) -> P:
+        mesh_axes = []
+        used = set()
+        for ax in s.axes:
+            m = rules.get(ax) if ax is not None else None
+            if m is not None:
+                parts = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+                parts = tuple(p for p in parts if p not in used)
+                used.update(parts)
+                m = parts if len(parts) > 1 else (parts[0] if parts
+                                                  else None)
+            mesh_axes.append(m)
+        return P(*mesh_axes)
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def shardings(specs, mesh, rules: dict) -> Any:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        partition_specs(specs, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+                   for s in leaves))

@@ -1,0 +1,109 @@
+"""Optimizer stack: AdamW + cosine schedule + global-norm clipping,
+plus int8 error-feedback gradient compression for the DP all-reduce.
+
+Pure-pytree implementation (no optax dependency): the optimizer state is
+{mu, nu, count} mirroring the parameter tree, fully pjit-shardable with
+the same PartitionSpecs as the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+def init_opt_state(params) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return {"mu": zeros,
+            "nu": jax.tree.map(jnp.zeros_like, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(cfg: OptConfig, params, grads, opt_state
+                 ) -> Tuple[Any, dict, dict]:
+    count = opt_state["count"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      opt_state["mu"], grads)
+    nu = jax.tree.map(lambda n, g: cfg.b2 * n + (1 - cfg.b2) * g * g,
+                      opt_state["nu"], grads)
+
+    def upd(p, m, n):
+        mh = m / b1c
+        nh = n / b2c
+        step = mh / (jnp.sqrt(nh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "count": count}, \
+        {"grad_norm": gn, "lr": lr}
+
+
+# ------------------------------------------------------- grad compression
+def compress_int8(grads, error) -> Tuple[Any, Any]:
+    """Error-feedback int8 quantization (per-tensor scale).
+
+    Returns (quantized-as-float grads to all-reduce, new error state).
+    The residual (quantization error) is fed back next step so the
+    compression is unbiased in the long run [Seide et al., 1-bit SGD
+    lineage].  Cuts DP all-reduce bytes 4x vs f32 / 2x vs bf16.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(gf / scale), -127, 127)
+        deq = q * scale
+        return deq.astype(g.dtype), gf - deq
+
+    pairs = jax.tree.map(one, grads, error)
+    comp = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,2 @@
+from .engine import ServeConfig, ServingEngine
+from .router import RequestRouter, PodSpec

@@ -1,0 +1,130 @@
+"""Multi-pod serving request router — the paper's optimizer as the
+serving-layer scheduler.
+
+Cluster model (a CEC network, §II of the paper):
+  node 0            gateway (result destination for every request class
+                    — distinct from the data sources, the paper's key
+                    generality)
+  nodes 1..F        frontends (request entry; negligible compute)
+  nodes F+1..F+P    pods (compute; queueing-delay cost with per-pod
+                    token/s capacity; heterogeneous speed via w)
+  links             gateway<->frontends (DCN), frontends<->pods (DCN),
+                    pod<->pod ring (ICI) — all congestible M/M/1 costs.
+
+Request classes map to tasks: class m has input rate r (tokens/s of
+prompt) at each frontend and a_m = avg generated/prompt length ratio
+(result flow).  `plan()` runs distributed SGP to the Theorem-1 optimum;
+`on_pod_failure()` replays the paper's Fig-5b adaptivity experiment as a
+serving failover (warm-start from the surviving strategy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import core
+
+
+@dataclasses.dataclass(frozen=True)
+class PodSpec:
+    capacity: float            # tokens/s the pod can decode
+    speed: float = 1.0         # relative per-token cost multiplier (1/w)
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    dcn_capacity: float = 50.0   # gateway<->frontend, frontend<->pod
+    ici_capacity: float = 200.0  # pod<->pod
+    n_iters: int = 150
+
+
+class RequestRouter:
+    def __init__(self, pods: List[PodSpec], n_frontends: int,
+                 classes: Dict[str, float],
+                 demand: np.ndarray,
+                 cfg: RouterConfig = RouterConfig()):
+        """classes: name -> a_m (output/input ratio).
+        demand: [n_classes, n_frontends] prompt token rates."""
+        self.pods = pods
+        self.F = n_frontends
+        self.P = len(pods)
+        self.cfg = cfg
+        self.class_names = list(classes)
+        V = 1 + self.F + self.P
+
+        adj = np.zeros((V, V), dtype=bool)
+        caps = np.full((V, V), 1.0)
+        for f in range(1, 1 + self.F):
+            adj[0, f] = adj[f, 0] = True
+            caps[0, f] = caps[f, 0] = cfg.dcn_capacity
+            for p in range(1 + self.F, V):
+                adj[f, p] = adj[p, f] = True
+                caps[f, p] = caps[p, f] = cfg.dcn_capacity
+        pod_ids = list(range(1 + self.F, V))
+        for i, p in enumerate(pod_ids):
+            q = pod_ids[(i + 1) % len(pod_ids)]
+            if p != q:
+                adj[p, q] = adj[q, p] = True
+                caps[p, q] = caps[q, p] = cfg.ici_capacity
+
+        comp_cap = np.full((V,), 1e-3)           # frontends/gateway: none
+        for i, spec in enumerate(pods):
+            comp_cap[1 + self.F + i] = spec.capacity
+
+        S = len(classes)
+        dest = np.zeros((S,), np.int32)          # all results -> gateway
+        r = np.zeros((S, V))
+        r[:, 1:1 + self.F] = demand
+        a = np.asarray([classes[c] for c in self.class_names])
+        w = np.ones((S, V))
+        for i, spec in enumerate(pods):
+            w[:, 1 + self.F + i] = 1.0 / spec.speed
+
+        self.net = core.CECNetwork(
+            adj=jnp.asarray(adj),
+            link_cost=core.Cost("queue", jnp.asarray(caps)),
+            comp_cost=core.Cost("queue", jnp.asarray(comp_cap)),
+            dest=jnp.asarray(dest), r=jnp.asarray(r), a=jnp.asarray(a),
+            w=jnp.asarray(w),
+            task_type=jnp.asarray(np.arange(S), jnp.int32))
+        self.pod_nodes = pod_ids
+        # initial plan: nearest-pod offloading (frontends must not compute)
+        self._phi_init = core.offload_phi(self.net, pod_ids)
+        self.net = core.enforce_feasibility(self.net, margin=0.8,
+                                            phi0=self._phi_init)
+        self.phi = None
+        self.history = None
+
+    # ------------------------------------------------------------------
+    def plan(self, n_iters: Optional[int] = None,
+             distributed: bool = False):
+        phi0 = self.phi if self.phi is not None else self._phi_init
+        runner = core.run_distributed if distributed else core.run
+        self.phi, self.history = runner(
+            self.net, phi0, n_iters=n_iters or self.cfg.n_iters)
+        return self.summary()
+
+    def on_pod_failure(self, pod_index: int, n_iters: Optional[int] = None):
+        """Fail a pod and re-plan from the surviving strategy (warm start
+        — the paper's adaptivity property, Theorem 2)."""
+        node = 1 + self.F + pod_index
+        self.net = core.fail_node(self.net, node)
+        if self.phi is not None:
+            self.phi = core.refeasibilize(self.net, self.phi)
+        return self.plan(n_iters=n_iters)
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        fl = core.compute_flows(self.net, self.phi)
+        pod_load = np.asarray(fl.G)[1 + self.F:]
+        pod_cap = np.asarray(self.net.comp_cost.params)[1 + self.F:]
+        dispatch = np.asarray(fl.g)[:, 1 + self.F:]   # [class, pod]
+        return {
+            "total_cost": float(core.total_cost(self.net, self.phi)),
+            "pod_utilization": (pod_load / np.maximum(pod_cap, 1e-9)),
+            "dispatch": dispatch,
+            "residual": core.theorem1_residual(self.net, self.phi),
+        }

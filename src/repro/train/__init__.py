@@ -1,0 +1,2 @@
+from .step import TrainConfig, build_serve_step, build_train_step, \
+    init_train_state

@@ -1,0 +1,94 @@
+"""Property tests (hypothesis) for the convex cost families and the
+simplex-projection invariants of the core optimizer."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costs
+from repro.core.sgp import project_rows
+
+FAMS = ["linear", "queue", "power"]
+
+
+@settings(max_examples=40, deadline=None)
+@given(fam=st.sampled_from(FAMS),
+       p=st.floats(0.5, 20.0),
+       f=st.floats(0.0, 30.0))
+def test_cost_monotone_convex(fam, p, f):
+    c = costs.Cost(fam, jnp.asarray(p))
+    assert float(c.d1(jnp.asarray(f))) >= -1e-9
+    assert float(c.d2(jnp.asarray(f))) >= -1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(fam=st.sampled_from(FAMS),
+       p=st.floats(0.5, 20.0),
+       f1=st.floats(0.0, 20.0), f2=st.floats(0.0, 20.0))
+def test_cost_convexity_secant(fam, p, f1, f2):
+    """Jensen: midpoint value <= secant midpoint."""
+    c = costs.Cost(fam, jnp.asarray(p))
+    lo, hi = sorted((f1, f2))
+    mid = 0.5 * (lo + hi)
+    v = float(c.value(jnp.asarray(mid)))
+    sec = 0.5 * (float(c.value(jnp.asarray(lo)))
+                 + float(c.value(jnp.asarray(hi))))
+    assert v <= sec + 1e-5 * (1 + abs(sec))
+
+
+def test_queue_barrier_c1_continuity():
+    cap = 7.0
+    c = costs.Cost("queue", jnp.asarray(cap))
+    knee = costs.SAT * cap
+    eps = 1e-5
+    below = float(c.value(jnp.asarray(knee - eps)))
+    above = float(c.value(jnp.asarray(knee + eps)))
+    assert abs(above - below) < 1e-2
+    gb = float(c.d1(jnp.asarray(knee - eps)))
+    ga = float(c.d1(jnp.asarray(knee + eps)))
+    assert abs(ga - gb) / gb < 1e-2
+    # finite (barrier) above capacity
+    assert np.isfinite(float(c.value(jnp.asarray(2.0 * cap))))
+
+
+@settings(max_examples=30, deadline=None)
+@given(fam=st.sampled_from(["queue", "power"]),
+       p=st.floats(0.5, 20.0), T0=st.floats(0.1, 50.0),
+       frac=st.floats(0.0, 1.0))
+def test_d2_sup_bounds_sublevel(fam, p, T0, frac):
+    """A(T0) = sup_{D(F)<=T0} D'' really is an upper bound."""
+    c = costs.Cost(fam, jnp.asarray(p))
+    A = float(c.d2_sup(jnp.asarray(T0)))
+    if fam == "queue":
+        Fbar = p * T0 / (1 + T0)
+        Fbar = min(Fbar, costs.SAT * p)
+    else:
+        Fbar = (T0 / p) ** (1.0 / 3.0)
+    F = frac * Fbar
+    assert float(c.d2(jnp.asarray(F))) <= A * (1 + 1e-5) + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 10 ** 6))
+def test_simplex_projection_invariants(k, seed):
+    """Output is a feasible simplex point supported on permitted coords,
+    and is a descent direction for the linearized objective."""
+    rng = np.random.RandomState(seed)
+    phi = rng.dirichlet(np.ones(k))[None]
+    delta = rng.uniform(0.1, 5.0, (1, k))
+    M = rng.uniform(0.1, 5.0, (1, k))
+    perm = rng.rand(1, k) < 0.7
+    # permitted set must cover the current support for feasibility
+    perm |= phi > 1e-9
+    v = np.asarray(project_rows(jnp.asarray(phi), jnp.asarray(delta),
+                                jnp.asarray(M), jnp.asarray(perm)))
+    assert np.all(v >= -1e-9)
+    assert abs(v.sum() - 1.0) < 1e-5
+    assert np.all(v[~perm] < 1e-9)
+    # objective of the QP at v <= at phi (phi is feasible for the QP)
+    def qp(u):
+        return float((delta * (u - phi)).sum()
+                     + ((u - phi) ** 2 * M).sum())
+    assert qp(v) <= qp(phi) + 1e-6

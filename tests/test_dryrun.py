@@ -1,0 +1,97 @@
+"""Dry-run machinery: mesh rules, HLO collective parsing, and a small
+end-to-end lower+compile on the ambient (1-device) backend."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import mesh as meshlib
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_rules_divisibility_fallbacks():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # granite vocab 49155 is not 16-divisible -> vocab unsharded
+    r = meshlib.rules_for(configs.get_config("granite-3-8b"), mesh, 256)
+    assert r["vocab"] is None
+    # yi heads=56 not divisible -> head_dim fallback
+    r = meshlib.rules_for(configs.get_config("yi-34b"), mesh, 256)
+    assert r["heads"] is None and r["head_dim"] == "model"
+    # qwen3-moe: experts shard (EP), kv=4 not divisible
+    r = meshlib.rules_for(configs.get_config("qwen3-moe-30b-a3b"), mesh, 256)
+    assert r["experts"] == "model"
+    assert r["kv_heads"] is None
+    # FSDP on d_model over (pod, data)
+    assert r["embed"] == ("pod", "data")
+    assert r["batch"] == ("pod", "data")
+
+
+def test_moe_groups_for():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    cfg = configs.get_config("olmoe-1b-7b")
+    assert meshlib.moe_groups_for(cfg, mesh, 256) == 16
+    assert meshlib.moe_groups_for(cfg, mesh, 5) == 1
+    dense = configs.get_config("qwen3-0.6b")
+    assert meshlib.moe_groups_for(dense, mesh, 256) == 1
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[16,512]{1,0} all-gather(%y), dimensions={0}
+  %rs = (f32[64]{0}, f32[32]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %nothing = f32[8]{0} add(%p, %q)
+  %cp = u32[4]{0} collective-permute(%z)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 2.0 * 128 * 256 * 4
+    assert out["all-gather"] == 16 * 512 * 2
+    assert out["reduce-scatter"] == (64 + 32) * 4
+    assert out["collective-permute"] == 4 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_shape_grid_cells():
+    cells = list(configs.cells())
+    assert len(cells) == 40
+    skips = [c for c in cells if c[2] is not None]
+    # long_500k skipped exactly for the 8 non-subquadratic archs
+    assert len(skips) == 8
+    assert all(s == "long_500k" for _, s, _ in skips)
+    runnable = {(a, s) for a, s, skip in cells if skip is None}
+    assert ("mamba2-130m", "long_500k") in runnable
+    assert ("jamba-v0.1-52b", "long_500k") in runnable
+
+
+def test_tiny_mesh_lower_compile():
+    """A reduced-config train step lowers and compiles on a (1,1) mesh
+    with the same in/out sharding plumbing the production dry-run uses."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models import build_model, module
+    from repro.optim import OptConfig
+    from repro.train import TrainConfig, build_train_step
+
+    mesh = meshlib.make_test_mesh((1, 1), ("data", "model"))
+    cfg = configs.get_reduced("qwen3-0.6b")
+    model = build_model(cfg)
+    rules = meshlib.rules_for(cfg, mesh, 4)
+    fn = build_train_step(model, TrainConfig(opt=OptConfig()))
+    params = module.abstract(model.param_specs())
+    f32like = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
+    state = {"params": params,
+             "opt": {"mu": f32like, "nu": f32like,
+                     "count": jax.ShapeDtypeStruct((), jnp.int32)},
+             "model_state": {}}
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+    with mesh:
+        lowered = jax.jit(lambda st, b: fn(st, b)).lower(state, batch)
+        compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None

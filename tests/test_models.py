@@ -1,0 +1,176 @@
+"""Per-architecture smoke tests (reduced configs) + model-level
+consistency properties (decode == teacher-forced forward, SSD chunked ==
+sequential, blocked attention == naive)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model, module
+from repro.models.layers.attention import full_attention, naive_attention
+from repro.models.layers.ssd import (ssd_chunked, ssd_decode_step,
+                                     ssd_sequential)
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 2, cfg.vocab),
+        "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab),
+    }
+    if cfg.family == "encdec":
+        batch["enc_feats"] = jax.random.normal(
+            KEY, (B, cfg.n_enc_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["vis_embed"] = 0.1 * jax.random.normal(
+            KEY, (B, S, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_smoke(arch):
+    """Reduced same-family config: one forward/train step on CPU,
+    asserting output shapes and finiteness (assignment requirement)."""
+    cfg = configs.get_reduced(arch)
+    model = build_model(cfg)
+    params = module.init(model.param_specs(), KEY)
+    state = module.init(model.state_specs(), KEY) \
+        if model.state_specs() else {}
+    batch = _batch(cfg)
+
+    loss, new_state, metrics = model.loss(params, state, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+
+    grads = jax.grad(lambda p: model.loss(p, state, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+    cache = module.init(model.init_cache_specs(B, 64), KEY)
+    logits, st2, cache2 = model.decode_step(
+        params, state, cache, batch["tokens"][:, :1],
+        jnp.zeros((B,), jnp.int32))
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-130m",
+                                  "olmoe-1b-7b", "jamba-v0.1-52b"])
+def test_decode_matches_forward(arch):
+    """Teacher forcing: token-by-token decode logits == full forward."""
+    # congestion EMA evolves per decode step but once per prefill
+    # (freeze the bias) and batched prefill can DROP tokens at tight
+    # capacity while single-token decode never does (no-drop factor)
+    cfg = configs.get_reduced(arch).replace(scan_layers=False,
+                                            router_bias="none",
+                                            capacity_factor=8.0)
+    model = build_model(cfg)
+    params = module.init(model.param_specs(), KEY)
+    state = module.init(model.state_specs(), KEY) \
+        if model.state_specs() else {}
+    L = 8
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, L), 2, cfg.vocab)
+
+    # full forward logits at each position
+    from repro.models.lm import LM
+    x = params["embed"].astype(cfg.compute_dtype)[toks]
+    batch = {"tokens": toks, "labels": jnp.zeros_like(toks)}
+    # reuse loss internals via prefill on a cache
+    cache = module.init(model.init_cache_specs(B, L + 1), KEY)
+    last_logits, _, cache_pf = model.prefill(params, state, cache, toks)
+
+    # token-by-token decode
+    cache2 = module.init(model.init_cache_specs(B, L + 1), KEY)
+    st = state
+    for t in range(L):
+        logits, st, cache2 = model.decode_step(
+            params, st, cache2, toks[:, t:t + 1],
+            jnp.full((B,), t, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(last_logits, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ssd_chunked_equals_sequential():
+    ks = jax.random.split(KEY, 5)
+    Bn, L, H, P, N = 2, 64, 3, 8, 16
+    x = jax.random.normal(ks[0], (Bn, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bn, L, H)))
+    A = -jnp.exp(0.5 * jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (Bn, L, N))
+    Cm = jax.random.normal(ks[4], (Bn, L, N))
+    y1, s1 = ssd_sequential(x, dt, A, Bm, Cm)
+    y2, s2 = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+    # decode recurrence reproduces the same outputs
+    state = jnp.zeros((Bn, H, N, P))
+    outs = []
+    for t in range(L):
+        y, state = ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                   Bm[:, t], Cm[:, t])
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(y1), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("causal,seg", [(True, False), (True, True),
+                                        (False, False)])
+def test_blocked_attention_equals_naive(causal, seg):
+    ks = jax.random.split(KEY, 4)
+    Bn, L, H, KV, hd = 2, 256, 4, 2, 32
+    q = jax.random.normal(ks[0], (Bn, L, H, hd))
+    k = jax.random.normal(ks[1], (Bn, L, KV, hd))
+    v = jax.random.normal(ks[2], (Bn, L, KV, hd))
+    seg_ids = (jnp.cumsum(jax.random.bernoulli(ks[3], 0.05, (Bn, L)), 1)
+               if seg else None)
+    a = full_attention(q, k, v, causal=causal, segment_ids=seg_ids,
+                       block_q=64, block_k=64)
+    b = naive_attention(q, k, v, causal=causal, segment_ids=seg_ids)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_cross_attention_blocked():
+    ks = jax.random.split(KEY, 3)
+    Bn, Lq, Lk, H, hd = 2, 128, 48, 4, 32
+    q = jax.random.normal(ks[0], (Bn, Lq, H, hd))
+    k = jax.random.normal(ks[1], (Bn, Lk, H, hd))
+    v = jax.random.normal(ks[2], (Bn, Lk, H, hd))
+    a = full_attention(q, k, v, causal=False, block_q=32)
+    b = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_param_specs_shardable():
+    """Every ParamSpec's logical axes map to valid PartitionSpecs under
+    the production rules for every arch (dry-run precondition)."""
+    from repro.launch import mesh as meshlib
+    import jax.sharding as shd
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        model = build_model(cfg)
+        specs = model.param_specs()
+
+        class FakeMesh:
+            shape = {"pod": 2, "data": 16, "model": 16}
+        rules = meshlib.rules_for(cfg, FakeMesh(), 256)
+        pspecs = module.partition_specs(specs, rules)
+        flat_s = jax.tree.leaves(specs,
+                                 is_leaf=lambda x: hasattr(x, "axes"))
+        flat_p = jax.tree.leaves(pspecs,
+                                 is_leaf=lambda x: isinstance(x, shd.PartitionSpec))
+        sizes = {"pod": 2, "data": 16, "model": 16}
+        for s, p in zip(flat_s, flat_p):
+            for dim, ax in zip(s.shape, tuple(p) + (None,) * 8):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = int(np.prod([sizes[a] for a in axes]))
+                assert dim % n == 0, (arch, s.shape, p)

@@ -1,0 +1,190 @@
+"""End-to-end behaviour of the paper's system (flow model + SGP)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+
+
+@pytest.fixture(scope="module")
+def abilene():
+    return core.make_scenario(core.TABLE_II["abilene"])
+
+
+@pytest.fixture(scope="module")
+def abilene_solved(abilene):
+    phi0 = core.spt_phi(abilene)
+    phi, hist = core.run(abilene, phi0, n_iters=300)
+    return phi, hist
+
+
+def test_initial_phi_feasible_loop_free(abilene):
+    phi0 = core.spt_phi(abilene)
+    assert bool(core.is_loop_free(abilene, phi0))
+    # simplex feasibility
+    assert np.allclose(np.asarray(phi0.data.sum(-1)), 1.0, atol=1e-6)
+    rs = np.asarray(phi0.result.sum(-1))
+    dests = np.asarray(abilene.dest)
+    for s in range(abilene.S):
+        expect = np.ones(abilene.V)
+        expect[dests[s]] = 0.0
+        assert np.allclose(rs[s], expect, atol=1e-6)
+
+
+def test_flow_conservation(abilene):
+    """Eq. 1-7: data in = data computed; results exit at destinations."""
+    net = abilene
+    phi0 = core.spt_phi(net)
+    fl = core.compute_flows(net, phi0)
+    total_in = float(jnp.sum(net.r))
+    total_computed = float(jnp.sum(fl.g))
+    assert abs(total_in - total_computed) / total_in < 1e-5
+    gen = np.asarray((net.a[:, None] * fl.g).sum(axis=1))
+    arrived = np.asarray(fl.t_result)[np.arange(net.S),
+                                      np.asarray(net.dest)]
+    np.testing.assert_allclose(arrived, gen, rtol=1e-5)
+
+
+def test_marginals_match_autodiff(abilene):
+    phi0 = core.spt_phi(abilene)
+    err = core.marginals_vs_autodiff(abilene, phi0)
+    assert err < 1e-4
+
+
+def test_broadcast_matches_dense(abilene):
+    net = abilene
+    phi0 = core.spt_phi(net)
+    fl_d = core.compute_flows(net, phi0, method="dense")
+    fl_b = core.compute_flows(net, phi0, method="broadcast")
+    np.testing.assert_allclose(np.asarray(fl_d.F), np.asarray(fl_b.F),
+                               rtol=1e-5, atol=1e-6)
+    mg_d = core.compute_marginals(net, phi0, fl_d, method="dense")
+    mg_b = core.compute_marginals(net, phi0, fl_d, method="broadcast")
+    np.testing.assert_allclose(np.asarray(mg_d.rho_data),
+                               np.asarray(mg_b.rho_data),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_monotone_descent_and_loop_freedom(abilene):
+    net = abilene
+    phi = core.spt_phi(net)
+    T0 = core.total_cost(net, phi)
+    consts = core.make_consts(net, T0)
+    prev = float(T0)
+    sigma = 1.0
+    for it in range(30):
+        phi_new, aux = core.sgp_step(net, phi, consts, sigma=sigma)
+        c = float(core.total_cost(net, phi_new))
+        if c > prev * (1 + 1e-12):
+            sigma *= 4.0
+            continue
+        assert bool(core.is_loop_free(net, phi_new)), f"loop at iter {it}"
+        phi, prev = phi_new, c
+    assert prev < float(T0)
+
+
+def test_converges_to_global_optimum(abilene, abilene_solved):
+    """Theorem 1/2: SGP reaches the flow-domain convex optimum."""
+    phi, hist = abilene_solved
+    ref = core.flow_domain_optimum(abilene)
+    assert hist["final_cost"] <= ref * 1.01 + 1e-6
+    res = core.theorem1_residual(abilene, phi)
+    assert res["theorem1"] < 0.05
+    assert res["loop_free"]
+
+
+def test_paper_scaling_also_descends(abilene):
+    """Eq. 16 constants (scaling='paper'): guaranteed monotone descent."""
+    phi0 = core.spt_phi(abilene)
+    _, hist = core.run(abilene, phi0, n_iters=30, scaling="paper")
+    c = hist["costs"]
+    assert all(c[i + 1] <= c[i] + 1e-9 for i in range(len(c) - 1))
+    assert c[-1] < c[0]
+
+
+def test_asynchronous_convergence(abilene):
+    """Theorem 2: random per-(node,task) update subsets still converge."""
+    phi0 = core.spt_phi(abilene)
+    phi, hist = core.run(abilene, phi0, n_iters=400,
+                         rng=jax.random.PRNGKey(0), async_frac=0.5)
+    ref = core.flow_domain_optimum(abilene)
+    assert hist["final_cost"] <= ref * 1.05
+
+
+def test_baselines_ordering(abilene):
+    out = core.run_all(abilene, n_iters=250)
+    assert out["SGP"] <= out["SPOO"] * 1.001
+    assert out["SGP"] <= out["LCOR"] * 1.001
+    assert out["SGP"] <= out["LPR"] * 1.02  # LPR can be near-optimal
+
+
+def test_lemma1_insufficiency_fig3(abilene, abilene_solved):
+    """Fig. 3's phenomenon: a zero-traffic row can be arbitrarily bad
+    without affecting cost or the Lemma-1 (traffic-weighted) condition."""
+    net = abilene
+    phi, _ = abilene_solved
+    fl = core.compute_flows(net, phi)
+    t = np.asarray(fl.t_data)
+    s, i = np.argwhere(t < 1e-9)[0]
+    adj_row = np.asarray(net.adj)[i]
+    j = int(np.argmax(adj_row))
+    data = np.asarray(phi.data).copy()
+    data[s, i, :] = 0.0
+    data[s, i, j] = 1.0
+    bad = core.Phi(jnp.asarray(data), phi.result)
+    res = core.theorem1_residual(net, bad, tol=1e-6)
+    assert abs(float(core.total_cost(net, bad))
+               - float(core.total_cost(net, phi))) < 1e-5
+    assert res["lemma1"] < 0.05
+
+
+def test_node_failure_adaptivity(abilene, abilene_solved):
+    """Fig. 5b: re-converges after a node failure from a warm start."""
+    net = abilene
+    phi, _ = abilene_solved
+    dests = set(np.asarray(net.dest).tolist())
+
+    def keeps_connected(v):
+        adj = np.asarray(net.adj).copy()
+        adj[v, :] = adj[:, v] = False
+        keep = [i for i in range(net.V) if i != v]
+        reach = adj[np.ix_(keep, keep)].copy()
+        for _ in range(net.V):
+            reach = reach | (reach @ reach)
+        return reach.all() or (reach | np.eye(len(keep), dtype=bool)).all()
+
+    fail = next(v for v in range(net.V)
+                if v not in dests and keeps_connected(v))
+    net2 = core.fail_node(net, fail)
+    phi2 = core.refeasibilize(net2, phi)
+    c_broken = float(core.total_cost(net2, phi2))
+    phi3, hist = core.run(net2, phi2, n_iters=200)
+    assert hist["final_cost"] <= c_broken + 1e-9
+    assert bool(core.is_loop_free(net2, phi3))
+
+
+def test_distributed_matches_single(abilene):
+    phi0 = core.spt_phi(abilene)
+    _, h1 = core.run(abilene, phi0, n_iters=60)
+    _, h2 = core.run_distributed(abilene, phi0, n_iters=60)
+    assert abs(h1["final_cost"] - h2["final_cost"]) < 1e-3 * h1["final_cost"]
+
+
+def test_am_sweep_offload_distance():
+    """Fig. 5d: larger a_m -> computation moves closer to destination
+    (shorter average result paths)."""
+    spec = dataclasses.replace(core.TABLE_II["abilene"])
+    dist = {}
+    for a_scale, tag in [(0.1, "small"), (4.0, "large")]:
+        net = core.make_scenario(spec)
+        net = dataclasses.replace(net, a=jnp.full_like(net.a, a_scale))
+        net = core.enforce_feasibility(net)
+        phi, _ = core.run(net, core.spt_phi(net), n_iters=200)
+        fl = core.compute_flows(net, phi)
+        result_flow = float(jnp.sum(fl.f_result))
+        delivered = float(jnp.sum(net.a[:, None] * fl.g))
+        dist[tag] = result_flow / max(delivered, 1e-9)
+    assert dist["large"] <= dist["small"] + 1e-6
