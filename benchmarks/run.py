@@ -8,13 +8,15 @@ import sys
 import traceback
 
 ALL = ["fig4", "fig5b", "fig5c", "fig5d", "moe_balance", "kernels",
-       "roofline"]
+       "scale", "roofline"]
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
-                    help="include the slow SW-100 scenarios")
+                    help="include the slow SW-100 scenarios and force the "
+                         "dense/broadcast engines at every scale-sweep size "
+                         "(dense at V=1000 takes hours on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
     ap.add_argument("--report", default="dryrun_report.json")
@@ -43,6 +45,13 @@ def main(argv=None) -> int:
             elif name == "kernels":
                 from . import kernels_bench
                 kernels_bench.run()
+            elif name == "scale":
+                from . import scale_sweep
+                # default harness pass stays quick; --full unlocks the
+                # dense engine at every size for the speedup columns
+                scale_sweep.run(full=args.full,
+                                sizes=(20, 100, 500, 1000) if args.full
+                                else (20, 100))
             elif name == "roofline":
                 from . import roofline
                 roofline.run(args.report)

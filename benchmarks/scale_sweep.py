@@ -1,0 +1,95 @@
+"""Scale sweep: dense vs broadcast vs sparse flow engines (fig: none —
+the capability the paper's distributed Algorithm 1 promises but its
+V <= 22 Table II instances never exercise).
+
+For V in {20, 100, 500, 1000} small-world scenarios, reports
+
+  scale_flows_<method>_V<V>   us per jitted compute_flows call
+  scale_step_<method>_V<V>    us per jitted sgp_step call
+  scale_run_<method>_V<V>     final cost after N iterations (derived
+                              column = cost trajectory head)
+
+The dense and broadcast engines are skipped above ``DENSE_V_LIMIT`` by
+default — measured on CPU at V=500 the dense step takes 22.6 s vs 86 ms
+sparse (262×), so timing them at every size is the slow way to learn
+what one row already says.  Pass full=True to force them everywhere.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import core
+from repro.core.network import DENSE_V_LIMIT
+from repro.core.scenarios import ScenarioSpec
+from repro.core.sgp import make_consts, sgp_step
+
+from .common import emit, time_call
+
+SIZES = (20, 100, 500, 1000)
+N_ITERS = 10
+
+
+def _scenario(V: int) -> core.CECNetwork:
+    spec = ScenarioSpec("small_world", V=V, S=min(32, V), R=5, M=5,
+                        link="queue", comp="queue", d_mean=25, s_mean=25,
+                        seed=0)
+    return core.make_scenario(spec)
+
+
+def _bench_method(net, phi0, nbrs, method: str, n_timed: int = 3):
+    V = net.V
+    kw = {"nbrs": nbrs} if method == "sparse" else {}
+
+    flows = jax.jit(
+        lambda p: core.compute_flows(net, p, method, **kw).F)
+    us_fl = time_call(lambda: jax.block_until_ready(flows(phi0)), n=n_timed)
+    emit(f"scale_flows_{method}_V{V}", us_fl, f"Dmax={nbrs.Dmax}")
+
+    consts = make_consts(net, core.total_cost(net, phi0, method, **kw))
+
+    def step():
+        p, aux = sgp_step(net, phi0, consts, method=method, **kw)
+        jax.block_until_ready(p.data)
+
+    us_st = time_call(step, n=n_timed)
+    emit(f"scale_step_{method}_V{V}", us_st, "")
+
+    t0 = time.perf_counter()
+    _, hist = core.run(net, phi0, n_iters=N_ITERS, method=method)
+    dt = (time.perf_counter() - t0) * 1e6
+    head = "|".join(f"{c:.2f}" for c in hist["costs"][:4])
+    emit(f"scale_run_{method}_V{V}", dt / N_ITERS,
+         f"cost0->N:{head}->{hist['final_cost']:.2f}")
+    return us_st
+
+
+def run(full: bool = False, sizes=SIZES):
+    for V in sizes:
+        net = _scenario(V)
+        phi0 = core.spt_phi(net)
+        nbrs = core.build_neighbors(net.adj)
+        ref_us = {}
+        for method in ("dense", "broadcast", "sparse"):
+            if method != "sparse" and V > DENSE_V_LIMIT and not full:
+                emit(f"scale_step_{method}_V{V}", 0.0,
+                     f"skipped_{method}_infeasible")
+                continue
+            ref_us[method] = _bench_method(net, phi0, nbrs, method)
+        if "dense" in ref_us and "sparse" in ref_us:
+            emit(f"scale_speedup_V{V}",
+                 ref_us["dense"] / max(ref_us["sparse"], 1e-9),
+                 "dense_us/sparse_us_per_step")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="run the dense engine even at V=1000")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated V list, e.g. 20,100")
+    a = ap.parse_args()
+    sizes = tuple(int(v) for v in a.sizes.split(",")) if a.sizes else SIZES
+    print("name,us_per_call,derived")
+    run(full=a.full, sizes=sizes)

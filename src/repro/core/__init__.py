@@ -9,9 +9,10 @@ Public API:
   TABLE_II, make_scenario, fail_node                    (scenarios, §V)
 """
 from .costs import Cost, CostFamily, FAMILIES, LINEAR, QUEUE, SAT
-from .network import (CECNetwork, Flows, Phi, compute_flows, cost_of_flows,
-                      is_loop_free, offload_phi, refeasibilize, spt_phi,
-                      total_cost, uniform_phi)
+from .network import (CECNetwork, Flows, Neighbors, Phi, build_neighbors,
+                      compute_flows, cost_of_flows, gather_edges,
+                      is_loop_free, offload_phi, refeasibilize,
+                      scatter_edges, spt_phi, total_cost, uniform_phi)
 from .marginals import Marginals, compute_marginals, phi_gradients
 from .sgp import SGPConsts, make_consts, project_rows, run, sgp_step
 from .baselines import run_all, run_lcor, run_lpr, run_spoo
@@ -24,8 +25,9 @@ from . import moe_bridge, topologies
 
 __all__ = [
     "Cost", "CostFamily", "FAMILIES", "LINEAR", "QUEUE", "SAT",
-    "CECNetwork", "Flows", "Phi", "compute_flows", "cost_of_flows",
-    "is_loop_free", "offload_phi", "refeasibilize", "spt_phi",
+    "CECNetwork", "Flows", "Neighbors", "Phi", "build_neighbors",
+    "compute_flows", "cost_of_flows", "gather_edges", "is_loop_free",
+    "offload_phi", "refeasibilize", "scatter_edges", "spt_phi",
     "total_cost", "uniform_phi",
     "Marginals", "compute_marginals", "phi_gradients",
     "SGPConsts", "make_consts", "project_rows", "run", "sgp_step",

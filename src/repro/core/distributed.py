@@ -31,6 +31,18 @@ from .sgp import SGPConsts, _sgp_step_impl, make_consts
 AXIS = "tasks"
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions: `jax.shard_map(check_vma=)` on new
+    releases, `jax.experimental.shard_map.shard_map(check_rep=)` on
+    0.4.x (the replication/VMA check was renamed along the move)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 def task_mesh(n_devices: Optional[int] = None) -> Mesh:
     devs = np.asarray(jax.devices()[: n_devices or len(jax.devices())])
     return Mesh(devs, (AXIS,))
@@ -82,11 +94,10 @@ def make_distributed_step(mesh: Mesh, variant: str = "sgp",
             sigma=sigma, kappa=kappa, method=method, psum_axis=AXIS)
         return new_phi, aux["cost"]
 
-    sharded = jax.shard_map(
+    sharded = _shard_map(
         step, mesh=mesh,
         in_specs=(task_sharded, phi_spec, consts_spec, P()),
-        out_specs=(phi_spec, P()),
-        check_vma=False)
+        out_specs=(phi_spec, P()))
     return jax.jit(sharded)
 
 

@@ -12,8 +12,11 @@ and the Theorem-1 quantities
   δ⁻_ij = D'_ij + ρ⁻_j   (j ≠ 0)
   δ⁻_i0 = w_i C'_i + a ρ⁺_i
 
-Both "dense" (batched linear solve) and "broadcast" (V-round message
-passing, the paper's two-stage protocol) evaluations are provided.
+Three evaluations are provided: "dense" (batched linear solve),
+"broadcast" (V-round dense message passing, the paper's two-stage
+protocol), and "sparse" (neighbor-list message passing over
+[S, V, Dmax] edge-slot arrays, see network.Neighbors; δ and D' then
+come back in edge-slot layout too).
 """
 from __future__ import annotations
 
@@ -23,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from .costs import Cost
-from .network import CECNetwork, Flows, Phi
+from .network import (CECNetwork, Flows, Neighbors, Phi, build_neighbors,
+                      gather_edges, solve_downstream_sparse)
 
 BIG = 1e12  # marginal cost assigned to non-edges (never selected)
 
@@ -31,6 +35,10 @@ BIG = 1e12  # marginal cost assigned to non-edges (never selected)
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class Marginals:
+    """Marginal costs.  Under method="sparse", delta_data is
+    [S, V, Dmax+1] (last col = local offload), delta_result is
+    [S, V, Dmax] and Dp is [V, Dmax] — all aligned to Neighbors.out_nbr,
+    padded slots pinned to BIG (Dp to 0)."""
     rho_data: jnp.ndarray     # [S, V]  ∂T/∂r_i(d,m)
     rho_result: jnp.ndarray   # [S, V]  ∂T/∂t⁺_i(d,m)
     delta_data: jnp.ndarray   # [S, V, V+1]  δ⁻ (last col = local offload)
@@ -55,7 +63,12 @@ def _solve_downstream(phi_nbr: jnp.ndarray, b: jnp.ndarray,
 
 
 def compute_marginals(net: CECNetwork, phi: Phi, fl: Flows,
-                      method: str = "dense") -> Marginals:
+                      method: str = "dense",
+                      nbrs: Neighbors | None = None) -> Marginals:
+    if method == "sparse":
+        return _compute_marginals_sparse(
+            net, phi, fl,
+            nbrs if nbrs is not None else build_neighbors(net.adj))
     adjf = net.adj.astype(phi.data.dtype)
     Dp = jnp.where(net.adj, net.link_cost.d1(fl.F), 0.0)
     Cp = net.comp_cost.d1(fl.G)
@@ -80,6 +93,35 @@ def compute_marginals(net: CECNetwork, phi: Phi, fl: Flows,
     delta_data = jnp.concatenate(
         [delta_data_nbr, delta_local[..., None]], axis=-1)
     return Marginals(rho_data, rho_result, delta_data, delta_result, Dp, Cp)
+
+
+def _compute_marginals_sparse(net: CECNetwork, phi: Phi, fl: Flows,
+                              nbrs: Neighbors) -> Marginals:
+    """Eq. 9-13 as out-edge message passing in [S, V, Dmax] layout."""
+    Dp_sp = gather_edges(net.link_cost.d1(fl.F), nbrs)    # [V, Dmax]
+    Cp = net.comp_cost.d1(fl.G)
+
+    phi_d_sp = gather_edges(phi.data, nbrs)
+    phi_loc = phi.data[..., -1]
+    phi_r_sp = gather_edges(phi.result, nbrs)
+
+    # Stage 1 (paper broadcast stage 1): result marginals, from destination.
+    b_r = jnp.sum(phi_r_sp * Dp_sp[None], axis=-1)
+    rho_result = solve_downstream_sparse(phi_r_sp, b_r, nbrs)
+
+    # Stage 2: data marginals (needs ρ⁺ first, exactly as in the paper).
+    delta_local = net.w * Cp[None] + net.a[:, None] * rho_result  # [S, V]
+    b_d = jnp.sum(phi_d_sp * Dp_sp[None], axis=-1) + phi_loc * delta_local
+    rho_data = solve_downstream_sparse(phi_d_sp, b_d, nbrs)
+
+    # δ terms (Eq. 13) on edge slots; padded slots pinned to BIG.
+    ninf = jnp.where(nbrs.out_mask, 0.0, BIG)
+    delta_result = Dp_sp[None] + rho_result[:, nbrs.out_nbr] + ninf[None]
+    delta_data_nbr = Dp_sp[None] + rho_data[:, nbrs.out_nbr] + ninf[None]
+    delta_data = jnp.concatenate(
+        [delta_data_nbr, delta_local[..., None]], axis=-1)
+    return Marginals(rho_data, rho_result, delta_data, delta_result,
+                     Dp_sp, Cp)
 
 
 def phi_gradients(net: CECNetwork, phi: Phi, fl: Flows, mg: Marginals):

@@ -1,6 +1,6 @@
 """The CEC flow model (paper §II).
 
-State layout (all dense, fixed-shape, jit-friendly; V nodes, S tasks):
+State layout (fixed-shape, jit-friendly; V nodes, S tasks):
 
   adj        [V, V]   bool   directed edges (i -> j)
   dest       [S]      int    destination node of each task
@@ -9,7 +9,7 @@ State layout (all dense, fixed-shape, jit-friendly; V nodes, S tasks):
   w          [S, V]   float  computation weight w_{i, m_s}
   task_type  [S]      int    computation type m of each task (bookkeeping)
 
-Routing/offloading strategy phi (paper's φ):
+Routing/offloading strategy phi (paper's φ), stored dense:
 
   data    [S, V, V+1]  φ⁻: columns 0..V-1 forward to neighbor j, column V
                        is the local-offload fraction φ⁻_i0 ("0" in paper)
@@ -21,10 +21,27 @@ recursions (1)-(2) are nonsingular sparse triangular-like systems
   t⁻ = r + (Φ⁻)ᵀ t⁻        (data traffic)
   t⁺ = a·g + (Φ⁺)ᵀ t⁺      (result traffic),  g = t⁻ ⊙ φ_local
 
-solved either by batched dense ``jnp.linalg.solve`` (default; V ≤ a few
-hundred) or by |V|-step fixed-point iteration (`method="broadcast"`),
-which mirrors the paper's hop-by-hop broadcast and is what the
-distributed shard_map version uses.
+with three interchangeable engines (`method=`):
+
+  "dense"      batched ``jnp.linalg.solve`` on [S, V, V] systems —
+               O(S·V³); the reference for V up to a few hundred.
+  "broadcast"  |V|-round dense fixed-point iteration mirroring the
+               paper's hop-by-hop broadcast — O(S·V²·V) worst case;
+               what the distributed shard_map version uses.
+  "sparse"     neighbor-list message passing (this module's `Neighbors`):
+               edge quantities live in max-degree-padded [S, V, Dmax]
+               arrays aligned to `nbr[V, Dmax]` index lists, each round
+               is one gather + masked reduce, and rounds stop as soon as
+               the fixed point is reached — O(S·V·Dmax·diam) total.
+               This is the engine that scales to V ~ 10³⁺ arbitrary
+               topologies, exactly because Algorithm 1 is distributed.
+
+Sparse layout convention (used by marginals.py and sgp.py too): for an
+edge slot (i, e) with `nbrs.out_mask[i, e]`, `nbrs.out_nbr[i, e] = j`
+names the edge i -> j; padded slots point at node 0 and are masked.
+`x_sp[s, i, e]` then stores the per-edge quantity (φ_ij, δ_ij, f_ij…).
+`Neighbors` must be precomputed from a *concrete* adjacency (numpy,
+outside jit) via `build_neighbors` and threaded through `nbrs=`.
 """
 from __future__ import annotations
 
@@ -70,14 +87,140 @@ class Phi:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class Neighbors:
+    """Fixed max-degree padded neighbor lists of a concrete adjacency.
+
+    Out-edges of i sit in ascending-j order at slots e < out_deg(i);
+    `in_slot[j, e]` is the position of edge (in_nbr[j, e] -> j) inside
+    the *sender's* out-list, so incoming messages gather straight from
+    [S, V, Dmax] edge arrays without any transpose.
+    """
+    out_nbr: jnp.ndarray   # [V, Dmax]  int32, j of edge (i -> j); pad = 0
+    out_mask: jnp.ndarray  # [V, Dmax]  bool, slot is a real edge
+    in_nbr: jnp.ndarray    # [V, Dmax_in] int32, i of edge (i -> j); pad = 0
+    in_slot: jnp.ndarray   # [V, Dmax_in] int32, slot of (i -> j) in i's list
+    in_mask: jnp.ndarray   # [V, Dmax_in] bool
+
+    @property
+    def V(self) -> int:
+        return self.out_nbr.shape[0]
+
+    @property
+    def Dmax(self) -> int:
+        return self.out_nbr.shape[1]
+
+
+def build_neighbors(adj) -> Neighbors:
+    """Precompute `Neighbors` from a concrete [V, V] bool adjacency."""
+    if isinstance(adj, jax.core.Tracer):
+        raise ValueError(
+            "build_neighbors needs a concrete adjacency; precompute it "
+            "outside jit and pass it through the `nbrs=` argument")
+    A = np.asarray(adj, dtype=bool)
+    V = A.shape[0]
+    d_out = max(int(A.sum(axis=1).max()), 1)
+    d_in = max(int(A.sum(axis=0).max()), 1)
+    out_nbr = np.zeros((V, d_out), np.int32)
+    out_mask = np.zeros((V, d_out), bool)
+    slot_of = np.zeros((V, V), np.int32)  # slot of edge (i, j) in i's list
+    for i in range(V):
+        js = np.nonzero(A[i])[0]
+        out_nbr[i, :len(js)] = js
+        out_mask[i, :len(js)] = True
+        slot_of[i, js] = np.arange(len(js))
+    in_nbr = np.zeros((V, d_in), np.int32)
+    in_slot = np.zeros((V, d_in), np.int32)
+    in_mask = np.zeros((V, d_in), bool)
+    for j in range(V):
+        ks = np.nonzero(A[:, j])[0]
+        in_nbr[j, :len(ks)] = ks
+        in_slot[j, :len(ks)] = slot_of[ks, j]
+        in_mask[j, :len(ks)] = True
+    return Neighbors(jnp.asarray(out_nbr), jnp.asarray(out_mask),
+                     jnp.asarray(in_nbr), jnp.asarray(in_slot),
+                     jnp.asarray(in_mask))
+
+
+def gather_edges(x: jnp.ndarray, nbrs: Neighbors,
+                 fill: float = 0.0) -> jnp.ndarray:
+    """Gather per-(i, j) values onto edge slots: [..., V, K] -> [..., V, Dmax].
+
+    K may exceed V (e.g. Phi.data's V+1 columns); only neighbor columns
+    are ever indexed.  Padded slots read `fill`.
+    """
+    idx_i = jnp.arange(nbrs.V)[:, None]
+    g = x[..., idx_i, nbrs.out_nbr]
+    return jnp.where(nbrs.out_mask, g, fill)
+
+
+def scatter_edges(x_sp: jnp.ndarray, nbrs: Neighbors, K: int) -> jnp.ndarray:
+    """Scatter-add edge-slot values back to dense: [..., V, Dmax] -> [..., V, K]."""
+    idx_i = jnp.arange(nbrs.V)[:, None]
+    x_sp = jnp.where(nbrs.out_mask, x_sp, 0.0)
+    out = jnp.zeros(x_sp.shape[:-2] + (nbrs.V, K), x_sp.dtype)
+    return out.at[..., idx_i, nbrs.out_nbr].add(x_sp)
+
+
+def _fixed_point(step, x0: jnp.ndarray, max_rounds: int) -> jnp.ndarray:
+    """Iterate x <- step(x) until it stops changing (exact, loop-free
+    supports are nilpotent) or `max_rounds` is hit (cyclic-φ guard)."""
+
+    def cond(carry):
+        k, x, x_prev = carry
+        return jnp.logical_and(k < max_rounds, jnp.any(x != x_prev))
+
+    def body(carry):
+        k, x, _ = carry
+        return k + 1, step(x), x
+
+    _, x, _ = jax.lax.while_loop(cond, body, (jnp.asarray(1), step(x0), x0))
+    return x
+
+
+def _solve_traffic_sparse(phi_sp: jnp.ndarray, inject: jnp.ndarray,
+                          nbrs: Neighbors) -> jnp.ndarray:
+    """Solve t = inject + Φᵀ t by in-edge message passing.
+
+    phi_sp: [S, V, Dmax] out-edge fractions; inject: [S, V].
+    Each round, node j sums φ_{k->j} t_k over its in-edges — one gather
+    of (φ, t) at (in_nbr, in_slot) and a masked reduce.
+    """
+    phi_in = phi_sp[:, nbrs.in_nbr, nbrs.in_slot]     # [S, V, Dmax_in]
+    phi_in = jnp.where(nbrs.in_mask, phi_in, 0.0)
+
+    def step(t):
+        return inject + jnp.sum(phi_in * t[:, nbrs.in_nbr], axis=-1)
+
+    return _fixed_point(step, inject, max_rounds=nbrs.V)
+
+
+def solve_downstream_sparse(phi_sp: jnp.ndarray, b: jnp.ndarray,
+                            nbrs: Neighbors) -> jnp.ndarray:
+    """Solve ρ = b + Φ ρ by out-edge message passing (marginal recursions)."""
+    phi_sp = jnp.where(nbrs.out_mask, phi_sp, 0.0)
+
+    def step(rho):
+        return b + jnp.sum(phi_sp * rho[:, nbrs.out_nbr], axis=-1)
+
+    return _fixed_point(step, b, max_rounds=nbrs.V)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class Flows:
+    """Per-task traffic and link flows.
+
+    f_data / f_result are [S, V, V] dense under method="dense"/"broadcast"
+    and [S, V, Dmax] edge-slot arrays (aligned to `Neighbors.out_nbr`)
+    under method="sparse"; everything else is layout-independent.
+    """
     t_data: jnp.ndarray    # [S, V] data traffic t⁻
     t_result: jnp.ndarray  # [S, V] result traffic t⁺
     g: jnp.ndarray         # [S, V] computational input rate
     F: jnp.ndarray         # [V, V] total link flow
     G: jnp.ndarray         # [V] computation workload
-    f_data: jnp.ndarray    # [S, V, V] per-task data link flow
-    f_result: jnp.ndarray  # [S, V, V] per-task result link flow
+    f_data: jnp.ndarray    # [S, V, V] | [S, V, Dmax] per-task data link flow
+    f_result: jnp.ndarray  # [S, V, V] | [S, V, Dmax] per-task result link flow
 
 
 # --------------------------------------------------------------------------
@@ -103,8 +246,13 @@ def _solve_traffic(phi_nbr: jnp.ndarray, inject: jnp.ndarray,
     raise ValueError(f"unknown method {method}")
 
 
-def compute_flows(net: CECNetwork, phi: Phi, method: str = "dense") -> Flows:
+def compute_flows(net: CECNetwork, phi: Phi, method: str = "dense",
+                  nbrs: Neighbors | None = None) -> Flows:
     """Forward pass of the flow model: φ -> all traffic and flows."""
+    if method == "sparse":
+        return _compute_flows_sparse(net, phi,
+                                     nbrs if nbrs is not None
+                                     else build_neighbors(net.adj))
     adjf = net.adj.astype(phi.data.dtype)
     phi_d_nbr = phi.data[..., :-1] * adjf[None]   # mask non-edges
     phi_loc = phi.data[..., -1]                   # [S, V]
@@ -121,8 +269,27 @@ def compute_flows(net: CECNetwork, phi: Phi, method: str = "dense") -> Flows:
     return Flows(t_data, t_result, g, F, G, f_data, f_result)
 
 
-def total_cost(net: CECNetwork, phi: Phi, method: str = "dense") -> jnp.ndarray:
-    fl = compute_flows(net, phi, method)
+def _compute_flows_sparse(net: CECNetwork, phi: Phi,
+                          nbrs: Neighbors) -> Flows:
+    """Sparse flow engine: all edge quantities in [S, V, Dmax] layout."""
+    phi_d_sp = gather_edges(phi.data, nbrs)       # [S, V, Dmax]
+    phi_loc = phi.data[..., -1]                   # [S, V]
+    phi_r_sp = gather_edges(phi.result, nbrs)
+
+    t_data = _solve_traffic_sparse(phi_d_sp, net.r, nbrs)
+    g = t_data * phi_loc
+    t_result = _solve_traffic_sparse(phi_r_sp, net.a[:, None] * g, nbrs)
+
+    f_data = t_data[..., None] * phi_d_sp         # [S, V, Dmax]
+    f_result = t_result[..., None] * phi_r_sp
+    F = scatter_edges(jnp.sum(f_data + f_result, axis=0), nbrs, net.V)
+    G = jnp.sum(net.w * g, axis=0)
+    return Flows(t_data, t_result, g, F, G, f_data, f_result)
+
+
+def total_cost(net: CECNetwork, phi: Phi, method: str = "dense",
+               nbrs: Neighbors | None = None) -> jnp.ndarray:
+    fl = compute_flows(net, phi, method, nbrs=nbrs)
     return cost_of_flows(net, fl)
 
 
@@ -144,11 +311,8 @@ def uniform_phi(net: CECNetwork) -> Phi:
     return Phi(data, result)
 
 
-def shortest_path_tree(adj: np.ndarray, weight: np.ndarray,
-                       dest: int) -> np.ndarray:
-    """Next hop toward `dest` under edge weights (Floyd-Warshall, numpy).
-
-    Returns next_hop[i] (== dest's own entry is arbitrary/self)."""
+def _floyd_warshall(adj: np.ndarray, weight: np.ndarray):
+    """All-pairs (dist[i, j], next_hop[i, j]) under edge weights (numpy)."""
     V = adj.shape[0]
     INF = 1e30
     dist = np.where(adj, weight, INF).astype(np.float64)
@@ -159,7 +323,23 @@ def shortest_path_tree(adj: np.ndarray, weight: np.ndarray,
         better = alt < dist
         dist = np.where(better, alt, dist)
         nxt = np.where(better, nxt[:, k:k + 1], nxt)
+    return dist, nxt
+
+
+def shortest_path_tree(adj: np.ndarray, weight: np.ndarray,
+                       dest: int) -> np.ndarray:
+    """Next hop toward `dest` under edge weights (Floyd-Warshall, numpy).
+
+    Returns next_hop[i] (== dest's own entry is arbitrary/self)."""
+    _, nxt = _floyd_warshall(adj, weight)
     return nxt[:, dest]
+
+
+# above this node count, dense O(V³)-ish algorithms stop being practical:
+# spt_phi swaps Floyd-Warshall for per-destination Dijkstra (scipy
+# csgraph), and scenario plumbing / benchmarks switch to the sparse
+# engine (scenarios.enforce_feasibility, benchmarks.scale_sweep)
+DENSE_V_LIMIT = 200
 
 
 def spt_phi(net: CECNetwork, weight: np.ndarray | None = None) -> Phi:
@@ -177,11 +357,34 @@ def spt_phi(net: CECNetwork, weight: np.ndarray | None = None) -> Phi:
     data[..., -1] = 1.0
     result = np.zeros((S, V, V))
     dests = np.asarray(net.dest)
+
+    if V > DENSE_V_LIMIT:
+        # large graphs: Dijkstra distance-to-destination, next hop =
+        # argmin_j w_ij + dist(j, d).  The positive weight floor makes
+        # dist strictly decrease along chosen edges, so the tree is a DAG.
+        from scipy.sparse import csr_matrix
+        from scipy.sparse.csgraph import dijkstra
+        w = np.where(adj, np.maximum(weight, 1e-12), 0.0)
+        uniq = np.unique(dests)
+        # rows of dijkstra on the reversed graph = distances TO d
+        dist_to = dijkstra(csr_matrix(w.T), indices=uniq)       # [U, V]
+        idx = np.arange(V)
+        for k, d in enumerate(uniq):
+            cand = np.where(adj, w + dist_to[k][None, :], np.inf)
+            nx = np.argmin(cand, axis=1)
+            ok = (idx != d) & np.isfinite(np.min(cand, axis=1))
+            for s in np.nonzero(dests == d)[0]:
+                result[s, ok, nx[ok]] = 1.0
+        return Phi(jnp.asarray(data), jnp.asarray(result))
+
+    # small graphs: one Floyd-Warshall shared by every task
+    _, nxt = _floyd_warshall(adj, weight)
+    idx = np.arange(V)
     for s in range(S):
-        nxt = shortest_path_tree(adj, weight, int(dests[s]))
-        for i in range(V):
-            if i != dests[s] and nxt[i] >= 0:
-                result[s, i, nxt[i]] = 1.0
+        d = int(dests[s])
+        nx = nxt[:, d]
+        ok = (idx != d) & (nx >= 0)
+        result[s, ok, nx[ok]] = 1.0
     return Phi(jnp.asarray(data), jnp.asarray(result))
 
 
@@ -198,15 +401,7 @@ def offload_phi(net: CECNetwork, compute_nodes, weight: np.ndarray | None = None
     V, S = net.V, net.S
     if weight is None:
         weight = np.asarray(net.link_cost.d1(jnp.zeros((V, V))))
-    INF = 1e30
-    dist = np.where(adj, weight, INF).astype(np.float64)
-    np.fill_diagonal(dist, 0.0)
-    nxt = np.where(adj, np.arange(V)[None, :], -1)
-    for k in range(V):
-        alt = dist[:, k:k + 1] + dist[k:k + 1, :]
-        better = alt < dist
-        dist = np.where(better, alt, dist)
-        nxt = np.where(better, nxt[:, k:k + 1], nxt)
+    dist, nxt = _floyd_warshall(adj, weight)
 
     compute_nodes = list(compute_nodes)
     nearest = np.asarray(compute_nodes)[

@@ -18,7 +18,8 @@ import numpy as np
 
 from . import topologies
 from .costs import Cost, SAT
-from .network import CECNetwork, Phi, compute_flows, spt_phi
+from .network import (DENSE_V_LIMIT, CECNetwork, Phi, build_neighbors,
+                      compute_flows, spt_phi)
 
 
 @dataclasses.dataclass
@@ -48,13 +49,27 @@ TABLE_II = {
     "geant": ScenarioSpec("geant", 22, 40, 7, 5, "queue", "queue", 20, 20),
     "sw_linear": ScenarioSpec("small_world", 100, 120, 10, 5, "linear", "linear", 20, 20),
     "sw_queue": ScenarioSpec("small_world", 100, 120, 10, 5, "queue", "queue", 20, 20),
+    # Large-scale rows (beyond the paper's Table II): exercise the sparse
+    # neighbor-list engine at V ~ 10³ where dense [S, V, V] solves are
+    # impractical.  Same sampling recipe, wider graphs, fewer sources.
+    "sw_1000": ScenarioSpec("small_world", 1000, 64, 10, 5, "queue", "queue", 30, 30),
+    "grid_1024": ScenarioSpec("grid", 1024, 64, 10, 5, "queue", "queue", 30, 30),
 }
 
 
 def _mk_adj(spec: ScenarioSpec) -> np.ndarray:
     gen = topologies.TOPOLOGIES[spec.topology]
-    if spec.topology in ("connected_er", "small_world"):
-        return gen(seed=spec.seed)
+    if spec.topology == "connected_er":
+        return gen(V=spec.V or 20, seed=spec.seed)
+    if spec.topology == "small_world":
+        V = spec.V or 100
+        # keep the Table II SW-100 edge counts; scale them linearly with V
+        return gen(V=V, n_short=V, n_long=int(1.2 * V), seed=spec.seed)
+    if spec.topology == "grid":
+        side = int(round((spec.V or 1024) ** 0.5))
+        if side * side != (spec.V or 1024):
+            raise ValueError(f"grid topology needs a square V, got {spec.V}")
+        return gen(side)
     return gen()
 
 
@@ -110,7 +125,11 @@ def enforce_feasibility(net: CECNetwork, margin: float = 0.75,
     """Scale queue capacities so φ⁰ keeps flows below margin*SAT*capacity."""
     if phi0 is None:
         phi0 = spt_phi(net)
-    fl = compute_flows(net, phi0)
+    if net.V > DENSE_V_LIMIT:
+        fl = compute_flows(net, phi0, "sparse",
+                           nbrs=build_neighbors(net.adj))
+    else:
+        fl = compute_flows(net, phi0)
     limit = margin * SAT
     if net.link_cost.family == "queue":
         F = np.asarray(fl.F)

@@ -36,7 +36,10 @@ import numpy as np
 
 from .costs import Cost
 from .marginals import BIG, Marginals, compute_marginals
-from .network import CECNetwork, Flows, Phi, compute_flows, cost_of_flows
+from .network import (CECNetwork, Flows, Neighbors, Phi, build_neighbors,
+                      compute_flows, cost_of_flows, gather_edges,
+                      scatter_edges, _fixed_point)
+from ..kernels import ops as kernel_ops
 
 SUPPORT_TOL = 1e-9   # φ below this is treated as zero support
 SNAP_TOL = 1e-12     # post-projection snap-to-zero
@@ -161,7 +164,12 @@ def project_rows(phi_row: jnp.ndarray, delta: jnp.ndarray, M: jnp.ndarray,
     # guard: if everything snapped to zero, fall back to argmin-δ one-hot
     onehot = jax.nn.one_hot(jnp.argmin(d, axis=-1), d.shape[-1],
                             dtype=phi_row.dtype)
-    return jnp.where(s > 0.0, v / jnp.maximum(s, 1e-30), onehot)
+    v = jnp.where(s > 0.0, v / jnp.maximum(s, 1e-30), onehot)
+    # fully-blocked rows have no feasible point on the simplex: the
+    # argmin fallback above would pick a *blocked* coordinate (d is
+    # all-BIG).  Return the all-zero row instead; callers must mask such
+    # rows out (they only arise at result-flow destinations).
+    return jnp.where(jnp.any(permitted, axis=-1, keepdims=True), v, 0.0)
 
 
 def gp_rows(phi_row: jnp.ndarray, delta: jnp.ndarray, t: jnp.ndarray,
@@ -184,7 +192,77 @@ def gp_rows(phi_row: jnp.ndarray, delta: jnp.ndarray, t: jnp.ndarray,
     v = v + onehot * vmin
     v = jnp.where(v > SNAP_TOL, v, 0.0)
     s = jnp.sum(v, axis=-1, keepdims=True)
-    return jnp.where(s > 0.0, v / jnp.maximum(s, 1e-30), onehot)
+    v = jnp.where(s > 0.0, v / jnp.maximum(s, 1e-30), onehot)
+    # fully-blocked rows: all-zero (see project_rows)
+    return jnp.where(jnp.any(permitted, axis=-1, keepdims=True), v, 0.0)
+
+
+def _project(phi_rows: jnp.ndarray, delta: jnp.ndarray, M: jnp.ndarray,
+             permitted: jnp.ndarray, impl: Optional[str]) -> jnp.ndarray:
+    """Dispatch the [S, V, K] row batch of Eq. 15 QPs.
+
+    impl="oracle" keeps the in-module pure-jnp `project_rows`; anything
+    else flattens to [S·V, K] and goes through
+    `repro.kernels.ops.simplex_project` (backend dispatch: Pallas kernel
+    on TPU, jnp reference on CPU, "pallas_interpret" for validation —
+    the wrapper pads K to the 128-lane boundary for the kernel paths).
+    """
+    if impl == "oracle":
+        return project_rows(phi_rows, delta, M, permitted)
+    S, V, K = phi_rows.shape
+    out = kernel_ops.simplex_project(
+        phi_rows.reshape(S * V, K), delta.reshape(S * V, K),
+        M.reshape(S * V, K), permitted.reshape(S * V, K), impl=impl)
+    return out.reshape(S, V, K)
+
+
+# ------------------------------------------------- sparse (neighbor-list) ops
+def _taint_sparse(sup: jnp.ndarray, rho: jnp.ndarray,
+                  nbrs: Neighbors) -> jnp.ndarray:
+    """_taint in edge-slot layout: sup [S, V, Dmax], gather-based rounds."""
+    improper = sup & (rho[:, nbrs.out_nbr] >= rho[:, :, None])
+    has_improper = jnp.any(improper, axis=-1)
+
+    def step(t):
+        return has_improper | jnp.any(sup & t[:, nbrs.out_nbr], axis=-1)
+
+    return _fixed_point(step, has_improper, max_rounds=nbrs.V)
+
+
+def _max_path_len_sparse(sup: jnp.ndarray, nbrs: Neighbors) -> jnp.ndarray:
+    """_max_path_len in edge-slot layout."""
+    h0 = jnp.zeros(sup.shape[:2], dtype=jnp.float32)
+
+    def step(h):
+        return jnp.max(jnp.where(sup, 1.0 + h[:, nbrs.out_nbr], 0.0),
+                       axis=-1)
+
+    return _fixed_point(step, h0, max_rounds=nbrs.V)
+
+
+def blocked_sets_sparse(net: CECNetwork, phi: Phi, mg: Marginals,
+                        nbrs: Neighbors):
+    """`blocked_sets` over edge slots: permitted masks [S, V, Dmax(+1)]."""
+    sup_d = gather_edges(phi.data, nbrs) > SUPPORT_TOL
+    sup_r = gather_edges(phi.result, nbrs) > SUPPORT_TOL
+
+    taint_d = _taint_sparse(sup_d, mg.rho_data, nbrs)
+    taint_r = _taint_sparse(sup_r, mg.rho_result, nbrs)
+
+    def permitted(sup, rho, taint):
+        uphill = rho[:, nbrs.out_nbr] >= rho[:, :, None]
+        block_new = (~sup) & (uphill | taint[:, nbrs.out_nbr])
+        return nbrs.out_mask[None] & ~block_new
+
+    perm_d_nbr = permitted(sup_d, mg.rho_data, taint_d)
+    perm_r = permitted(sup_r, mg.rho_result, taint_r)
+
+    S, V = net.S, net.V
+    perm_d = jnp.concatenate(
+        [perm_d_nbr, jnp.ones((S, V, 1), dtype=bool)], axis=-1)
+    is_dest = jnp.arange(V)[None] == net.dest[:, None]
+    perm_r = jnp.where(is_dest[..., None], False, perm_r)
+    return perm_d, perm_r
 
 
 # ------------------------------------------------------------------ the step
@@ -198,13 +276,16 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
                    scaling: str = "adaptive",
                    sigma: jnp.ndarray | float = 1.0,
                    kappa: jnp.ndarray | float = 1.0,
-                   psum_axis: Optional[str] = None):
+                   psum_axis: Optional[str] = None,
+                   proj_impl: Optional[str] = None,
+                   nbrs: Optional[Neighbors] = None):
     """One synchronized iteration of Algorithm 1 over every (node, task).
 
     mask_* : [S, V] bool — rows that update this iteration (Theorem 2
              asynchrony; default: all).
     allowed_* : extra permission masks for restricted baselines
              (SPOO/LCOR); ANDed into the blocked-set permission.
+             Always given in the dense [S, V, V+1] / [S, V, V] layout.
     use_blocking=False skips the taint protocol — only valid when the
              allowed masks themselves guarantee loop-freedom (SPOO's
              fixed shortest-path tree).
@@ -216,8 +297,17 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
                           CURRENT flows times safety factor `sigma`; the
                           driver enforces monotone descent by rejecting
                           uphill steps and raising sigma (backtracking).
+    proj_impl : QP projection backend, see `_project` ("oracle" = the
+             in-module jnp path; default = kernels.ops dispatch).
+    nbrs   : precomputed `Neighbors`; required when method="sparse"
+             (the whole iteration then runs in [S, V, Dmax] edge-slot
+             layout and only scatters back to the dense Phi at the end).
     """
-    fl = compute_flows(net, phi, method)
+    sparse = method == "sparse"
+    if sparse and nbrs is None:
+        raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
+                         "precomputed outside jit")
+    fl = compute_flows(net, phi, method, nbrs=nbrs)
     if psum_axis is not None:
         # Distributed mode (shard_map over the task axis): per-task
         # traffic is local; total link flow / workload — the only
@@ -227,31 +317,53 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
             fl,
             F=jax.lax.psum(fl.F, psum_axis),
             G=jax.lax.psum(fl.G, psum_axis))
-    mg = compute_marginals(net, phi, fl, method)
-    if use_blocking:
-        perm_d, perm_r = blocked_sets(net, phi, mg)
-    else:
-        S, V = net.S, net.V
-        perm_d = jnp.concatenate(
-            [jnp.broadcast_to(net.adj[None], (S, V, V)),
-             jnp.ones((S, V, 1), dtype=bool)], axis=-1)
-        perm_r = jnp.broadcast_to(net.adj[None], (S, V, V))
-        is_dest_ = jnp.arange(V)[None] == net.dest[:, None]
-        perm_r = jnp.where(is_dest_[..., None], False, perm_r)
-    if allowed_data is not None:
-        perm_d = perm_d & allowed_data
-    if allowed_result is not None:
-        perm_r = perm_r & allowed_result
+    mg = compute_marginals(net, phi, fl, method, nbrs=nbrs)
 
     S, V = net.S, net.V
-    adj = net.adj[None]
-    sup_d = (phi.data[..., :-1] > SUPPORT_TOL) & adj
-    sup_r = (phi.result > SUPPORT_TOL) & adj
+    is_dest = jnp.arange(V)[None] == net.dest[:, None]
+
+    # row layout: edge slots ([S, V, Dmax(+1)]) when sparse, else dense
+    if sparse:
+        adj_e = nbrs.out_mask[None]
+        phi_d_rows = jnp.concatenate(
+            [gather_edges(phi.data, nbrs), phi.data[..., -1:]], axis=-1)
+        phi_r_rows = gather_edges(phi.result, nbrs)
+    else:
+        adj_e = net.adj[None]
+        phi_d_rows = phi.data
+        phi_r_rows = phi.result
+    K = adj_e.shape[-1]
+    sup_d = (phi_d_rows[..., :-1] > SUPPORT_TOL) & adj_e
+    sup_r = (phi_r_rows > SUPPORT_TOL) & adj_e
+
+    if use_blocking:
+        if sparse:
+            perm_d, perm_r = blocked_sets_sparse(net, phi, mg, nbrs)
+        else:
+            perm_d, perm_r = blocked_sets(net, phi, mg)
+    else:
+        perm_d = jnp.concatenate(
+            [jnp.broadcast_to(adj_e, (S, V, K)),
+             jnp.ones((S, V, 1), dtype=bool)], axis=-1)
+        perm_r = jnp.broadcast_to(adj_e, (S, V, K))
+        perm_r = jnp.where(is_dest[..., None], False, perm_r)
+    if allowed_data is not None:
+        if sparse:
+            allowed_data = jnp.concatenate(
+                [gather_edges(allowed_data, nbrs, fill=False),
+                 allowed_data[..., -1:]], axis=-1)
+        perm_d = perm_d & allowed_data
+    if allowed_result is not None:
+        if sparse:
+            allowed_result = gather_edges(allowed_result, nbrs, fill=False)
+        perm_r = perm_r & allowed_result
 
     if variant == "sgp":
         # Eq. 16 scaling matrices.
-        h_r = _max_path_len(sup_r)                            # [S, V]
-        h_d = _max_path_len(sup_d)
+        h_r = (_max_path_len_sparse(sup_r, nbrs) if sparse
+               else _max_path_len(sup_r))                     # [S, V]
+        h_d = (_max_path_len_sparse(sup_d, nbrs) if sparse
+               else _max_path_len(sup_d))
         n_r = jnp.sum(perm_r, axis=-1).astype(phi.result.dtype)
         n_d = jnp.sum(perm_d, axis=-1).astype(phi.data.dtype)
 
@@ -262,11 +374,19 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
             A_comp = net.comp_cost.d2(fl.G) * sigma
             A_max = jnp.maximum(jnp.max(A_link), jnp.max(A_comp))
 
+        if sparse:
+            A_link_e = gather_edges(A_link, nbrs)[None]       # [1, V, Dmax]
+            hj_r = h_r[:, nbrs.out_nbr]                       # h at edge head
+            hj_d = h_d[:, nbrs.out_nbr]
+        else:
+            A_link_e = A_link[None]
+            hj_r = h_r[:, None, :]
+            hj_d = h_d[:, None, :]
+
         kap = jnp.asarray(kappa, dtype=phi.result.dtype)
-        diag_r = A_link[None] + kap * n_r[..., None] * h_r[:, None, :] * A_max
+        diag_r = A_link_e + kap * n_r[..., None] * hj_r * A_max
         Mr = 0.5 * fl.t_result[..., None] * diag_r
-        diag_d_nbr = (A_link[None]
-                      + kap * n_d[..., None] * h_d[:, None, :] * A_max)
+        diag_d_nbr = A_link_e + kap * n_d[..., None] * hj_d * A_max
         a2 = (net.a ** 2)[:, None]
         diag_d_loc = (A_comp[None]
                       + kap * n_d * a2 * (1.0 + h_r) * A_max)
@@ -276,18 +396,21 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
         Mr = jnp.maximum(Mr, consts.min_scale * fl.t_result[..., None])
         Md = jnp.maximum(Md, consts.min_scale * fl.t_data[..., None])
 
-        new_d = project_rows(phi.data, mg.delta_data, Md, perm_d)
-        new_r = project_rows(phi.result, mg.delta_result, Mr, perm_r)
+        new_d = _project(phi_d_rows, mg.delta_data, Md, perm_d, proj_impl)
+        new_r = _project(phi_r_rows, mg.delta_result, Mr, perm_r, proj_impl)
     elif variant == "gp":
-        new_d = gp_rows(phi.data, mg.delta_data, fl.t_data, perm_d, beta)
-        new_r = gp_rows(phi.result, mg.delta_result, fl.t_result, perm_r, beta)
+        new_d = gp_rows(phi_d_rows, mg.delta_data, fl.t_data, perm_d, beta)
+        new_r = gp_rows(phi_r_rows, mg.delta_result, fl.t_result, perm_r,
+                        beta)
     else:
         raise ValueError(variant)
 
     # zero-traffic rows jump one-hot to the δ-argmin over permitted coords
     def onehot_min(delta, perm, dtype):
         d = jnp.where(perm, delta, BIG)
-        return jax.nn.one_hot(jnp.argmin(d, axis=-1), d.shape[-1], dtype=dtype)
+        oh = jax.nn.one_hot(jnp.argmin(d, axis=-1), d.shape[-1], dtype=dtype)
+        # fully-blocked rows (result destinations) stay all-zero
+        return jnp.where(jnp.any(perm, axis=-1, keepdims=True), oh, 0.0)
 
     jump_d = onehot_min(mg.delta_data, perm_d, phi.data.dtype)
     jump_r = onehot_min(mg.delta_result, perm_r, phi.result.dtype)
@@ -295,8 +418,14 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
     new_r = jnp.where((fl.t_result > TRAFFIC_EPS)[..., None], new_r, jump_r)
 
     # destination rows carry no result flow
-    is_dest = jnp.arange(V)[None] == net.dest[:, None]
     new_r = jnp.where(is_dest[..., None], 0.0, new_r)
+
+    # scatter edge-slot rows back to the dense Phi layout
+    if sparse:
+        new_d = jnp.concatenate(
+            [scatter_edges(new_d[..., :-1], nbrs, V), new_d[..., -1:]],
+            axis=-1)
+        new_r = scatter_edges(new_r, nbrs, V)
 
     # asynchronous row masks (Theorem 2)
     if mask_data is not None:
@@ -311,7 +440,7 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
 sgp_step = jax.jit(
     _sgp_step_impl,
     static_argnames=("variant", "method", "use_blocking", "scaling",
-                     "psum_axis"))
+                     "psum_axis", "proj_impl"))
 
 
 # ------------------------------------------------------------------- driver
@@ -322,8 +451,18 @@ def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
         rng: Optional[jax.Array] = None, async_frac: float = 0.0,
         tol: float = 0.0, callback=None, use_blocking: bool = True,
         refresh_every: int = 20, scaling: str = "adaptive",
-        kappa: float = 0.0):
+        kappa: float = 0.0, proj_impl: Optional[str] = None):
     """Python-loop driver around the jitted step.
+
+    method="sparse" precomputes the neighbor lists once (numpy, outside
+    jit) and runs every step in the O(S·V·Dmax·diam) edge-slot engine —
+    use it for V beyond a few hundred.
+
+    callback, if given, is invoked as ``callback(it, phi, aux, accepted)``
+    where `phi` is the iterate AFTER the accept/reject decision (the new
+    iterate on accepted steps, the reverted one otherwise), `accepted`
+    says which happened, and `aux` (cost/flows/marginals) describes the
+    iterate the step started FROM.
 
     async_frac > 0 simulates Theorem-2 asynchrony: each iteration only a
     random fraction of (node, task) rows update.
@@ -345,7 +484,8 @@ def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
     from .network import total_cost as _tc
     if scaling == "paper":
         kappa = 1.0  # Eq. 16 verbatim
-    T0 = _tc(net, phi0, method)
+    nbrs = build_neighbors(net.adj) if method == "sparse" else None
+    T0 = _tc(net, phi0, method, nbrs=nbrs)
     consts = make_consts(net, T0, min_scale)
     phi = phi0
     costs = [float(T0)]
@@ -365,11 +505,13 @@ def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
                                 allowed_data=allowed_data,
                                 allowed_result=allowed_result, method=method,
                                 use_blocking=use_blocking, scaling=scaling,
-                                sigma=sigma, kappa=kappa)
-        new_cost = float(_tc(net, phi_new, method))
-        if not np.isfinite(new_cost) or (
-                scaling == "adaptive" and variant == "sgp"
-                and new_cost > costs[-1] * (1.0 + 1e-12)):
+                                sigma=sigma, kappa=kappa,
+                                proj_impl=proj_impl, nbrs=nbrs)
+        new_cost = float(_tc(net, phi_new, method, nbrs=nbrs))
+        accepted = np.isfinite(new_cost) and not (
+            scaling == "adaptive" and variant == "sgp"
+            and new_cost > costs[-1] * (1.0 + 1e-12))
+        if not accepted:
             sigma *= 4.0          # reject: step too aggressive
             n_rejected += 1
             if sigma > 1e12:      # numerically stuck: stop
@@ -379,7 +521,7 @@ def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
             costs.append(new_cost)
             sigma = max(sigma / 1.5, 1.0)
         if callback is not None:
-            callback(it, phi, aux)
+            callback(it, phi, aux, accepted)
         if tol > 0.0 and len(costs) > 4:
             if abs(costs[-2] - costs[-1]) <= tol * max(costs[-1], 1e-12):
                 break

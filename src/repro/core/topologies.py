@@ -148,6 +148,21 @@ def small_world(V: int = 100, n_short: int = 100, n_long: int = 120,
     return _sym(V, edges)
 
 
+def grid(side: int = 32) -> np.ndarray:
+    """side × side 4-connected mesh (the classic data-center/NoC layout);
+    side=32 -> 1024 nodes, 1984 undirected links."""
+    V = side * side
+    edges = []
+    for i in range(side):
+        for j in range(side):
+            u = i * side + j
+            if j + 1 < side:
+                edges.append((u, u + 1))
+            if i + 1 < side:
+                edges.append((u, u + side))
+    return _sym(V, edges)
+
+
 TOPOLOGIES = {
     "connected_er": connected_er,
     "balanced_tree": balanced_tree,
@@ -156,4 +171,5 @@ TOPOLOGIES = {
     "lhc": lhc,
     "geant": geant,
     "small_world": small_world,
+    "grid": grid,
 }

@@ -57,6 +57,9 @@ def _kernel(phi_ref, delta_ref, M_ref, perm_ref, out_ref, *, n_iter: int):
     onehot = (jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
               == jnp.argmin(d, axis=-1, keepdims=True)).astype(jnp.float32)
     v = jnp.where(s > 0.0, v / jnp.maximum(s, 1e-30), onehot)
+    # fully-blocked rows (incl. row padding): all-zero, matching the
+    # core.sgp.project_rows oracle — never a one-hot on a blocked coord.
+    v = jnp.where(jnp.any(perm, axis=-1, keepdims=True), v, 0.0)
     out_ref[...] = v.astype(out_ref.dtype)
 
 
@@ -70,7 +73,7 @@ def simplex_project(phi: jnp.ndarray, delta: jnp.ndarray, M: jnp.ndarray,
     R, K = phi.shape
     block_rows = min(block_rows, R)
     # pad rows to a multiple of the block (padded rows are fully blocked
-    # -> their argmin-fallback output is discarded by the caller)
+    # -> the kernel emits all-zero rows for them)
     Rp = ((R + block_rows - 1) // block_rows) * block_rows
     if Rp != R:
         pad = ((0, Rp - R), (0, 0))

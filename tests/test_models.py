@@ -30,6 +30,7 @@ def _batch(cfg):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", configs.ARCH_IDS)
 def test_arch_smoke(arch):
     """Reduced same-family config: one forward/train step on CPU,
@@ -57,6 +58,7 @@ def test_arch_smoke(arch):
     assert bool(jnp.all(jnp.isfinite(logits)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-130m",
                                   "olmoe-1b-7b", "jamba-v0.1-52b"])
 def test_decode_matches_forward(arch):

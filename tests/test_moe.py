@@ -37,6 +37,7 @@ def _routing(cfg, params, x):
     return top_idx, pos, keep, C
 
 
+@pytest.mark.slow
 def test_vjp_matches_scatter_autodiff(setup):
     """The gather-only custom VJPs == autodiff through a scatter impl."""
     cfg, params, state = setup
@@ -111,6 +112,7 @@ def test_group_invariance(setup):
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_ep_scatter_variant_equivalent(setup):
     """The EP wire-optimized path (scatter-add combine) == gather path,
     forward and gradients (§Perf iteration, layers/moe.py)."""

@@ -23,6 +23,7 @@ def engine():
     return cfg, eng
 
 
+@pytest.mark.slow
 def test_engine_completes_requests(engine):
     cfg, eng = engine
     rng = np.random.RandomState(0)
@@ -34,6 +35,7 @@ def test_engine_completes_requests(engine):
     assert all(0 <= t < cfg.vocab for r in reqs for t in r.out)
 
 
+@pytest.mark.slow
 def test_engine_continuous_batching(engine):
     """More requests than slots: admission reuses freed slots."""
     cfg, eng = engine
@@ -44,6 +46,7 @@ def test_engine_continuous_batching(engine):
     assert all(r.done for r in reqs)
 
 
+@pytest.mark.slow
 def test_router_plan_and_residual():
     pods = [PodSpec(30.0), PodSpec(20.0, speed=0.8), PodSpec(40.0, 1.2)]
     demand = np.array([[2.0, 1.0], [1.0, 2.0]])
@@ -59,6 +62,7 @@ def test_router_plan_and_residual():
     assert s["pod_utilization"].max() < 1.0
 
 
+@pytest.mark.slow
 def test_router_failover_redistributes():
     pods = [PodSpec(30.0), PodSpec(30.0), PodSpec(30.0)]
     demand = np.array([[3.0, 3.0]])

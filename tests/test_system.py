@@ -1,4 +1,8 @@
-"""End-to-end behaviour of the paper's system (flow model + SGP)."""
+"""End-to-end behaviour of the paper's system (flow model + SGP).
+
+Whole module is `slow` (multi-hundred-iteration SGP runs); tier-1 core
+coverage lives in test_sparse.py and test_costs.py.
+"""
 import dataclasses
 
 import jax
@@ -7,6 +11,8 @@ import numpy as np
 import pytest
 
 from repro import core
+
+pytestmark = pytest.mark.slow
 
 
 @pytest.fixture(scope="module")

@@ -42,6 +42,7 @@ def test_loss_decreases(tiny):
     assert losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence(tiny):
     """Accumulated grads == full-batch grads (all labels valid so the
     per-microbatch means average exactly)."""
@@ -64,6 +65,7 @@ def test_microbatch_equivalence(tiny):
                                    rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_straggler_renormalization(tiny):
     """Dropping microbatch 1 == training on microbatch 0 alone."""
     cfg, model, params = tiny
@@ -158,8 +160,8 @@ def test_elastic_reshard(tiny):
     """Restore-and-reshard onto a different (1-device) mesh."""
     cfg, model, params = tiny
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((1,), ("model",))
     pspecs = jax.tree.map(lambda _: P(), params)
     placed = ckpt.reshard(params, mesh, pspecs)
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(placed)):
