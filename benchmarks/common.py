@@ -3,6 +3,10 @@ import time
 
 import numpy as np
 
+# every emit() lands here too, so benchmarks.run can dump the whole
+# session as JSON (the BENCH_*.json perf trajectory)
+ROWS: list = []
+
 
 def time_call(fn, n: int = 5, warmup: int = 1):
     """Median wall time per call in microseconds."""
@@ -16,5 +20,16 @@ def time_call(fn, n: int = 5, warmup: int = 1):
     return float(np.median(ts))
 
 
-def emit(name: str, us_per_call: float, derived):
+def emit(name: str, us_per_call: float, derived, **cols):
+    """Print one ``name,us_per_call,derived`` CSV row and record it.
+
+    Extra keyword columns (e.g. engine_impl=...) are appended to the
+    printed derived field as ``k=v`` and stored as JSON keys.
+    """
+    row = {"name": name, "us_per_call": float(us_per_call),
+           "derived": str(derived)}
+    row.update({k: v for k, v in cols.items() if v is not None})
+    ROWS.append(row)
+    extra = ";".join(f"{k}={v}" for k, v in cols.items() if v is not None)
+    derived = f"{derived};{extra}" if extra and derived else (extra or derived)
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)

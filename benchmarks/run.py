@@ -1,11 +1,17 @@
 """Benchmark harness — one entry per paper table/figure + system
-benches.  Prints ``name,us_per_call,derived`` CSV rows.
+benches.  Prints ``name,us_per_call,derived`` CSV rows and, by default,
+dumps every row to a JSON report (``--json``, the ``BENCH_*.json`` perf
+trajectory) — including the scale sweep's sparse rows, so the
+ref-vs-pallas engine numbers are tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4,...]
 """
 import argparse
+import json
 import sys
 import traceback
+
+from . import common
 
 ALL = ["fig4", "fig5b", "fig5c", "fig5d", "moe_balance", "kernels",
        "scale", "roofline"]
@@ -20,6 +26,9 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
     ap.add_argument("--report", default="dryrun_report.json")
+    ap.add_argument("--json", default="BENCH_report.json",
+                    help="write every emitted row to this JSON file "
+                         "('' disables)")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else ALL
 
@@ -47,11 +56,10 @@ def main(argv=None) -> int:
                 kernels_bench.run()
             elif name == "scale":
                 from . import scale_sweep
-                # default harness pass stays quick; --full unlocks the
-                # dense engine at every size for the speedup columns
-                scale_sweep.run(full=args.full,
-                                sizes=(20, 100, 500, 1000) if args.full
-                                else (20, 100))
+                # sparse rows run at every size (they're what the perf
+                # trajectory tracks); only the dense/broadcast engines
+                # stay capped at DENSE_V_LIMIT unless --full
+                scale_sweep.run(full=args.full)
             elif name == "roofline":
                 from . import roofline
                 roofline.run(args.report)
@@ -61,6 +69,11 @@ def main(argv=None) -> int:
             failures += 1
             print(f"{name},0.0,FAILED", flush=True)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(common.ROWS, f, indent=1)
+        print(f"# wrote {len(common.ROWS)} rows to {args.json}",
+              file=sys.stderr)
     return 1 if failures else 0
 
 

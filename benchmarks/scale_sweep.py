@@ -8,6 +8,15 @@ For V in {20, 100, 500, 1000} small-world scenarios, reports
   scale_step_<method>_V<V>    us per jitted sgp_step call
   scale_run_<method>_V<V>     final cost after N iterations (derived
                               column = cost trajectory head)
+  scale_rounds_<impl>_V<V>    us per single message-passing round of
+                              kernels.ops.edge_rounds (the sparse
+                              engine's inner dispatch), per backend
+
+Sparse rows carry an ``engine_impl`` column: "ref" is the jnp
+one-gather-per-round path, "pallas" the fused single-launch kernel
+("pallas_interpret" when benchmarked on CPU — interpreter overhead, NOT
+representative of TPU latency; the TPU win is all the per-round
+dispatches it removes).
 
 The dense and broadcast engines are skipped above ``DENSE_V_LIMIT`` by
 default — measured on CPU at V=500 the dense step takes 22.6 s vs 86 ms
@@ -17,12 +26,12 @@ what one row already says.  Pass full=True to force them everywhere.
 import time
 
 import jax
-import numpy as np
 
 from repro import core
 from repro.core.network import DENSE_V_LIMIT
 from repro.core.scenarios import ScenarioSpec
 from repro.core.sgp import make_consts, sgp_step
+from repro.kernels import ops as kernel_ops
 
 from .common import emit, time_call
 
@@ -37,14 +46,21 @@ def _scenario(V: int) -> core.CECNetwork:
     return core.make_scenario(spec)
 
 
-def _bench_method(net, phi0, nbrs, method: str, n_timed: int = 3):
+def _kernel_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+
+def _bench_method(net, phi0, nbrs, method: str, engine_impl=None,
+                  n_timed: int = 3, with_run: bool = True):
     V = net.V
-    kw = {"nbrs": nbrs} if method == "sparse" else {}
+    kw = {"nbrs": nbrs, "engine_impl": engine_impl} \
+        if method == "sparse" else {}
 
     flows = jax.jit(
         lambda p: core.compute_flows(net, p, method, **kw).F)
     us_fl = time_call(lambda: jax.block_until_ready(flows(phi0)), n=n_timed)
-    emit(f"scale_flows_{method}_V{V}", us_fl, f"Dmax={nbrs.Dmax}")
+    emit(f"scale_flows_{method}_V{V}", us_fl, f"Dmax={nbrs.Dmax}",
+         engine_impl=engine_impl)
 
     consts = make_consts(net, core.total_cost(net, phi0, method, **kw))
 
@@ -53,15 +69,38 @@ def _bench_method(net, phi0, nbrs, method: str, n_timed: int = 3):
         jax.block_until_ready(p.data)
 
     us_st = time_call(step, n=n_timed)
-    emit(f"scale_step_{method}_V{V}", us_st, "")
+    emit(f"scale_step_{method}_V{V}", us_st, "", engine_impl=engine_impl)
 
-    t0 = time.perf_counter()
-    _, hist = core.run(net, phi0, n_iters=N_ITERS, method=method)
-    dt = (time.perf_counter() - t0) * 1e6
-    head = "|".join(f"{c:.2f}" for c in hist["costs"][:4])
-    emit(f"scale_run_{method}_V{V}", dt / N_ITERS,
-         f"cost0->N:{head}->{hist['final_cost']:.2f}")
+    if with_run:
+        # warm the jit caches (step + cost eval) so the row reports the
+        # steady-state per-iteration cost, not 1/N of compile time
+        core.run(net, phi0, n_iters=1, method=method,
+                 engine_impl=engine_impl)
+        t0 = time.perf_counter()
+        _, hist = core.run(net, phi0, n_iters=N_ITERS, method=method,
+                           engine_impl=engine_impl)
+        dt = (time.perf_counter() - t0) * 1e6
+        head = "|".join(f"{c:.2f}" for c in hist["costs"][:4])
+        emit(f"scale_run_{method}_V{V}", dt / N_ITERS,
+             f"cost0->N:{head}->{hist['final_cost']:.2f}",
+             engine_impl=engine_impl)
     return us_st
+
+
+def _bench_rounds(net, phi0, nbrs, impl: str, n_timed: int = 5):
+    """One message-passing round (max_rounds=1) through each backend —
+    the per-round dispatch cost the fused kernel amortizes away."""
+    phi_sp = core.gather_edges(phi0.result, nbrs)
+
+    def one_round(w):
+        return kernel_ops.edge_rounds(w, net.r, nbrs.out_nbr,
+                                      nbrs.out_mask, reduce="sum",
+                                      max_rounds=1, impl=impl)
+
+    f = jax.jit(one_round)
+    us = time_call(lambda: jax.block_until_ready(f(phi_sp)), n=n_timed)
+    emit(f"scale_rounds_{impl}_V{net.V}", us, f"Dmax={nbrs.Dmax}",
+         engine_impl=impl)
 
 
 def run(full: bool = False, sizes=SIZES):
@@ -75,7 +114,18 @@ def run(full: bool = False, sizes=SIZES):
                 emit(f"scale_step_{method}_V{V}", 0.0,
                      f"skipped_{method}_infeasible")
                 continue
-            ref_us[method] = _bench_method(net, phi0, nbrs, method)
+            if method == "sparse":
+                # the jnp path and the fused kernel, side by side; the
+                # run-trajectory row only for the backend default
+                for impl in ("ref", _kernel_impl()):
+                    us = _bench_method(net, phi0, nbrs, method,
+                                       engine_impl=impl,
+                                       with_run=(impl == "ref"))
+                    ref_us.setdefault(method, us)
+                    ref_us[f"sparse_{impl}"] = us
+                    _bench_rounds(net, phi0, nbrs, impl)
+            else:
+                ref_us[method] = _bench_method(net, phi0, nbrs, method)
         if "dense" in ref_us and "sparse" in ref_us:
             emit(f"scale_speedup_V{V}",
                  ref_us["dense"] / max(ref_us["sparse"], 1e-9),

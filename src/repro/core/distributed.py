@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .network import CECNetwork, Phi
+from .network import CECNetwork, Neighbors, Phi, build_neighbors
 from .sgp import SGPConsts, _sgp_step_impl, make_consts
 
 AXIS = "tasks"
@@ -80,44 +80,74 @@ def pad_tasks(net: CECNetwork, phi: Phi, n_shards: int):
 
 def make_distributed_step(mesh: Mesh, variant: str = "sgp",
                           scaling: str = "adaptive", kappa: float = 0.0,
-                          method: str = "dense"):
-    """Build the jitted shard_map SGP step for a 1-D task mesh."""
+                          method: str = "dense",
+                          nbrs: Optional[Neighbors] = None,
+                          engine_impl: Optional[str] = None):
+    """Build the jitted shard_map SGP step for a 1-D task mesh.
+
+    method="sparse" shard_maps the neighbor-list engine over the task
+    axis: per-task gathers and edge_rounds recursions are shard-local
+    (the `Neighbors` index tiles are replicated on every device), and
+    the only collective stays the one psum of F/G.  `nbrs` must then be
+    the precomputed `build_neighbors(adj)`; engine_impl picks the
+    message-passing backend (see kernels.ops.edge_rounds).
+    """
+    if method == "sparse" and nbrs is None:
+        raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
+                         "precomputed outside jit")
     task_sharded = CECNetwork(
         adj=P(), link_cost=P(), comp_cost=P(),
         dest=P(AXIS), r=P(AXIS), a=P(AXIS), w=P(AXIS), task_type=P(AXIS))
     phi_spec = Phi(P(AXIS), P(AXIS))
     consts_spec = SGPConsts(P(), P(), P(), P())
+    # replicated index tiles (None, an empty pytree, off the sparse path)
+    nbrs_spec = (Neighbors(P(), P(), P(), P(), P())
+                 if nbrs is not None else None)
 
-    def step(net, phi, consts, sigma):
+    def step(net, phi, consts, sigma, nbrs):
         new_phi, aux = _sgp_step_impl(
             net, phi, consts, variant=variant, scaling=scaling,
-            sigma=sigma, kappa=kappa, method=method, psum_axis=AXIS)
+            sigma=sigma, kappa=kappa, method=method, psum_axis=AXIS,
+            engine_impl=engine_impl, nbrs=nbrs)
         return new_phi, aux["cost"]
 
     sharded = _shard_map(
         step, mesh=mesh,
-        in_specs=(task_sharded, phi_spec, consts_spec, P()),
+        in_specs=(task_sharded, phi_spec, consts_spec, P(), nbrs_spec),
         out_specs=(phi_spec, P()))
-    return jax.jit(sharded)
+    jitted = jax.jit(sharded)
+    # keep the public step signature (net, phi, consts, sigma)
+    return partial(_call_with_nbrs, jitted, nbrs)
+
+
+def _call_with_nbrs(jitted, nbrs, net, phi, consts, sigma):
+    return jitted(net, phi, consts, sigma, nbrs)
 
 
 def run_distributed(net: CECNetwork, phi0: Phi, n_iters: int = 200,
                     mesh: Optional[Mesh] = None, variant: str = "sgp",
                     scaling: str = "adaptive", kappa: float = 0.0,
-                    min_scale: float = 0.05):
+                    min_scale: float = 0.05, method: str = "dense",
+                    engine_impl: Optional[str] = None):
     """Driver: distributed SGP with the same safeguard as `sgp.run`.
 
-    Returns (phi_final [original S], history).  Bitwise-equivalent to the
-    single-device path up to reduction order (validated in tests).
+    method="sparse" runs the neighbor-list engine on every shard (the
+    V ~ 10³ × S ~ 10⁴ regime: per-task edge arrays shard over devices,
+    the [V, Dmax] index tiles are replicated, one psum of F/G couples
+    the shards).  Returns (phi_final [original S], history).
+    Bitwise-equivalent to the single-device path up to reduction order
+    (validated in tests).
     """
-    from .network import total_cost as _tc
+    from .network import total_cost_jit as _tc
 
     mesh = mesh or task_mesh()
     n_dev = mesh.devices.size
     net_p, phi_p, S = pad_tasks(net, phi0, n_dev)
+    nbrs = build_neighbors(net.adj) if method == "sparse" else None
     step = make_distributed_step(mesh, variant=variant, scaling=scaling,
-                                 kappa=kappa)
-    T0 = _tc(net_p, phi_p)
+                                 kappa=kappa, method=method, nbrs=nbrs,
+                                 engine_impl=engine_impl)
+    T0 = _tc(net_p, phi_p, method, nbrs=nbrs, engine_impl=engine_impl)
     consts = make_consts(net_p, T0, min_scale)
 
     # device placement
@@ -131,7 +161,8 @@ def run_distributed(net: CECNetwork, phi0: Phi, n_iters: int = 200,
     phi = phi_p
     for _ in range(n_iters):
         phi_new, cost = step(net_p, phi, consts, jnp.asarray(sigma))
-        new_cost = float(_tc(net_p, phi_new))
+        new_cost = float(_tc(net_p, phi_new, method, nbrs=nbrs,
+                             engine_impl=engine_impl))
         if scaling == "adaptive" and variant == "sgp" \
                 and new_cost > costs[-1] * (1.0 + 1e-12):
             sigma *= 4.0

@@ -26,8 +26,9 @@ import jax
 import jax.numpy as jnp
 
 from .costs import Cost
-from .network import (CECNetwork, Flows, Neighbors, Phi, build_neighbors,
-                      gather_edges, solve_downstream_sparse)
+from .network import (CECNetwork, Flows, Neighbors, Phi,
+                      _solve_fp_broadcast, build_neighbors, gather_edges,
+                      solve_downstream_sparse)
 
 BIG = 1e12  # marginal cost assigned to non-edges (never selected)
 
@@ -55,20 +56,20 @@ def _solve_downstream(phi_nbr: jnp.ndarray, b: jnp.ndarray,
         eye = jnp.eye(V, dtype=phi_nbr.dtype)
         return jnp.linalg.solve(eye[None] - phi_nbr, b[..., None])[..., 0]
     elif method == "broadcast":
-        def body(rho, _):
-            return b + jnp.einsum("sij,sj->si", phi_nbr, rho), None
-        rho, _ = jax.lax.scan(body, b, None, length=V)
-        return rho
+        # fixed-point early exit: ~diam(support) rounds instead of V
+        return _solve_fp_broadcast(phi_nbr, b, False)
     raise ValueError(method)
 
 
 def compute_marginals(net: CECNetwork, phi: Phi, fl: Flows,
                       method: str = "dense",
-                      nbrs: Neighbors | None = None) -> Marginals:
+                      nbrs: Neighbors | None = None,
+                      engine_impl: str | None = None) -> Marginals:
     if method == "sparse":
         return _compute_marginals_sparse(
             net, phi, fl,
-            nbrs if nbrs is not None else build_neighbors(net.adj))
+            nbrs if nbrs is not None else build_neighbors(net.adj),
+            engine_impl)
     adjf = net.adj.astype(phi.data.dtype)
     Dp = jnp.where(net.adj, net.link_cost.d1(fl.F), 0.0)
     Cp = net.comp_cost.d1(fl.G)
@@ -96,7 +97,8 @@ def compute_marginals(net: CECNetwork, phi: Phi, fl: Flows,
 
 
 def _compute_marginals_sparse(net: CECNetwork, phi: Phi, fl: Flows,
-                              nbrs: Neighbors) -> Marginals:
+                              nbrs: Neighbors,
+                              impl: str | None = None) -> Marginals:
     """Eq. 9-13 as out-edge message passing in [S, V, Dmax] layout."""
     Dp_sp = gather_edges(net.link_cost.d1(fl.F), nbrs)    # [V, Dmax]
     Cp = net.comp_cost.d1(fl.G)
@@ -107,12 +109,12 @@ def _compute_marginals_sparse(net: CECNetwork, phi: Phi, fl: Flows,
 
     # Stage 1 (paper broadcast stage 1): result marginals, from destination.
     b_r = jnp.sum(phi_r_sp * Dp_sp[None], axis=-1)
-    rho_result = solve_downstream_sparse(phi_r_sp, b_r, nbrs)
+    rho_result = solve_downstream_sparse(phi_r_sp, b_r, nbrs, impl)
 
     # Stage 2: data marginals (needs ρ⁺ first, exactly as in the paper).
     delta_local = net.w * Cp[None] + net.a[:, None] * rho_result  # [S, V]
     b_d = jnp.sum(phi_d_sp * Dp_sp[None], axis=-1) + phi_loc * delta_local
-    rho_data = solve_downstream_sparse(phi_d_sp, b_d, nbrs)
+    rho_data = solve_downstream_sparse(phi_d_sp, b_d, nbrs, impl)
 
     # δ terms (Eq. 13) on edge slots; padded slots pinned to BIG.
     ninf = jnp.where(nbrs.out_mask, 0.0, BIG)

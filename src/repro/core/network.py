@@ -36,6 +36,21 @@ with three interchangeable engines (`method=`):
                This is the engine that scales to V ~ 10³⁺ arbitrary
                topologies, exactly because Algorithm 1 is distributed.
 
+The sparse rounds themselves dispatch through
+`kernels.ops.edge_rounds(..., impl=engine_impl)`:
+
+  engine_impl=None         backend default — fused Pallas kernel on TPU
+                           (index tiles resident in VMEM, the whole
+                           early-exit while-loop in ONE launch), jnp
+                           reference elsewhere
+  engine_impl="ref"        force the jnp one-gather-per-round path
+  engine_impl="pallas"     force the Pallas TPU kernel
+  engine_impl="pallas_interpret"  kernel body through the Pallas
+                           interpreter (CPU validation mode)
+
+`compute_flows`, `compute_marginals`, `sgp_step` and `run` all thread
+an `engine_impl=` argument down to this switch.
+
 Sparse layout convention (used by marginals.py and sgp.py too): for an
 edge slot (i, e) with `nbrs.out_mask[i, e]`, `nbrs.out_nbr[i, e] = j`
 names the edge i -> j; padded slots point at node 0 and are masked.
@@ -46,6 +61,7 @@ outside jit) via `build_neighbors` and threaded through `nbrs=`.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Tuple
 
 import jax
@@ -53,6 +69,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .costs import Cost
+from ..kernels import ops as kernel_ops
 
 LOCAL = -1  # alias: phi.data[..., -1] is the local-offload column
 
@@ -110,13 +127,28 @@ class Neighbors:
         return self.out_nbr.shape[1]
 
 
+# build_neighbors is O(V·deg) python; callers that omit `nbrs=` (one-off
+# total_cost / compute_flows calls) would re-pad the same adjacency every
+# call, so results are memoized on the adjacency bytes (bounded LRU).
+_NBR_CACHE: dict = {}
+_NBR_CACHE_MAX = 32
+
+
 def build_neighbors(adj) -> Neighbors:
-    """Precompute `Neighbors` from a concrete [V, V] bool adjacency."""
+    """Precompute `Neighbors` from a concrete [V, V] bool adjacency.
+
+    Memoized per adjacency: repeat calls on the same (or an equal)
+    matrix return the cached padded lists instead of re-building them.
+    """
     if isinstance(adj, jax.core.Tracer):
         raise ValueError(
             "build_neighbors needs a concrete adjacency; precompute it "
             "outside jit and pass it through the `nbrs=` argument")
     A = np.asarray(adj, dtype=bool)
+    key = (A.shape[0], A.tobytes())
+    cached = _NBR_CACHE.get(key)
+    if cached is not None:
+        return cached
     V = A.shape[0]
     d_out = max(int(A.sum(axis=1).max()), 1)
     d_in = max(int(A.sum(axis=0).max()), 1)
@@ -136,9 +168,13 @@ def build_neighbors(adj) -> Neighbors:
         in_nbr[j, :len(ks)] = ks
         in_slot[j, :len(ks)] = slot_of[ks, j]
         in_mask[j, :len(ks)] = True
-    return Neighbors(jnp.asarray(out_nbr), jnp.asarray(out_mask),
+    nbrs = Neighbors(jnp.asarray(out_nbr), jnp.asarray(out_mask),
                      jnp.asarray(in_nbr), jnp.asarray(in_slot),
                      jnp.asarray(in_mask))
+    if len(_NBR_CACHE) >= _NBR_CACHE_MAX:
+        _NBR_CACHE.pop(next(iter(_NBR_CACHE)))
+    _NBR_CACHE[key] = nbrs
+    return nbrs
 
 
 def gather_edges(x: jnp.ndarray, nbrs: Neighbors,
@@ -146,24 +182,31 @@ def gather_edges(x: jnp.ndarray, nbrs: Neighbors,
     """Gather per-(i, j) values onto edge slots: [..., V, K] -> [..., V, Dmax].
 
     K may exceed V (e.g. Phi.data's V+1 columns); only neighbor columns
-    are ever indexed.  Padded slots read `fill`.
+    are ever indexed.  Padded slots read `fill`, cast to x's dtype so
+    low-precision (bf16) edge arrays stay low-precision.
     """
     idx_i = jnp.arange(nbrs.V)[:, None]
     g = x[..., idx_i, nbrs.out_nbr]
-    return jnp.where(nbrs.out_mask, g, fill)
+    return jnp.where(nbrs.out_mask, g, jnp.asarray(fill, dtype=g.dtype))
 
 
 def scatter_edges(x_sp: jnp.ndarray, nbrs: Neighbors, K: int) -> jnp.ndarray:
     """Scatter-add edge-slot values back to dense: [..., V, Dmax] -> [..., V, K]."""
     idx_i = jnp.arange(nbrs.V)[:, None]
-    x_sp = jnp.where(nbrs.out_mask, x_sp, 0.0)
+    x_sp = jnp.where(nbrs.out_mask, x_sp, jnp.zeros((), x_sp.dtype))
     out = jnp.zeros(x_sp.shape[:-2] + (nbrs.V, K), x_sp.dtype)
     return out.at[..., idx_i, nbrs.out_nbr].add(x_sp)
 
 
-def _fixed_point(step, x0: jnp.ndarray, max_rounds: int) -> jnp.ndarray:
+def _fixed_point(step, x0: jnp.ndarray, max_rounds: int,
+                 with_rounds: bool = False):
     """Iterate x <- step(x) until it stops changing (exact, loop-free
-    supports are nilpotent) or `max_rounds` is hit (cyclic-φ guard)."""
+    supports are nilpotent) or `max_rounds` is hit (cyclic-φ guard).
+
+    with_rounds=True also returns the round count (int32 scalar).
+    NOT reverse-mode differentiable (lax.while_loop); linear fixed
+    points that need gradients go through `_solve_fp_broadcast`.
+    """
 
     def cond(carry):
         k, x, x_prev = carry
@@ -173,36 +216,72 @@ def _fixed_point(step, x0: jnp.ndarray, max_rounds: int) -> jnp.ndarray:
         k, x, _ = carry
         return k + 1, step(x), x
 
-    _, x, _ = jax.lax.while_loop(cond, body, (jnp.asarray(1), step(x0), x0))
-    return x
+    k, x, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(1, jnp.int32), step(x0), x0))
+    return (x, k) if with_rounds else x
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _solve_fp_broadcast(phi_nbr: jnp.ndarray, b: jnp.ndarray,
+                        transpose: bool) -> jnp.ndarray:
+    """Early-exit linear fixed point x = b + contract(Φ, x), dense.
+
+    transpose=True  solves x_j = b_j + Σ_i φ_ij x_i  (traffic, Eq. 1-2)
+    transpose=False solves x_i = b_i + Σ_j φ_ij x_j  (marginals, Eq. 11-12)
+
+    The while-loop early exit alone is not reverse-mode differentiable,
+    so the VJP is supplied analytically via the implicit function
+    theorem: the adjoint of a linear fixed point is the SAME recursion
+    with the contraction transposed (x̄ solves the adjoint system, the
+    φ cotangent is its outer product with the primal solution).
+    """
+    eq = "sij,si->sj" if transpose else "sij,sj->si"
+
+    def step(x):
+        return b + jnp.einsum(eq, phi_nbr, x)
+
+    return _fixed_point(step, b, max_rounds=phi_nbr.shape[-1])
+
+
+def _solve_fp_broadcast_fwd(phi_nbr, b, transpose):
+    x = _solve_fp_broadcast(phi_nbr, b, transpose)
+    return x, (phi_nbr, x)
+
+
+def _solve_fp_broadcast_bwd(transpose, res, g):
+    phi_nbr, x = res
+    xbar = _solve_fp_broadcast(phi_nbr, g, not transpose)
+    phi_bar = (jnp.einsum("si,sj->sij", x, xbar) if transpose
+               else jnp.einsum("si,sj->sij", xbar, x))
+    return phi_bar, xbar
+
+
+_solve_fp_broadcast.defvjp(_solve_fp_broadcast_fwd, _solve_fp_broadcast_bwd)
 
 
 def _solve_traffic_sparse(phi_sp: jnp.ndarray, inject: jnp.ndarray,
-                          nbrs: Neighbors) -> jnp.ndarray:
+                          nbrs: Neighbors,
+                          impl: str | None = None) -> jnp.ndarray:
     """Solve t = inject + Φᵀ t by in-edge message passing.
 
     phi_sp: [S, V, Dmax] out-edge fractions; inject: [S, V].
-    Each round, node j sums φ_{k->j} t_k over its in-edges — one gather
-    of (φ, t) at (in_nbr, in_slot) and a masked reduce.
+    Each round, node j sums φ_{k->j} t_k over its in-edges — the
+    in-edge weight view (one gather of φ at (in_nbr, in_slot)) is built
+    once, then all rounds run in kernels.ops.edge_rounds.
     """
     phi_in = phi_sp[:, nbrs.in_nbr, nbrs.in_slot]     # [S, V, Dmax_in]
-    phi_in = jnp.where(nbrs.in_mask, phi_in, 0.0)
-
-    def step(t):
-        return inject + jnp.sum(phi_in * t[:, nbrs.in_nbr], axis=-1)
-
-    return _fixed_point(step, inject, max_rounds=nbrs.V)
+    return kernel_ops.edge_rounds(phi_in, inject, nbrs.in_nbr,
+                                  nbrs.in_mask, reduce="sum",
+                                  max_rounds=nbrs.V, impl=impl)
 
 
 def solve_downstream_sparse(phi_sp: jnp.ndarray, b: jnp.ndarray,
-                            nbrs: Neighbors) -> jnp.ndarray:
+                            nbrs: Neighbors,
+                            impl: str | None = None) -> jnp.ndarray:
     """Solve ρ = b + Φ ρ by out-edge message passing (marginal recursions)."""
-    phi_sp = jnp.where(nbrs.out_mask, phi_sp, 0.0)
-
-    def step(rho):
-        return b + jnp.sum(phi_sp * rho[:, nbrs.out_nbr], axis=-1)
-
-    return _fixed_point(step, b, max_rounds=nbrs.V)
+    return kernel_ops.edge_rounds(phi_sp, b, nbrs.out_nbr, nbrs.out_mask,
+                                  reduce="sum", max_rounds=nbrs.V,
+                                  impl=impl)
 
 
 @jax.tree_util.register_dataclass
@@ -237,22 +316,27 @@ def _solve_traffic(phi_nbr: jnp.ndarray, inject: jnp.ndarray,
         return jnp.linalg.solve(A, inject[..., None])[..., 0]
     elif method == "broadcast":
         # Paper-faithful hop-by-hop propagation. Loop-free Φ is nilpotent
-        # with index <= V, so V rounds reach the exact fixed point.
-        def body(t, _):
-            t = inject + jnp.einsum("sij,si->sj", phi_nbr, t)
-            return t, None
-        t, _ = jax.lax.scan(body, inject, None, length=V)
-        return t
+        # with index <= V so V rounds always suffice, but the fixed-point
+        # early exit stops after ~diam(support) rounds on small-diameter
+        # instances instead of burning all V (differentiable through the
+        # implicit-function-theorem adjoint).
+        return _solve_fp_broadcast(phi_nbr, inject, True)
     raise ValueError(f"unknown method {method}")
 
 
 def compute_flows(net: CECNetwork, phi: Phi, method: str = "dense",
-                  nbrs: Neighbors | None = None) -> Flows:
-    """Forward pass of the flow model: φ -> all traffic and flows."""
+                  nbrs: Neighbors | None = None,
+                  engine_impl: str | None = None) -> Flows:
+    """Forward pass of the flow model: φ -> all traffic and flows.
+
+    engine_impl selects the sparse message-passing backend (see the
+    module docstring); ignored by the dense/broadcast engines.
+    """
     if method == "sparse":
         return _compute_flows_sparse(net, phi,
                                      nbrs if nbrs is not None
-                                     else build_neighbors(net.adj))
+                                     else build_neighbors(net.adj),
+                                     engine_impl)
     adjf = net.adj.astype(phi.data.dtype)
     phi_d_nbr = phi.data[..., :-1] * adjf[None]   # mask non-edges
     phi_loc = phi.data[..., -1]                   # [S, V]
@@ -269,16 +353,17 @@ def compute_flows(net: CECNetwork, phi: Phi, method: str = "dense",
     return Flows(t_data, t_result, g, F, G, f_data, f_result)
 
 
-def _compute_flows_sparse(net: CECNetwork, phi: Phi,
-                          nbrs: Neighbors) -> Flows:
+def _compute_flows_sparse(net: CECNetwork, phi: Phi, nbrs: Neighbors,
+                          impl: str | None = None) -> Flows:
     """Sparse flow engine: all edge quantities in [S, V, Dmax] layout."""
     phi_d_sp = gather_edges(phi.data, nbrs)       # [S, V, Dmax]
     phi_loc = phi.data[..., -1]                   # [S, V]
     phi_r_sp = gather_edges(phi.result, nbrs)
 
-    t_data = _solve_traffic_sparse(phi_d_sp, net.r, nbrs)
+    t_data = _solve_traffic_sparse(phi_d_sp, net.r, nbrs, impl)
     g = t_data * phi_loc
-    t_result = _solve_traffic_sparse(phi_r_sp, net.a[:, None] * g, nbrs)
+    t_result = _solve_traffic_sparse(phi_r_sp, net.a[:, None] * g, nbrs,
+                                     impl)
 
     f_data = t_data[..., None] * phi_d_sp         # [S, V, Dmax]
     f_result = t_result[..., None] * phi_r_sp
@@ -288,9 +373,17 @@ def _compute_flows_sparse(net: CECNetwork, phi: Phi,
 
 
 def total_cost(net: CECNetwork, phi: Phi, method: str = "dense",
-               nbrs: Neighbors | None = None) -> jnp.ndarray:
-    fl = compute_flows(net, phi, method, nbrs=nbrs)
+               nbrs: Neighbors | None = None,
+               engine_impl: str | None = None) -> jnp.ndarray:
+    fl = compute_flows(net, phi, method, nbrs=nbrs, engine_impl=engine_impl)
     return cost_of_flows(net, fl)
+
+
+# jitted variant for per-iteration cost evaluation in the drivers: at
+# V=1000 the eager path spends ~10x the jitted time on op dispatch
+# (one such call per accept/reject decision)
+total_cost_jit = jax.jit(total_cost,
+                         static_argnames=("method", "engine_impl"))
 
 
 def cost_of_flows(net: CECNetwork, fl: Flows) -> jnp.ndarray:

@@ -38,7 +38,7 @@ from .costs import Cost
 from .marginals import BIG, Marginals, compute_marginals
 from .network import (CECNetwork, Flows, Neighbors, Phi, build_neighbors,
                       compute_flows, cost_of_flows, gather_edges,
-                      scatter_edges, _fixed_point)
+                      scatter_edges)
 from ..kernels import ops as kernel_ops
 
 SUPPORT_TOL = 1e-9   # φ below this is treated as zero support
@@ -217,37 +217,39 @@ def _project(phi_rows: jnp.ndarray, delta: jnp.ndarray, M: jnp.ndarray,
 
 
 # ------------------------------------------------- sparse (neighbor-list) ops
-def _taint_sparse(sup: jnp.ndarray, rho: jnp.ndarray,
-                  nbrs: Neighbors) -> jnp.ndarray:
-    """_taint in edge-slot layout: sup [S, V, Dmax], gather-based rounds."""
+def _taint_sparse(sup: jnp.ndarray, rho: jnp.ndarray, nbrs: Neighbors,
+                  impl: Optional[str] = None) -> jnp.ndarray:
+    """_taint in edge-slot layout: sup [S, V, Dmax], gather-based rounds.
+
+    The boolean-or closure runs through the shared edge_rounds kernel
+    with a {0, 1} float encoding and a max reduce."""
     improper = sup & (rho[:, nbrs.out_nbr] >= rho[:, :, None])
     has_improper = jnp.any(improper, axis=-1)
+    t = kernel_ops.edge_rounds(
+        sup.astype(jnp.float32), has_improper.astype(jnp.float32),
+        nbrs.out_nbr, nbrs.out_mask, reduce="max", max_rounds=nbrs.V,
+        impl=impl)
+    return t > 0.5
 
-    def step(t):
-        return has_improper | jnp.any(sup & t[:, nbrs.out_nbr], axis=-1)
 
-    return _fixed_point(step, has_improper, max_rounds=nbrs.V)
-
-
-def _max_path_len_sparse(sup: jnp.ndarray, nbrs: Neighbors) -> jnp.ndarray:
-    """_max_path_len in edge-slot layout."""
+def _max_path_len_sparse(sup: jnp.ndarray, nbrs: Neighbors,
+                         impl: Optional[str] = None) -> jnp.ndarray:
+    """_max_path_len in edge-slot layout: a max reduce over 1 + h[nbr]
+    (shift=1) with zero inject reproduces the longest-path recursion."""
     h0 = jnp.zeros(sup.shape[:2], dtype=jnp.float32)
-
-    def step(h):
-        return jnp.max(jnp.where(sup, 1.0 + h[:, nbrs.out_nbr], 0.0),
-                       axis=-1)
-
-    return _fixed_point(step, h0, max_rounds=nbrs.V)
+    return kernel_ops.edge_rounds(
+        sup.astype(jnp.float32), h0, nbrs.out_nbr, nbrs.out_mask,
+        reduce="max", shift=1.0, max_rounds=nbrs.V, impl=impl)
 
 
 def blocked_sets_sparse(net: CECNetwork, phi: Phi, mg: Marginals,
-                        nbrs: Neighbors):
+                        nbrs: Neighbors, engine_impl: Optional[str] = None):
     """`blocked_sets` over edge slots: permitted masks [S, V, Dmax(+1)]."""
     sup_d = gather_edges(phi.data, nbrs) > SUPPORT_TOL
     sup_r = gather_edges(phi.result, nbrs) > SUPPORT_TOL
 
-    taint_d = _taint_sparse(sup_d, mg.rho_data, nbrs)
-    taint_r = _taint_sparse(sup_r, mg.rho_result, nbrs)
+    taint_d = _taint_sparse(sup_d, mg.rho_data, nbrs, engine_impl)
+    taint_r = _taint_sparse(sup_r, mg.rho_result, nbrs, engine_impl)
 
     def permitted(sup, rho, taint):
         uphill = rho[:, nbrs.out_nbr] >= rho[:, :, None]
@@ -278,6 +280,7 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
                    kappa: jnp.ndarray | float = 1.0,
                    psum_axis: Optional[str] = None,
                    proj_impl: Optional[str] = None,
+                   engine_impl: Optional[str] = None,
                    nbrs: Optional[Neighbors] = None):
     """One synchronized iteration of Algorithm 1 over every (node, task).
 
@@ -299,6 +302,10 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
                           uphill steps and raising sigma (backtracking).
     proj_impl : QP projection backend, see `_project` ("oracle" = the
              in-module jnp path; default = kernels.ops dispatch).
+    engine_impl : sparse message-passing backend for every fixed-point
+             recursion (traffic, marginals, taint, path bounds), see
+             kernels.ops.edge_rounds — None = backend default (fused
+             Pallas kernel on TPU, jnp reference elsewhere).
     nbrs   : precomputed `Neighbors`; required when method="sparse"
              (the whole iteration then runs in [S, V, Dmax] edge-slot
              layout and only scatters back to the dense Phi at the end).
@@ -307,7 +314,7 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
     if sparse and nbrs is None:
         raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
                          "precomputed outside jit")
-    fl = compute_flows(net, phi, method, nbrs=nbrs)
+    fl = compute_flows(net, phi, method, nbrs=nbrs, engine_impl=engine_impl)
     if psum_axis is not None:
         # Distributed mode (shard_map over the task axis): per-task
         # traffic is local; total link flow / workload — the only
@@ -317,7 +324,8 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
             fl,
             F=jax.lax.psum(fl.F, psum_axis),
             G=jax.lax.psum(fl.G, psum_axis))
-    mg = compute_marginals(net, phi, fl, method, nbrs=nbrs)
+    mg = compute_marginals(net, phi, fl, method, nbrs=nbrs,
+                           engine_impl=engine_impl)
 
     S, V = net.S, net.V
     is_dest = jnp.arange(V)[None] == net.dest[:, None]
@@ -338,7 +346,8 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
 
     if use_blocking:
         if sparse:
-            perm_d, perm_r = blocked_sets_sparse(net, phi, mg, nbrs)
+            perm_d, perm_r = blocked_sets_sparse(net, phi, mg, nbrs,
+                                                 engine_impl)
         else:
             perm_d, perm_r = blocked_sets(net, phi, mg)
     else:
@@ -360,9 +369,9 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
 
     if variant == "sgp":
         # Eq. 16 scaling matrices.
-        h_r = (_max_path_len_sparse(sup_r, nbrs) if sparse
+        h_r = (_max_path_len_sparse(sup_r, nbrs, engine_impl) if sparse
                else _max_path_len(sup_r))                     # [S, V]
-        h_d = (_max_path_len_sparse(sup_d, nbrs) if sparse
+        h_d = (_max_path_len_sparse(sup_d, nbrs, engine_impl) if sparse
                else _max_path_len(sup_d))
         n_r = jnp.sum(perm_r, axis=-1).astype(phi.result.dtype)
         n_d = jnp.sum(perm_d, axis=-1).astype(phi.data.dtype)
@@ -440,7 +449,7 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
 sgp_step = jax.jit(
     _sgp_step_impl,
     static_argnames=("variant", "method", "use_blocking", "scaling",
-                     "psum_axis", "proj_impl"))
+                     "psum_axis", "proj_impl", "engine_impl"))
 
 
 # ------------------------------------------------------------------- driver
@@ -451,12 +460,15 @@ def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
         rng: Optional[jax.Array] = None, async_frac: float = 0.0,
         tol: float = 0.0, callback=None, use_blocking: bool = True,
         refresh_every: int = 20, scaling: str = "adaptive",
-        kappa: float = 0.0, proj_impl: Optional[str] = None):
+        kappa: float = 0.0, proj_impl: Optional[str] = None,
+        engine_impl: Optional[str] = None):
     """Python-loop driver around the jitted step.
 
     method="sparse" precomputes the neighbor lists once (numpy, outside
     jit) and runs every step in the O(S·V·Dmax·diam) edge-slot engine —
-    use it for V beyond a few hundred.
+    use it for V beyond a few hundred.  engine_impl picks its
+    message-passing backend (kernels.ops.edge_rounds; None = fused
+    Pallas kernel on TPU, jnp reference elsewhere).
 
     callback, if given, is invoked as ``callback(it, phi, aux, accepted)``
     where `phi` is the iterate AFTER the accept/reject decision (the new
@@ -481,11 +493,11 @@ def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
 
     Returns (phi_final, history dict of per-iteration costs).
     """
-    from .network import total_cost as _tc
+    from .network import total_cost_jit as _tc
     if scaling == "paper":
         kappa = 1.0  # Eq. 16 verbatim
     nbrs = build_neighbors(net.adj) if method == "sparse" else None
-    T0 = _tc(net, phi0, method, nbrs=nbrs)
+    T0 = _tc(net, phi0, method, nbrs=nbrs, engine_impl=engine_impl)
     consts = make_consts(net, T0, min_scale)
     phi = phi0
     costs = [float(T0)]
@@ -506,8 +518,10 @@ def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
                                 allowed_result=allowed_result, method=method,
                                 use_blocking=use_blocking, scaling=scaling,
                                 sigma=sigma, kappa=kappa,
-                                proj_impl=proj_impl, nbrs=nbrs)
-        new_cost = float(_tc(net, phi_new, method, nbrs=nbrs))
+                                proj_impl=proj_impl, engine_impl=engine_impl,
+                                nbrs=nbrs)
+        new_cost = float(_tc(net, phi_new, method, nbrs=nbrs,
+                             engine_impl=engine_impl))
         accepted = np.isfinite(new_cost) and not (
             scaling == "adaptive" and variant == "sgp"
             and new_cost > costs[-1] * (1.0 + 1e-12))

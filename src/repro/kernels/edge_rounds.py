@@ -1,0 +1,120 @@
+"""Fused message-passing rounds for the sparse flow engine (Pallas).
+
+The sparse engine's four fixed-point recursions (data/result traffic,
+Eq. 1-2; marginal downstream solves, Eq. 11-12; the taint closure and
+path-length bounds of Algorithm 1's blocked sets) all share one shape:
+
+    x  <-  combine(b, reduce_e  w[s, i, e] * (x[s, nbr[i, e]] + shift))
+
+iterated to a fixed point, where `nbr[V, Dmax]` / `mask[V, Dmax]` are
+max-degree-padded neighbor lists (network.Neighbors) and `w[S, V, Dmax]`
+are per-edge weights (φ fractions, or {0, 1} supports for the boolean
+or/max recursions).
+
+Lowered generically this is one dynamic-gather + masked-reduce dispatch
+PER ROUND — on TPU the V ~ 10³ step is dispatch-bound, not
+bandwidth-bound.  This kernel instead keeps the index tiles and the
+weight block resident in VMEM and runs the ENTIRE while-loop (early
+exit on no-change, `max_rounds` cyclic-φ guard) in a single launch:
+
+Grid (num_task_blocks,): tasks are independent (each task's recursion
+only reads its own rows), so each grid step loads a [bt, V, Dmax]
+weight block plus the shared [V, Dmax] neighbor tiles and iterates
+locally until ITS block converges.  Convergence is exact (loop-free
+supports are nilpotent), so the early exit fires after ~diam(support)
+rounds instead of V.
+
+Reductions:
+  "sum"  x' = b + Σ_e w (x[nbr] + shift)          (linear solves)
+  "max"  x' = max(b, max_e w (x[nbr] + shift))     (boolean-or with
+         {0, 1} encodings when shift=0; longest-path when shift=1 —
+         messages must be nonnegative, masked slots contribute 0)
+
+The jnp reference lives in kernels/ref.py (`edge_rounds_ref`); dispatch
+between them via kernels.ops.edge_rounds(..., impl=).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(nbr_ref, mask_ref, w_ref, b_ref, out_ref, rounds_ref, *,
+            reduce: str, shift: float, max_rounds: int):
+    nbr = nbr_ref[...]                                  # [V, Dmax] int32
+    valid = mask_ref[...] != 0                          # [V, Dmax]
+    w = w_ref[...].astype(jnp.float32)                  # [bt, V, Dmax]
+    w = jnp.where(valid[None], w, 0.0)
+    b = b_ref[...].astype(jnp.float32)                  # [bt, V]
+
+    def step(x):
+        # gather the state at every edge head: [bt, V] -> [bt, V, Dmax]
+        msg = w * (jnp.take(x, nbr, axis=1) + shift)
+        if reduce == "sum":
+            return b + jnp.sum(msg, axis=-1)
+        return jnp.maximum(b, jnp.max(msg, axis=-1))
+
+    def cond(carry):
+        k, x, x_prev = carry
+        return jnp.logical_and(k < max_rounds, jnp.any(x != x_prev))
+
+    def body(carry):
+        k, x, _ = carry
+        return k + 1, step(x), x
+
+    k, x, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(1, jnp.int32), step(b), b))
+    out_ref[...] = x.astype(out_ref.dtype)
+    rounds_ref[0, 0] = k
+
+
+@functools.partial(
+    jax.jit, static_argnames=("reduce", "shift", "max_rounds",
+                              "block_tasks", "interpret", "return_rounds"))
+def edge_rounds(w_sp: jnp.ndarray, inject: jnp.ndarray, nbr: jnp.ndarray,
+                mask: jnp.ndarray, reduce: str = "sum", shift: float = 0.0,
+                max_rounds: int | None = None, block_tasks: int = 8,
+                interpret: bool = False, return_rounds: bool = False):
+    """w_sp [S, V, Dmax], inject [S, V], nbr/mask [V, Dmax] -> x [S, V].
+
+    With return_rounds=True also returns the number of rounds the
+    slowest task block took to converge (int32 scalar).
+    """
+    if reduce not in ("sum", "max"):
+        raise ValueError(f"unknown reduce {reduce!r}")
+    S, V, D = w_sp.shape
+    max_rounds = V if max_rounds is None else max_rounds
+    out_dtype = jnp.promote_types(w_sp.dtype, inject.dtype)
+    bt = max(min(block_tasks, S), 1)
+    # pad tasks to a multiple of the block; padded tasks are all-zero and
+    # converge on the first round, so they never delay the early exit
+    Sp = ((S + bt - 1) // bt) * bt
+    if Sp != S:
+        w_sp = jnp.pad(w_sp, ((0, Sp - S), (0, 0), (0, 0)))
+        inject = jnp.pad(inject, ((0, Sp - S), (0, 0)))
+    nb = Sp // bt
+
+    kernel = functools.partial(_kernel, reduce=reduce, shift=float(shift),
+                               max_rounds=int(max_rounds))
+    out, rounds = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((V, D), lambda i: (0, 0)),        # nbr (resident)
+            pl.BlockSpec((V, D), lambda i: (0, 0)),        # mask (resident)
+            pl.BlockSpec((bt, V, D), lambda i: (i, 0, 0)),  # weights
+            pl.BlockSpec((bt, V), lambda i: (i, 0)),       # inject
+        ],
+        out_specs=[pl.BlockSpec((bt, V), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Sp, V), out_dtype),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.int32)],
+        interpret=interpret,
+    )(nbr, mask.astype(jnp.int32), w_sp, inject)
+    out = out[:S]
+    if return_rounds:
+        return out, jnp.max(rounds)
+    return out

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .decode_attention import decode_attention as _decode_pallas
+from .edge_rounds import edge_rounds as _rounds_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .moe_gmm import moe_gmm as _gmm_pallas
 from .simplex_project import simplex_project as _proj_pallas
@@ -71,6 +72,29 @@ def moe_gmm(x, w, impl: Optional[str] = None, **kw):
     if mode == "ref":
         return _ref.moe_gmm_ref(x, w)
     return _gmm_pallas(x, w, interpret=(mode == "pallas_interpret"), **kw)
+
+
+def edge_rounds(w_sp, inject, nbr, mask, reduce: str = "sum",
+                shift: float = 0.0, max_rounds: Optional[int] = None,
+                impl: Optional[str] = None, return_rounds: bool = False,
+                **kw):
+    """Sparse message-passing fixed point: w_sp [S, V, Dmax] edge
+    weights, inject [S, V], padded neighbor lists nbr/mask [V, Dmax].
+
+    The Pallas path fuses gather + multiply + masked-reduce per round
+    and runs the whole early-exit while-loop in one launch with the
+    index tiles resident in VMEM; the jnp reference dispatches one
+    gather per round (the sparse engine's PR-1 hot path).
+    """
+    mode = _pick(impl)
+    if mode == "ref":
+        return _ref.edge_rounds_ref(w_sp, inject, nbr, mask, reduce=reduce,
+                                    shift=shift, max_rounds=max_rounds,
+                                    return_rounds=return_rounds)
+    return _rounds_pallas(w_sp, inject, nbr, mask, reduce=reduce,
+                          shift=shift, max_rounds=max_rounds,
+                          interpret=(mode == "pallas_interpret"),
+                          return_rounds=return_rounds, **kw)
 
 
 def simplex_project(phi, delta, M, permitted, impl: Optional[str] = None,

@@ -53,3 +53,37 @@ def simplex_project_ref(phi, delta, M, permitted, n_iter: int = 60):
     """Paper Eq. 15 scaled projection (see core.sgp.project_rows)."""
     from repro.core.sgp import project_rows
     return project_rows(phi, delta, M, permitted, n_iter=n_iter)
+
+
+def edge_rounds_ref(w_sp, inject, nbr, mask, reduce: str = "sum",
+                    shift: float = 0.0, max_rounds: int | None = None,
+                    return_rounds: bool = False):
+    """Sparse message-passing fixed point, one gather+reduce per round.
+
+    This is the PR-1 jnp path of the sparse flow engine (previously
+    inlined in core.network / core.sgp): w_sp [.., V, Dmax] edge
+    weights aligned to the padded neighbor lists nbr/mask [V, Dmax],
+    iterated  x <- combine(inject, reduce_e w·(x[nbr] + shift))  until
+    the exact fixed point (loop-free supports are nilpotent) or
+    `max_rounds` (cyclic-φ guard).  See kernels/edge_rounds.py for the
+    semantics of reduce="sum"/"max".
+    """
+    from repro.core.network import _fixed_point
+    V = nbr.shape[0]
+    max_rounds = V if max_rounds is None else max_rounds
+    out_dtype = jnp.promote_types(w_sp.dtype, inject.dtype)
+    w = jnp.where(mask, w_sp, jnp.zeros((), w_sp.dtype)).astype(out_dtype)
+    b = inject.astype(out_dtype)
+
+    if reduce == "sum":
+        def step(x):
+            return b + jnp.sum(w * (x[..., nbr] + shift), axis=-1)
+    elif reduce == "max":
+        def step(x):
+            return jnp.maximum(b, jnp.max(w * (x[..., nbr] + shift),
+                                          axis=-1))
+    else:
+        raise ValueError(f"unknown reduce {reduce!r}")
+
+    x, k = _fixed_point(step, b, max_rounds=max_rounds, with_rounds=True)
+    return (x, k) if return_rounds else x

@@ -145,6 +145,66 @@ def test_huge_scenarios_sparse_only(name):
         net_sl, core.Phi(phi.data[sl], phi.result[sl])))
 
 
+def test_broadcast_early_exit_matches_dense_and_differentiates():
+    """The broadcast engine's early-exit fixed point must stay
+    numerically identical to the dense solve AND reverse-mode
+    differentiable (the while-loop alone is not: the adjoint comes from
+    the implicit function theorem in network._solve_fp_broadcast)."""
+    net, phi, _ = _setup("abilene")
+    c_b = float(core.total_cost(net, phi, "broadcast"))
+    c_d = float(core.total_cost(net, phi, "dense"))
+    assert abs(c_b - c_d) <= 1e-6 * abs(c_d)
+
+    def cost(method):
+        return lambda p: core.total_cost(net, p, method)
+
+    g_b = jax.grad(cost("broadcast"))(phi)
+    g_d = jax.grad(cost("dense"))(phi)
+    np.testing.assert_allclose(np.asarray(g_b.data), np.asarray(g_d.data),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_b.result),
+                               np.asarray(g_d.result),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- distributed
+@pytest.mark.parametrize("name", ["abilene", "fog"])
+def test_distributed_sparse_step_matches_single_device(name):
+    """make_distributed_step(method="sparse", nbrs=...) shard_maps the
+    neighbor-list engine over the task axis (replicated index tiles,
+    one psum of F/G): one step matches the single-device sparse step
+    bitwise up to psum reduction order (result rows exactly, data rows
+    to one float32 ulp)."""
+    from repro.core.distributed import (make_distributed_step, pad_tasks,
+                                        task_mesh)
+    net, phi, nbrs = _setup(name)
+    mesh = task_mesh()
+    consts = make_consts(net, core.total_cost(net, phi, "sparse",
+                                              nbrs=nbrs))
+    step = make_distributed_step(mesh, method="sparse", nbrs=nbrs)
+    net_p, phi_p, S = pad_tasks(net, phi, mesh.devices.size)
+    phi_dist, cost = step(net_p, phi_p, consts, jnp.asarray(1.0))
+    # make_distributed_step pins kappa=0.0 (Gallager scaling off)
+    phi_s, aux = _sgp_step_impl(net, phi, consts, method="sparse",
+                                nbrs=nbrs, kappa=0.0,
+                                sigma=jnp.asarray(1.0))
+    np.testing.assert_array_equal(np.asarray(phi_dist.result[:S]),
+                                  np.asarray(phi_s.result))
+    np.testing.assert_allclose(np.asarray(phi_dist.data[:S]),
+                               np.asarray(phi_s.data), atol=1e-6)
+    np.testing.assert_allclose(float(cost), float(aux["cost"]), rtol=1e-7)
+
+
+def test_run_distributed_sparse_converges_like_dense():
+    """The sparse distributed driver descends to the same cost as the
+    dense single-device reference on abilene."""
+    net, phi0, _ = _setup("abilene")
+    _, h_d = core.run(net, phi0, n_iters=30)
+    _, h_s = core.run_distributed(net, phi0, n_iters=30, method="sparse")
+    assert abs(h_d["final_cost"] - h_s["final_cost"]) \
+        <= 1e-3 * h_d["final_cost"]
+
+
 # ------------------------------------------------------------ projection edge
 def test_fully_blocked_rows_project_to_zero():
     """Regression: a row with nothing permitted must come back all-zero
