@@ -1,0 +1,141 @@
+"""Perf-regression gate: diff a fresh ``BENCH_report.json`` against the
+committed one and fail on sparse per-step slowdowns.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --fresh BENCH_fresh.json [--committed BENCH_report.json] \
+        [--threshold 0.2]
+
+Rows are keyed by (name, engine_impl).  Only the sparse scale-sweep
+timing rows (``scale_flows_sparse*``, ``scale_step_sparse*``,
+``scale_run_sparse*``, ``scale_rounds_*``) gate the exit status: a
+fresh row more than ``threshold`` (default 20%) slower than its
+committed counterpart is a regression and the process exits 1.  Rows
+present on only one side are reported but never fail — machines differ
+in which sizes/backends they sweep — EXCEPT that comparing zero gated
+rows overall (the sweep never ran, or a stale baseline) exits 2
+instead of passing vacuously.
+
+Wall-clock on shared CPU CI is noisy, so this runs behind the `slow`
+tier (``pytest -m slow tests/test_bench_regression.py``) or explicitly
+via ``python -m benchmarks.run --only scale --check-against
+BENCH_report.json``; it is NOT part of tier-1.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# rows that gate the exit status: the sparse engine's per-step costs —
+# the perf trajectory the sparse-native Phi layout is accountable for
+GATED_PREFIXES = ("scale_flows_sparse", "scale_step_sparse",
+                  "scale_run_sparse", "scale_rounds_")
+
+
+def rows_to_dict(rows) -> dict:
+    """Row list -> {(name, engine_impl): us_per_call} timing rows."""
+    out = {}
+    for r in rows:
+        us = float(r.get("us_per_call", 0.0))
+        if us <= 0.0:  # skipped / derived-only rows can't be compared
+            continue
+        out[(r["name"], r.get("engine_impl"))] = us
+    return out
+
+
+def load_rows(path: str) -> dict:
+    """JSON report file -> {(name, engine_impl): us_per_call} rows."""
+    with open(path) as f:
+        return rows_to_dict(json.load(f))
+
+
+def is_gated(name: str) -> bool:
+    return name.startswith(GATED_PREFIXES)
+
+
+def compare(fresh: dict, committed: dict, threshold: float = 0.2):
+    """Returns (regressions, improvements, missing): regressions are
+    gated rows slower by more than `threshold`; missing rows exist on
+    one side only (informational)."""
+    regressions, improvements, missing = [], [], []
+    for key, base in sorted(committed.items()):
+        name, impl = key
+        if not is_gated(name):
+            continue
+        if key not in fresh:
+            missing.append((name, impl, "absent_from_fresh"))
+            continue
+        ratio = fresh[key] / base
+        entry = (name, impl, base, fresh[key], ratio)
+        if ratio > 1.0 + threshold:
+            regressions.append(entry)
+        elif ratio < 1.0 - threshold:
+            improvements.append(entry)
+    for key in sorted(fresh):
+        if is_gated(key[0]) and key not in committed:
+            missing.append((key[0], key[1], "absent_from_committed"))
+    return regressions, improvements, missing
+
+
+def report(fresh: dict, committed: dict, threshold: float = 0.2,
+           out=sys.stdout) -> int:
+    """Diff two loaded row dicts; print a summary; return exit status.
+
+    Takes the already-loaded dicts so a caller about to overwrite the
+    committed file (benchmarks.run --check-against) can snapshot the
+    baseline FIRST — comparing a report against itself on disk would
+    always pass.
+    """
+    regressions, improvements, missing = compare(fresh, committed, threshold)
+    for name, impl, base, new, ratio in regressions:
+        print(f"REGRESSION {name} [{impl}]: {base:.0f}us -> {new:.0f}us "
+              f"({ratio:.2f}x, threshold {1.0 + threshold:.2f}x)", file=out)
+    for name, impl, base, new, ratio in improvements:
+        print(f"improved   {name} [{impl}]: {base:.0f}us -> {new:.0f}us "
+              f"({ratio:.2f}x)", file=out)
+    for name, impl, why in missing:
+        print(f"note       {name} [{impl}]: {why}", file=out)
+    n_gated = sum(1 for k in committed if is_gated(k[0]))
+    n_compared = sum(1 for k in committed
+                     if is_gated(k[0]) and k in fresh)
+    print(f"# {len(regressions)} regression(s) over {n_compared} compared "
+          f"of {n_gated} gated committed rows "
+          f"(threshold +{threshold:.0%})", file=out)
+    if n_compared == 0:
+        # comparing nothing (stale/empty baseline, or a fresh run that
+        # never produced the gated rows) must not green-light anything
+        print("# ERROR: no gated sparse rows were compared — run the "
+              "scale sweep and point --committed at a report that has "
+              "them", file=out)
+        return 2
+    return 1 if regressions else 0
+
+
+def compare_files(fresh_path: str, committed_path: str,
+                  threshold: float = 0.2, out=sys.stdout) -> int:
+    """Diff two report files; print a summary; return the exit status."""
+    import os
+    if os.path.realpath(fresh_path) == os.path.realpath(committed_path):
+        print(f"cannot compare {fresh_path!r} against itself; write the "
+              "fresh report to a different --json path", file=out)
+        return 2
+    return report(load_rows(fresh_path), load_rows(committed_path),
+                  threshold, out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on >threshold sparse per-step slowdowns "
+                    "between two BENCH_*.json reports")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated report (benchmarks.run --json)")
+    ap.add_argument("--committed", default="BENCH_report.json",
+                    help="reference report (default: the committed one)")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="allowed fractional slowdown (default 0.2 = 20%%)")
+    args = ap.parse_args(argv)
+    return compare_files(args.fresh, args.committed, args.threshold)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,8 +29,20 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default="BENCH_report.json",
                     help="write every emitted row to this JSON file "
                          "('' disables)")
+    ap.add_argument("--check-against", default=None, metavar="REPORT",
+                    help="diff the fresh rows against this committed "
+                         "BENCH_*.json (snapshotted before --json can "
+                         "overwrite it) and exit nonzero on >20%% sparse "
+                         "per-step slowdown (benchmarks.check_regression)")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else ALL
+
+    committed_rows = None
+    if args.check_against:
+        # snapshot the baseline BEFORE the sweep: --json may overwrite
+        # the very file we are diffing against
+        from .check_regression import load_rows
+        committed_rows = load_rows(args.check_against)
 
     print("name,us_per_call,derived")
     failures = 0
@@ -69,11 +81,28 @@ def main(argv=None) -> int:
             failures += 1
             print(f"{name},0.0,FAILED", flush=True)
             traceback.print_exc()
+    gate_rc = 0
+    if args.check_against:
+        # gate output goes to stderr: stdout is the CSV row stream
+        from .check_regression import report, rows_to_dict
+        gate_rc = report(rows_to_dict(common.ROWS), committed_rows,
+                         out=sys.stderr)
+        failures += gate_rc
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(common.ROWS, f, indent=1)
-        print(f"# wrote {len(common.ROWS)} rows to {args.json}",
-              file=sys.stderr)
+        import os
+        same_file = (args.check_against is not None and
+                     os.path.realpath(args.json)
+                     == os.path.realpath(args.check_against))
+        if gate_rc and same_file:
+            # a failed gate must not replace its own baseline with the
+            # regressed rows (a re-run would then pass vacuously)
+            print(f"# gate failed: leaving baseline {args.json} untouched",
+                  file=sys.stderr)
+        else:
+            with open(args.json, "w") as f:
+                json.dump(common.ROWS, f, indent=1)
+            print(f"# wrote {len(common.ROWS)} rows to {args.json}",
+                  file=sys.stderr)
     return 1 if failures else 0
 
 

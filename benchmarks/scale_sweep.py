@@ -18,6 +18,15 @@ one-gather-per-round path, "pallas" the fused single-launch kernel
 representative of TPU latency; the TPU win is all the per-round
 dispatches it removes).
 
+``scale_flows/step_sparse_native_V<V>`` rows time the same engine fed
+the edge-slot `PhiSparse` layout (no gather on entry, no [S, V, V+1]
+scatter on exit — the step-boundary cost the plain ``sparse``
+flows/step rows still pay); ``scale_native_speedup_V<V>`` is the
+per-step ratio.  The two ``scale_run_*`` driver rows differ only by
+one boundary conversion pair across the whole run — `core.run`
+converts dense φ⁰ once and iterates natively either way — so expect
+the layout win in the step rows, not the run rows.
+
 The dense and broadcast engines are skipped above ``DENSE_V_LIMIT`` by
 default — measured on CPU at V=500 the dense step takes 22.6 s vs 86 ms
 sparse (262×), so timing them at every size is the slow way to learn
@@ -51,15 +60,20 @@ def _kernel_impl() -> str:
 
 
 def _bench_method(net, phi0, nbrs, method: str, engine_impl=None,
-                  n_timed: int = 3, with_run: bool = True):
+                  n_timed: int = 3, with_run: bool = True,
+                  row: str | None = None):
+    """Time flows/step/run for one engine; `row` names the emitted rows
+    (defaults to `method`; "sparse_native" rows pass `phi0` as a
+    PhiSparse so the step boundary never leaves the edge-slot layout)."""
     V = net.V
+    row = row or method
     kw = {"nbrs": nbrs, "engine_impl": engine_impl} \
         if method == "sparse" else {}
 
     flows = jax.jit(
         lambda p: core.compute_flows(net, p, method, **kw).F)
     us_fl = time_call(lambda: jax.block_until_ready(flows(phi0)), n=n_timed)
-    emit(f"scale_flows_{method}_V{V}", us_fl, f"Dmax={nbrs.Dmax}",
+    emit(f"scale_flows_{row}_V{V}", us_fl, f"Dmax={nbrs.Dmax}",
          engine_impl=engine_impl)
 
     consts = make_consts(net, core.total_cost(net, phi0, method, **kw))
@@ -69,7 +83,7 @@ def _bench_method(net, phi0, nbrs, method: str, engine_impl=None,
         jax.block_until_ready(p.data)
 
     us_st = time_call(step, n=n_timed)
-    emit(f"scale_step_{method}_V{V}", us_st, "", engine_impl=engine_impl)
+    emit(f"scale_step_{row}_V{V}", us_st, "", engine_impl=engine_impl)
 
     if with_run:
         # warm the jit caches (step + cost eval) so the row reports the
@@ -81,7 +95,7 @@ def _bench_method(net, phi0, nbrs, method: str, engine_impl=None,
                            engine_impl=engine_impl)
         dt = (time.perf_counter() - t0) * 1e6
         head = "|".join(f"{c:.2f}" for c in hist["costs"][:4])
-        emit(f"scale_run_{method}_V{V}", dt / N_ITERS,
+        emit(f"scale_run_{row}_V{V}", dt / N_ITERS,
              f"cost0->N:{head}->{hist['final_cost']:.2f}",
              engine_impl=engine_impl)
     return us_st
@@ -124,12 +138,22 @@ def run(full: bool = False, sizes=SIZES):
                     ref_us.setdefault(method, us)
                     ref_us[f"sparse_{impl}"] = us
                     _bench_rounds(net, phi0, nbrs, impl)
+                # the edge-slot PhiSparse layout end-to-end: same engine
+                # minus the per-step gather + [S, V, V+1] scatter
+                phi0_sp = core.phi_to_sparse(phi0, nbrs)
+                ref_us["sparse_native"] = _bench_method(
+                    net, phi0_sp, nbrs, method, engine_impl="ref",
+                    row="sparse_native")
             else:
                 ref_us[method] = _bench_method(net, phi0, nbrs, method)
         if "dense" in ref_us and "sparse" in ref_us:
             emit(f"scale_speedup_V{V}",
                  ref_us["dense"] / max(ref_us["sparse"], 1e-9),
                  "dense_us/sparse_us_per_step")
+        if "sparse" in ref_us and "sparse_native" in ref_us:
+            emit(f"scale_native_speedup_V{V}",
+                 ref_us["sparse"] / max(ref_us["sparse_native"], 1e-9),
+                 "sparse_us/native_us_per_step")
 
 
 if __name__ == "__main__":

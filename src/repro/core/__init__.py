@@ -9,10 +9,12 @@ Public API:
   TABLE_II, make_scenario, fail_node                    (scenarios, §V)
 """
 from .costs import Cost, CostFamily, FAMILIES, LINEAR, QUEUE, SAT
-from .network import (CECNetwork, Flows, Neighbors, Phi, build_neighbors,
-                      compute_flows, cost_of_flows, gather_edges,
-                      is_loop_free, offload_phi, refeasibilize,
-                      scatter_edges, spt_phi, total_cost, uniform_phi)
+from .network import (CECNetwork, Flows, Neighbors, Phi, PhiSparse,
+                      as_dense_phi, build_neighbors, compute_flows,
+                      cost_of_flows, gather_edges, is_loop_free, mask_slots,
+                      offload_phi, phi_to_sparse, refeasibilize,
+                      refeasibilize_sparse, scatter_edges, sparse_to_phi,
+                      spt_phi, spt_phi_sparse, total_cost, uniform_phi)
 from .marginals import Marginals, compute_marginals, phi_gradients
 from .sgp import SGPConsts, make_consts, project_rows, run, sgp_step
 from .baselines import run_all, run_lcor, run_lpr, run_spoo
@@ -25,10 +27,12 @@ from . import moe_bridge, topologies
 
 __all__ = [
     "Cost", "CostFamily", "FAMILIES", "LINEAR", "QUEUE", "SAT",
-    "CECNetwork", "Flows", "Neighbors", "Phi", "build_neighbors",
-    "compute_flows", "cost_of_flows", "gather_edges", "is_loop_free",
-    "offload_phi", "refeasibilize", "scatter_edges", "spt_phi",
-    "total_cost", "uniform_phi",
+    "CECNetwork", "Flows", "Neighbors", "Phi", "PhiSparse", "as_dense_phi",
+    "build_neighbors", "compute_flows", "cost_of_flows", "gather_edges",
+    "is_loop_free", "mask_slots", "offload_phi", "phi_to_sparse",
+    "refeasibilize", "refeasibilize_sparse", "scatter_edges",
+    "sparse_to_phi", "spt_phi", "spt_phi_sparse", "total_cost",
+    "uniform_phi",
     "Marginals", "compute_marginals", "phi_gradients",
     "SGPConsts", "make_consts", "project_rows", "run", "sgp_step",
     "run_all", "run_lcor", "run_lpr", "run_spoo",

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .network import CECNetwork, Neighbors, Phi, build_neighbors
+from .network import (CECNetwork, Neighbors, Phi, PhiSparse,
+                      build_neighbors, phi_to_sparse, sparse_to_phi)
 from .sgp import SGPConsts, _sgp_step_impl, make_consts
 
 AXIS = "tasks"
@@ -48,11 +49,14 @@ def task_mesh(n_devices: Optional[int] = None) -> Mesh:
     return Mesh(devs, (AXIS,))
 
 
-def pad_tasks(net: CECNetwork, phi: Phi, n_shards: int):
+def pad_tasks(net: CECNetwork, phi, n_shards: int):
     """Pad the task dimension to a multiple of the device count.
 
     Padding tasks have zero input rate: they generate no flow, no cost,
-    and their (irrelevant) routing variables stay feasible.
+    and their (irrelevant) routing variables stay feasible.  Both φ
+    layouts are handled; an edge-slot `PhiSparse` is padded in its own
+    layout — no dense [S, V, V+1] detour (at the V ~ 10³ × S ~ 10⁴
+    scale this function exists for, that array would not fit).
     """
     S = net.S
     Sp = ((S + n_shards - 1) // n_shards) * n_shards
@@ -66,6 +70,13 @@ def pad_tasks(net: CECNetwork, phi: Phi, n_shards: int):
     net_p = dataclasses.replace(
         net, dest=pad(net.dest), r=pad(net.r),
         a=pad(net.a, 1.0), w=pad(net.w, 1.0), task_type=pad(net.task_type))
+    if isinstance(phi, PhiSparse):
+        # padded φ: all-local data, empty result rows (zero rate means
+        # zero result traffic, so the empty — trivially loop-free — row
+        # is feasible and the step's zero-traffic jump governs anyway)
+        local = pad(phi.local).at[S:].set(1.0)
+        return net_p, PhiSparse(pad(phi.data), local,
+                                pad(phi.result)), S
     # padded φ: all-local data, result parked one-hot on the first
     # out-neighbor (any feasible loop-free row works: rate is zero)
     data = pad(phi.data)
@@ -86,11 +97,14 @@ def make_distributed_step(mesh: Mesh, variant: str = "sgp",
     """Build the jitted shard_map SGP step for a 1-D task mesh.
 
     method="sparse" shard_maps the neighbor-list engine over the task
-    axis: per-task gathers and edge_rounds recursions are shard-local
-    (the `Neighbors` index tiles are replicated on every device), and
-    the only collective stays the one psum of F/G.  `nbrs` must then be
-    the precomputed `build_neighbors(adj)`; engine_impl picks the
-    message-passing backend (see kernels.ops.edge_rounds).
+    axis: per-task edge_rounds recursions are shard-local (the
+    `Neighbors` index tiles are replicated on every device), and the
+    only collective stays the one psum of F/G.  The step then takes and
+    returns the edge-slot `PhiSparse` layout — each shard's φ lives in
+    [S/n, V, Dmax] slots end-to-end, so no [S, V, V+1] array exists on
+    any device (`run_distributed` converts at the boundary).  `nbrs`
+    must then be the precomputed `build_neighbors(adj)`; engine_impl
+    picks the message-passing backend (see kernels.ops.edge_rounds).
     """
     if method == "sparse" and nbrs is None:
         raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
@@ -98,7 +112,8 @@ def make_distributed_step(mesh: Mesh, variant: str = "sgp",
     task_sharded = CECNetwork(
         adj=P(), link_cost=P(), comp_cost=P(),
         dest=P(AXIS), r=P(AXIS), a=P(AXIS), w=P(AXIS), task_type=P(AXIS))
-    phi_spec = Phi(P(AXIS), P(AXIS))
+    phi_spec = (PhiSparse(P(AXIS), P(AXIS), P(AXIS)) if method == "sparse"
+                else Phi(P(AXIS), P(AXIS)))
     consts_spec = SGPConsts(P(), P(), P(), P())
     # replicated index tiles (None, an empty pytree, off the sparse path)
     nbrs_spec = (Neighbors(P(), P(), P(), P(), P())
@@ -124,7 +139,7 @@ def _call_with_nbrs(jitted, nbrs, net, phi, consts, sigma):
     return jitted(net, phi, consts, sigma, nbrs)
 
 
-def run_distributed(net: CECNetwork, phi0: Phi, n_iters: int = 200,
+def run_distributed(net: CECNetwork, phi0, n_iters: int = 200,
                     mesh: Optional[Mesh] = None, variant: str = "sgp",
                     scaling: str = "adaptive", kappa: float = 0.0,
                     min_scale: float = 0.05, method: str = "dense",
@@ -134,7 +149,12 @@ def run_distributed(net: CECNetwork, phi0: Phi, n_iters: int = 200,
     method="sparse" runs the neighbor-list engine on every shard (the
     V ~ 10³ × S ~ 10⁴ regime: per-task edge arrays shard over devices,
     the [V, Dmax] index tiles are replicated, one psum of F/G couples
-    the shards).  Returns (phi_final [original S], history).
+    the shards); φ is converted to the edge-slot `PhiSparse` layout at
+    the boundary and iterated natively, so the loop never materializes
+    [S, V, V+1].  Returns (phi_final [original S], history); the
+    returned φ matches the input layout (dense `Phi` in, dense back; a
+    `PhiSparse` φ⁰ is padded, iterated AND returned in slot layout, so
+    the huge-S regime never touches a dense φ at all).
     Bitwise-equivalent to the single-device path up to reduction order
     (validated in tests).
     """
@@ -142,8 +162,19 @@ def run_distributed(net: CECNetwork, phi0: Phi, n_iters: int = 200,
 
     mesh = mesh or task_mesh()
     n_dev = mesh.devices.size
-    net_p, phi_p, S = pad_tasks(net, phi0, n_dev)
     nbrs = build_neighbors(net.adj) if method == "sparse" else None
+    sparse_in = isinstance(phi0, PhiSparse)
+    if sparse_in and method != "sparse":
+        # same contract as core.run / compute_flows: the dense engines
+        # need dense coordinates — at the scale PhiSparse exists for,
+        # silently materializing them would be an OOM, not a favor
+        raise ValueError("PhiSparse requires method='sparse'; convert "
+                         "with sparse_to_phi for the dense/broadcast "
+                         "engines")
+    net_p, phi_p, S = pad_tasks(net, phi0, n_dev)
+    if method == "sparse" and not sparse_in:
+        # boundary: the loop below iterates natively in edge slots
+        phi_p = phi_to_sparse(phi_p, nbrs)
     step = make_distributed_step(mesh, variant=variant, scaling=scaling,
                                  kappa=kappa, method=method, nbrs=nbrs,
                                  engine_impl=engine_impl)
@@ -173,6 +204,11 @@ def run_distributed(net: CECNetwork, phi0: Phi, n_iters: int = 200,
             phi = phi_new
             costs.append(new_cost)
             sigma = max(sigma / 1.5, 1.0)
-    phi_out = Phi(phi.data[:S], phi.result[:S])
+    if method == "sparse" and not sparse_in:
+        phi = sparse_to_phi(phi, nbrs, net.V)     # boundary: back to dense
+    if isinstance(phi, PhiSparse):
+        phi_out = PhiSparse(phi.data[:S], phi.local[:S], phi.result[:S])
+    else:
+        phi_out = Phi(phi.data[:S], phi.result[:S])
     return phi_out, {"costs": costs, "final_cost": costs[-1],
                      "n_rejected": n_rejected}

@@ -26,9 +26,9 @@ import jax
 import jax.numpy as jnp
 
 from .costs import Cost
-from .network import (CECNetwork, Flows, Neighbors, Phi,
-                      _solve_fp_broadcast, build_neighbors, gather_edges,
-                      solve_downstream_sparse)
+from .network import (CECNetwork, Flows, Neighbors, Phi, PhiSparse,
+                      _phi_edge_views, _solve_fp_broadcast, build_neighbors,
+                      gather_edges, solve_downstream_sparse)
 
 BIG = 1e12  # marginal cost assigned to non-edges (never selected)
 
@@ -61,10 +61,14 @@ def _solve_downstream(phi_nbr: jnp.ndarray, b: jnp.ndarray,
     raise ValueError(method)
 
 
-def compute_marginals(net: CECNetwork, phi: Phi, fl: Flows,
+def compute_marginals(net: CECNetwork, phi, fl: Flows,
                       method: str = "dense",
                       nbrs: Neighbors | None = None,
                       engine_impl: str | None = None) -> Marginals:
+    """`phi` is a dense `Phi`, or (method="sparse" only) an edge-slot
+    `PhiSparse` consumed in place — no gather, no dense intermediate."""
+    if isinstance(phi, PhiSparse) and method != "sparse":
+        raise ValueError("PhiSparse requires method='sparse'")
     if method == "sparse":
         return _compute_marginals_sparse(
             net, phi, fl,
@@ -96,16 +100,14 @@ def compute_marginals(net: CECNetwork, phi: Phi, fl: Flows,
     return Marginals(rho_data, rho_result, delta_data, delta_result, Dp, Cp)
 
 
-def _compute_marginals_sparse(net: CECNetwork, phi: Phi, fl: Flows,
+def _compute_marginals_sparse(net: CECNetwork, phi, fl: Flows,
                               nbrs: Neighbors,
                               impl: str | None = None) -> Marginals:
     """Eq. 9-13 as out-edge message passing in [S, V, Dmax] layout."""
     Dp_sp = gather_edges(net.link_cost.d1(fl.F), nbrs)    # [V, Dmax]
     Cp = net.comp_cost.d1(fl.G)
 
-    phi_d_sp = gather_edges(phi.data, nbrs)
-    phi_loc = phi.data[..., -1]
-    phi_r_sp = gather_edges(phi.result, nbrs)
+    phi_d_sp, phi_loc, phi_r_sp = _phi_edge_views(phi, nbrs)
 
     # Stage 1 (paper broadcast stage 1): result marginals, from destination.
     b_r = jnp.sum(phi_r_sp * Dp_sp[None], axis=-1)

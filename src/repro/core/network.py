@@ -9,11 +9,37 @@ State layout (fixed-shape, jit-friendly; V nodes, S tasks):
   w          [S, V]   float  computation weight w_{i, m_s}
   task_type  [S]      int    computation type m of each task (bookkeeping)
 
-Routing/offloading strategy phi (paper's φ), stored dense:
+Routing/offloading strategy phi (paper's φ), in one of two layouts:
+
+`Phi` — the dense reference layout (public API, human-readable):
 
   data    [S, V, V+1]  φ⁻: columns 0..V-1 forward to neighbor j, column V
                        is the local-offload fraction φ⁻_i0 ("0" in paper)
   result  [S, V, V]    φ⁺: result forwarding fractions; row dest[s] ≡ 0
+
+`PhiSparse` — the edge-slot layout the sparse engine iterates in
+(aligned to `Neighbors.out_nbr`, see the slot convention below):
+
+  data    [S, V, Dmax]  φ⁻ on out-edge slots: data[s, i, e] is the
+                        fraction forwarded along edge i -> out_nbr[i, e]
+  local   [S, V, 1]     the local-compute column φ⁻_i0 (kept as its own
+                        [.., 1] tensor so the QP rows are
+                        concat([data, local]) with no dense detour)
+  result  [S, V, Dmax]  φ⁺ on the same out-edge slots; row dest[s] ≡ 0
+
+Slot semantics: `data`/`result` slots with `out_mask[i, e] == False` are
+PADDING — they carry no meaning, are ignored (masked to zero) by every
+consumer, and may hold arbitrary garbage; `local` is always meaningful.
+Conversion contract: `phi_to_sparse` / `sparse_to_phi` are mutually
+inverse wherever φ is feasible — `sparse_to_phi(phi_to_sparse(p)) == p`
+bitwise whenever p puts mass only on edges + the local column (any
+feasible φ), and `phi_to_sparse(sparse_to_phi(q)) == q` bitwise up to
+zeroed padding slots.  Under `method="sparse"` the whole SGP iteration
+(flows, marginals, blocked sets, QP projection, drivers, shard_map)
+consumes and produces `PhiSparse` directly, so no `[S, V, V+1]` array is
+ever materialized inside the loop; `Phi` remains the reference layout at
+the public boundary (scenario construction, `spt_phi`, optimality
+checks, plotting).
 
 Flow computation: with loop-free φ the supports are DAGs, so the traffic
 recursions (1)-(2) are nonsingular sparse triangular-like systems
@@ -98,8 +124,32 @@ class CECNetwork:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class Phi:
+    """Dense reference layout of the routing strategy φ (module docstring)."""
     data: jnp.ndarray    # [S, V, V+1]
     result: jnp.ndarray  # [S, V, V]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PhiSparse:
+    """Edge-slot layout of φ, aligned to `Neighbors.out_nbr` index tiles.
+
+    See the module docstring for slot semantics (data/result slots vs
+    the local-compute column) and the `phi_to_sparse`/`sparse_to_phi`
+    conversion contract.  Padding slots (out_mask False) are ignored by
+    every consumer and may hold garbage.
+    """
+    data: jnp.ndarray    # [S, V, Dmax]  φ⁻ out-edge slots
+    local: jnp.ndarray   # [S, V, 1]     φ⁻_i0 local-compute column
+    result: jnp.ndarray  # [S, V, Dmax]  φ⁺ out-edge slots
+
+    @property
+    def S(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def Dmax(self) -> int:
+        return self.data.shape[-1]
 
 
 @jax.tree_util.register_dataclass
@@ -196,6 +246,50 @@ def scatter_edges(x_sp: jnp.ndarray, nbrs: Neighbors, K: int) -> jnp.ndarray:
     x_sp = jnp.where(nbrs.out_mask, x_sp, jnp.zeros((), x_sp.dtype))
     out = jnp.zeros(x_sp.shape[:-2] + (nbrs.V, K), x_sp.dtype)
     return out.at[..., idx_i, nbrs.out_nbr].add(x_sp)
+
+
+def mask_slots(x_sp: jnp.ndarray, nbrs: Neighbors,
+               fill: float = 0.0) -> jnp.ndarray:
+    """Zero (or `fill`) the padding slots of an [..., V, Dmax] edge array.
+
+    Every consumer of `PhiSparse` slots sanitizes through this, so
+    garbage (even NaN) in padded slots never leaks into flows, marginals
+    or blocked sets — bitwise identical to what `gather_edges` of the
+    equivalent dense array would produce.
+    """
+    return jnp.where(nbrs.out_mask, x_sp, jnp.asarray(fill, dtype=x_sp.dtype))
+
+
+def phi_to_sparse(phi: Phi, nbrs: Neighbors) -> PhiSparse:
+    """Dense `Phi` -> edge-slot `PhiSparse` (lossless for feasible φ).
+
+    Mass on non-edge coordinates (infeasible φ only) is dropped; padding
+    slots come back exactly zero.
+    """
+    return PhiSparse(data=gather_edges(phi.data, nbrs),
+                     local=phi.data[..., -1:],
+                     result=gather_edges(phi.result, nbrs))
+
+
+def sparse_to_phi(phi_sp: PhiSparse, nbrs: Neighbors,
+                  V: int | None = None) -> Phi:
+    """Edge-slot `PhiSparse` -> dense `Phi` (always lossless).
+
+    Each slot scatters to its unique (i, out_nbr[i, e]) column, so the
+    roundtrip `phi_to_sparse(sparse_to_phi(q))` reproduces q bitwise on
+    real slots (padding is zeroed).
+    """
+    V = nbrs.V if V is None else V
+    data = jnp.concatenate(
+        [scatter_edges(phi_sp.data, nbrs, V), phi_sp.local], axis=-1)
+    return Phi(data, scatter_edges(phi_sp.result, nbrs, V))
+
+
+def as_dense_phi(phi, net: "CECNetwork") -> Phi:
+    """Coerce either φ layout to the dense reference layout."""
+    if isinstance(phi, PhiSparse):
+        return sparse_to_phi(phi, build_neighbors(net.adj), net.adj.shape[0])
+    return phi
 
 
 def _fixed_point(step, x0: jnp.ndarray, max_rounds: int,
@@ -324,14 +418,21 @@ def _solve_traffic(phi_nbr: jnp.ndarray, inject: jnp.ndarray,
     raise ValueError(f"unknown method {method}")
 
 
-def compute_flows(net: CECNetwork, phi: Phi, method: str = "dense",
+def compute_flows(net: CECNetwork, phi, method: str = "dense",
                   nbrs: Neighbors | None = None,
                   engine_impl: str | None = None) -> Flows:
     """Forward pass of the flow model: φ -> all traffic and flows.
 
-    engine_impl selects the sparse message-passing backend (see the
-    module docstring); ignored by the dense/broadcast engines.
+    `phi` is a dense `Phi` or (with method="sparse") an edge-slot
+    `PhiSparse`, which is consumed directly — no gather, no dense
+    [S, V, V+1] intermediate.  engine_impl selects the sparse
+    message-passing backend (see the module docstring); ignored by the
+    dense/broadcast engines.
     """
+    if isinstance(phi, PhiSparse) and method != "sparse":
+        raise ValueError(
+            f"PhiSparse requires method='sparse', got {method!r}; convert "
+            "with sparse_to_phi for the dense/broadcast engines")
     if method == "sparse":
         return _compute_flows_sparse(net, phi,
                                      nbrs if nbrs is not None
@@ -353,12 +454,24 @@ def compute_flows(net: CECNetwork, phi: Phi, method: str = "dense",
     return Flows(t_data, t_result, g, F, G, f_data, f_result)
 
 
-def _compute_flows_sparse(net: CECNetwork, phi: Phi, nbrs: Neighbors,
+def _phi_edge_views(phi, nbrs: Neighbors):
+    """Edge-slot views (phi_d_sp, phi_loc, phi_r_sp) of either φ layout.
+
+    `PhiSparse` slots are used in place (padding masked to zero, exactly
+    like a gather of the equivalent dense φ would); dense `Phi` is
+    gathered onto the slots.
+    """
+    if isinstance(phi, PhiSparse):
+        return (mask_slots(phi.data, nbrs), phi.local[..., 0],
+                mask_slots(phi.result, nbrs))
+    return (gather_edges(phi.data, nbrs), phi.data[..., -1],
+            gather_edges(phi.result, nbrs))
+
+
+def _compute_flows_sparse(net: CECNetwork, phi, nbrs: Neighbors,
                           impl: str | None = None) -> Flows:
     """Sparse flow engine: all edge quantities in [S, V, Dmax] layout."""
-    phi_d_sp = gather_edges(phi.data, nbrs)       # [S, V, Dmax]
-    phi_loc = phi.data[..., -1]                   # [S, V]
-    phi_r_sp = gather_edges(phi.result, nbrs)
+    phi_d_sp, phi_loc, phi_r_sp = _phi_edge_views(phi, nbrs)
 
     t_data = _solve_traffic_sparse(phi_d_sp, net.r, nbrs, impl)
     g = t_data * phi_loc
@@ -372,7 +485,7 @@ def _compute_flows_sparse(net: CECNetwork, phi: Phi, nbrs: Neighbors,
     return Flows(t_data, t_result, g, F, G, f_data, f_result)
 
 
-def total_cost(net: CECNetwork, phi: Phi, method: str = "dense",
+def total_cost(net: CECNetwork, phi, method: str = "dense",
                nbrs: Neighbors | None = None,
                engine_impl: str | None = None) -> jnp.ndarray:
     fl = compute_flows(net, phi, method, nbrs=nbrs, engine_impl=engine_impl)
@@ -481,6 +594,17 @@ def spt_phi(net: CECNetwork, weight: np.ndarray | None = None) -> Phi:
     return Phi(jnp.asarray(data), jnp.asarray(result))
 
 
+def spt_phi_sparse(net: CECNetwork, nbrs: Neighbors | None = None,
+                   weight: np.ndarray | None = None) -> PhiSparse:
+    """`spt_phi` delivered in the edge-slot layout (boundary helper).
+
+    The dense construction is the reference; the conversion is the only
+    [S, V, V+1] materialization and happens once, outside any loop.
+    """
+    nbrs = build_neighbors(net.adj) if nbrs is None else nbrs
+    return phi_to_sparse(spt_phi(net, weight), nbrs)
+
+
 def offload_phi(net: CECNetwork, compute_nodes, weight: np.ndarray | None = None
                 ) -> Phi:
     """Feasible loop-free φ⁰ that computes only at `compute_nodes`.
@@ -519,15 +643,16 @@ def offload_phi(net: CECNetwork, compute_nodes, weight: np.ndarray | None = None
 
 
 # --------------------------------------------------------------------------
-def support_matrices(net: CECNetwork, phi: Phi, tol: float = 0.0
+def support_matrices(net: CECNetwork, phi, tol: float = 0.0
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Boolean support of data / result forwarding (neighbors only)."""
+    phi = as_dense_phi(phi, net)
     sup_d = (phi.data[..., :-1] > tol) & net.adj[None]
     sup_r = (phi.result > tol) & net.adj[None]
     return sup_d, sup_r
 
 
-def is_loop_free(net: CECNetwork, phi: Phi, tol: float = 0.0) -> jnp.ndarray:
+def is_loop_free(net: CECNetwork, phi, tol: float = 0.0) -> jnp.ndarray:
     """True iff both supports are DAGs for every task (boolean closure)."""
     sup_d, sup_r = support_matrices(net, phi, tol)
 
@@ -552,7 +677,15 @@ def refeasibilize(net: CECNetwork, phi: Phi) -> Phi:
     fall back to the shortest-path tree toward their destination on the
     NEW graph (spreading over all out-edges can close a loop and make
     the traffic solve singular).
+
+    Dense layout only — edge-slot iterates go through
+    `refeasibilize_sparse`, which repairs the slots in place and
+    re-slots them onto the new graph's `Neighbors`.
     """
+    if isinstance(phi, PhiSparse):
+        raise TypeError("refeasibilize takes a dense Phi; use "
+                        "refeasibilize_sparse(net, phi_sp, nbrs) for the "
+                        "edge-slot layout")
     adjf = net.adj.astype(phi.data.dtype)
     data_nbr = phi.data[..., :-1] * adjf[None]
     data = jnp.concatenate([data_nbr, phi.data[..., -1:]], axis=-1)
@@ -577,3 +710,66 @@ def refeasibilize(net: CECNetwork, phi: Phi) -> Phi:
     result = jnp.where(broken[:, None, None], spt, result)
     result = jnp.where(is_dest[..., None], 0.0, result)
     return Phi(data, result)
+
+
+def _slot_remap(old: Neighbors, new: Neighbors):
+    """Per-row map from NEW out-edge slots to the OLD slot of the same
+    edge (numpy, concrete): remap[i, e'] = e with old.out_nbr[i, e] ==
+    new.out_nbr[i, e'], valid[i, e'] = that edge existed in the old
+    layout.  Lets a topology change re-slot [S, V, Dmax_old] arrays with
+    one cheap gather instead of a dense scatter/gather roundtrip.
+    """
+    o_nbr = np.asarray(old.out_nbr)
+    n_nbr = np.asarray(new.out_nbr)
+    V = o_nbr.shape[0]
+    slot_of = np.full((V, V), -1, np.int32)
+    ii, ee = np.nonzero(np.asarray(old.out_mask))
+    slot_of[ii, o_nbr[ii, ee]] = ee
+    remap = slot_of[np.arange(V)[:, None], n_nbr]
+    valid = np.asarray(new.out_mask) & (remap >= 0)
+    return jnp.asarray(np.maximum(remap, 0)), jnp.asarray(valid)
+
+
+def refeasibilize_sparse(net: CECNetwork, phi_sp: PhiSparse,
+                         nbrs: Neighbors) -> Tuple[PhiSparse, Neighbors]:
+    """`refeasibilize` for edge-slot iterates after a topology change.
+
+    `nbrs` is the Neighbors the iterate is aligned to (the OLD graph);
+    the repaired strategy comes back aligned to `build_neighbors` of the
+    NEW `net.adj`, together with those new index tiles.  Same policy as
+    the dense version: surviving mass renormalized per row, missing data
+    mass to local offload, any task whose result routing lost mass
+    rebuilt entirely from the new graph's shortest-path tree (partial
+    repair can close a loop).  All slot-level except the one dense SPT
+    construction at the boundary.
+    """
+    new_nbrs = build_neighbors(net.adj)
+    remap, valid = _slot_remap(nbrs, new_nbrs)
+    idx_i = jnp.arange(net.V)[:, None]
+
+    def reslot(x_sp):
+        moved = x_sp[:, idx_i, remap]                      # [S, V, Dmax_new]
+        return jnp.where(valid, moved, jnp.zeros((), x_sp.dtype))
+
+    data = reslot(mask_slots(phi_sp.data, nbrs))
+    local = phi_sp.local[..., 0]
+    dsum = jnp.sum(data, axis=-1) + local
+    # missing mass goes to local offload
+    local = local + jnp.maximum(0.0, 1.0 - dsum)
+    tot = jnp.maximum(jnp.sum(data, axis=-1) + local, 1e-30)
+    data = data / tot[..., None]
+    local = local / tot
+
+    result = reslot(mask_slots(phi_sp.result, nbrs))
+    rsum = jnp.sum(result, axis=-1)                        # [S, V]
+    S, V = net.S, net.V
+    is_dest = (jnp.arange(V)[None] == net.dest[:, None])   # [S, V]
+    # same broken-task policy as the dense path (see refeasibilize)
+    alive = jnp.any(new_nbrs.out_mask, axis=-1)[None] | is_dest
+    broken = jnp.any((rsum <= 1e-12) & ~is_dest & alive, axis=-1)  # [S]
+    spt_sp = gather_edges(spt_phi(net).result, new_nbrs)
+    result = result / jnp.maximum(rsum[..., None], 1e-30)
+    result = jnp.where(rsum[..., None] > 1e-12, result, 0.0)
+    result = jnp.where(broken[:, None, None], spt_sp, result)
+    result = jnp.where(is_dest[..., None], 0.0, result)
+    return PhiSparse(data, local[..., None], result), new_nbrs

@@ -16,16 +16,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from .marginals import BIG, compute_marginals
-from .network import CECNetwork, Phi, compute_flows, is_loop_free
+from .network import (CECNetwork, Phi, as_dense_phi, compute_flows,
+                      is_loop_free)
 
 
-def theorem1_residual(net: CECNetwork, phi: Phi, tol: float = 1e-6) -> Dict:
+def theorem1_residual(net: CECNetwork, phi, tol: float = 1e-6) -> Dict:
     """Max violation of the Theorem-1 conditions.
 
     For every (i, task): active coordinates (φ > tol) must achieve the
     row-min of δ.  Returns the worst absolute gap (δ_active - δ_min) and
-    the corresponding Lemma-1 gap (scaled by traffic).
+    the corresponding Lemma-1 gap (scaled by traffic).  Edge-slot
+    `PhiSparse` iterates are converted at this boundary (the check is a
+    dense reference computation).
     """
+    phi = as_dense_phi(phi, net)
     fl = compute_flows(net, phi)
     mg = compute_marginals(net, phi, fl)
     V = net.V
@@ -52,7 +56,7 @@ def theorem1_residual(net: CECNetwork, phi: Phi, tol: float = 1e-6) -> Dict:
             "loop_free": bool(is_loop_free(net, phi, tol=tol))}
 
 
-def marginals_vs_autodiff(net: CECNetwork, phi: Phi) -> float:
+def marginals_vs_autodiff(net: CECNetwork, phi) -> float:
     """Cross-check Eq. 9-12 closed forms against jax.grad of total cost.
 
     Returns the max abs difference between the analytic gradient
@@ -61,6 +65,7 @@ def marginals_vs_autodiff(net: CECNetwork, phi: Phi) -> float:
     both sides measure the same unconstrained partial derivative.
     """
     from .network import cost_of_flows
+    phi = as_dense_phi(phi, net)
 
     def T_of(phi_):
         return cost_of_flows(net, compute_flows(net, phi_))

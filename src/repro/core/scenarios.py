@@ -19,7 +19,7 @@ import numpy as np
 from . import topologies
 from .costs import Cost, SAT
 from .network import (DENSE_V_LIMIT, CECNetwork, Phi, build_neighbors,
-                      compute_flows, spt_phi)
+                      compute_flows, phi_to_sparse, spt_phi)
 
 
 @dataclasses.dataclass
@@ -126,8 +126,11 @@ def enforce_feasibility(net: CECNetwork, margin: float = 0.75,
     if phi0 is None:
         phi0 = spt_phi(net)
     if net.V > DENSE_V_LIMIT:
-        fl = compute_flows(net, phi0, "sparse",
-                           nbrs=build_neighbors(net.adj))
+        # large graphs: evaluate φ⁰ through the edge-slot layout (the
+        # dense φ⁰ exists only here, at the construction boundary)
+        nbrs = build_neighbors(net.adj)
+        fl = compute_flows(net, phi_to_sparse(phi0, nbrs), "sparse",
+                           nbrs=nbrs)
     else:
         fl = compute_flows(net, phi0)
     limit = margin * SAT

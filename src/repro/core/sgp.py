@@ -36,9 +36,10 @@ import numpy as np
 
 from .costs import Cost
 from .marginals import BIG, Marginals, compute_marginals
-from .network import (CECNetwork, Flows, Neighbors, Phi, build_neighbors,
-                      compute_flows, cost_of_flows, gather_edges,
-                      scatter_edges)
+from .network import (CECNetwork, Flows, Neighbors, Phi, PhiSparse,
+                      _phi_edge_views, build_neighbors, compute_flows,
+                      cost_of_flows, gather_edges, phi_to_sparse,
+                      scatter_edges, sparse_to_phi)
 from ..kernels import ops as kernel_ops
 
 SUPPORT_TOL = 1e-9   # φ below this is treated as zero support
@@ -242,11 +243,15 @@ def _max_path_len_sparse(sup: jnp.ndarray, nbrs: Neighbors,
         reduce="max", shift=1.0, max_rounds=nbrs.V, impl=impl)
 
 
-def blocked_sets_sparse(net: CECNetwork, phi: Phi, mg: Marginals,
+def blocked_sets_sparse(net: CECNetwork, phi, mg: Marginals,
                         nbrs: Neighbors, engine_impl: Optional[str] = None):
-    """`blocked_sets` over edge slots: permitted masks [S, V, Dmax(+1)]."""
-    sup_d = gather_edges(phi.data, nbrs) > SUPPORT_TOL
-    sup_r = gather_edges(phi.result, nbrs) > SUPPORT_TOL
+    """`blocked_sets` over edge slots: permitted masks [S, V, Dmax(+1)].
+
+    `phi` may be a dense `Phi` (gathered onto the slots) or an edge-slot
+    `PhiSparse` (supports read off the slots in place)."""
+    phi_d_sp, _, phi_r_sp = _phi_edge_views(phi, nbrs)
+    sup_d = phi_d_sp > SUPPORT_TOL
+    sup_r = phi_r_sp > SUPPORT_TOL
 
     taint_d = _taint_sparse(sup_d, mg.rho_data, nbrs, engine_impl)
     taint_r = _taint_sparse(sup_r, mg.rho_result, nbrs, engine_impl)
@@ -268,7 +273,7 @@ def blocked_sets_sparse(net: CECNetwork, phi: Phi, mg: Marginals,
 
 
 # ------------------------------------------------------------------ the step
-def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
+def _sgp_step_impl(net: CECNetwork, phi, consts: SGPConsts,
                    variant: str = "sgp", beta: float = 1.0,
                    mask_data: Optional[jnp.ndarray] = None,
                    mask_result: Optional[jnp.ndarray] = None,
@@ -308,9 +313,18 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
              Pallas kernel on TPU, jnp reference elsewhere).
     nbrs   : precomputed `Neighbors`; required when method="sparse"
              (the whole iteration then runs in [S, V, Dmax] edge-slot
-             layout and only scatters back to the dense Phi at the end).
+             layout).
+
+    φ layout: a dense `Phi` always works; with method="sparse" an
+    edge-slot `PhiSparse` is consumed AND produced natively — the step
+    then materializes no [S, V, V+1] array at all (the dense-Phi sparse
+    path instead gathers on entry and scatters back on exit, and is the
+    bitwise reference for the native layout).
     """
     sparse = method == "sparse"
+    native = isinstance(phi, PhiSparse)
+    if native and not sparse:
+        raise ValueError("PhiSparse iterates require method='sparse'")
     if sparse and nbrs is None:
         raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
                          "precomputed outside jit")
@@ -333,9 +347,8 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
     # row layout: edge slots ([S, V, Dmax(+1)]) when sparse, else dense
     if sparse:
         adj_e = nbrs.out_mask[None]
-        phi_d_rows = jnp.concatenate(
-            [gather_edges(phi.data, nbrs), phi.data[..., -1:]], axis=-1)
-        phi_r_rows = gather_edges(phi.result, nbrs)
+        phi_d_sp, phi_loc, phi_r_rows = _phi_edge_views(phi, nbrs)
+        phi_d_rows = jnp.concatenate([phi_d_sp, phi_loc[..., None]], axis=-1)
     else:
         adj_e = net.adj[None]
         phi_d_rows = phi.data
@@ -429,21 +442,28 @@ def _sgp_step_impl(net: CECNetwork, phi: Phi, consts: SGPConsts,
     # destination rows carry no result flow
     new_r = jnp.where(is_dest[..., None], 0.0, new_r)
 
-    # scatter edge-slot rows back to the dense Phi layout
-    if sparse:
+    # scatter edge-slot rows back to the dense Phi layout — dense-Phi
+    # callers only; native PhiSparse iterates stay in slot layout
+    if sparse and not native:
         new_d = jnp.concatenate(
             [scatter_edges(new_d[..., :-1], nbrs, V), new_d[..., -1:]],
             axis=-1)
         new_r = scatter_edges(new_r, nbrs, V)
 
-    # asynchronous row masks (Theorem 2)
+    # asynchronous row masks (Theorem 2); the native no-update rows keep
+    # the sanitized slot view (padding zeroed), same values as a
+    # dense-layout keep on the edge support
+    old_d = phi_d_rows if native else phi.data
+    old_r = phi_r_rows if native else phi.result
     if mask_data is not None:
-        new_d = jnp.where(mask_data[..., None], new_d, phi.data)
+        new_d = jnp.where(mask_data[..., None], new_d, old_d)
     if mask_result is not None:
-        new_r = jnp.where(mask_result[..., None], new_r, phi.result)
+        new_r = jnp.where(mask_result[..., None], new_r, old_r)
 
     cost = cost_of_flows(net, fl)
-    return Phi(new_d, new_r), {"cost": cost, "flows": fl, "marginals": mg}
+    new_phi = (PhiSparse(new_d[..., :-1], new_d[..., -1:], new_r) if native
+               else Phi(new_d, new_r))
+    return new_phi, {"cost": cost, "flows": fl, "marginals": mg}
 
 
 sgp_step = jax.jit(
@@ -453,7 +473,7 @@ sgp_step = jax.jit(
 
 
 # ------------------------------------------------------------------- driver
-def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
+def run(net: CECNetwork, phi0, n_iters: int = 200,
         variant: str = "sgp", beta: float = 1.0,
         allowed_data=None, allowed_result=None,
         min_scale: float = 0.05, method: str = "dense",
@@ -465,16 +485,22 @@ def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
     """Python-loop driver around the jitted step.
 
     method="sparse" precomputes the neighbor lists once (numpy, outside
-    jit) and runs every step in the O(S·V·Dmax·diam) edge-slot engine —
-    use it for V beyond a few hundred.  engine_impl picks its
-    message-passing backend (kernels.ops.edge_rounds; None = fused
-    Pallas kernel on TPU, jnp reference elsewhere).
+    jit), converts φ⁰ to the edge-slot `PhiSparse` layout at the
+    boundary, and iterates NATIVELY in that layout — no [S, V, V+1]
+    array is materialized anywhere in the loop.  The returned φ matches
+    the input layout: a dense `Phi` in, a dense `Phi` back (one
+    conversion after the loop); a `PhiSparse` in, a `PhiSparse` back.
+    engine_impl picks the message-passing backend
+    (kernels.ops.edge_rounds; None = fused Pallas kernel on TPU, jnp
+    reference elsewhere).
 
     callback, if given, is invoked as ``callback(it, phi, aux, accepted)``
     where `phi` is the iterate AFTER the accept/reject decision (the new
     iterate on accepted steps, the reverted one otherwise), `accepted`
     says which happened, and `aux` (cost/flows/marginals) describes the
-    iterate the step started FROM.
+    iterate the step started FROM.  Under method="sparse" the callback
+    sees the edge-slot `PhiSparse` iterate (convert with
+    `sparse_to_phi` if dense coordinates are needed).
 
     async_frac > 0 simulates Theorem-2 asynchrony: each iteration only a
     random fraction of (node, task) rows update.
@@ -497,6 +523,9 @@ def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
     if scaling == "paper":
         kappa = 1.0  # Eq. 16 verbatim
     nbrs = build_neighbors(net.adj) if method == "sparse" else None
+    dense_in = not isinstance(phi0, PhiSparse)
+    if method == "sparse" and dense_in:
+        phi0 = phi_to_sparse(phi0, nbrs)   # boundary: iterate in slots
     T0 = _tc(net, phi0, method, nbrs=nbrs, engine_impl=engine_impl)
     consts = make_consts(net, T0, min_scale)
     phi = phi0
@@ -539,6 +568,8 @@ def run(net: CECNetwork, phi0: Phi, n_iters: int = 200,
         if tol > 0.0 and len(costs) > 4:
             if abs(costs[-2] - costs[-1]) <= tol * max(costs[-1], 1e-12):
                 break
+    if method == "sparse" and dense_in:
+        phi = sparse_to_phi(phi, nbrs, net.V)  # boundary: back to dense
     final_cost = costs[-1]
     return phi, {"costs": costs, "final_cost": final_cost,
                  "n_rejected": n_rejected}

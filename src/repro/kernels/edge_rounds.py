@@ -8,8 +8,10 @@ path-length bounds of Algorithm 1's blocked sets) all share one shape:
 
 iterated to a fixed point, where `nbr[V, Dmax]` / `mask[V, Dmax]` are
 max-degree-padded neighbor lists (network.Neighbors) and `w[S, V, Dmax]`
-are per-edge weights (φ fractions, or {0, 1} supports for the boolean
-or/max recursions).
+are per-edge weights (φ fractions — since the sparse-native PhiSparse
+layout these arrive straight from the iterate's own slots, no gather —
+or {0, 1} supports for the boolean or/max recursions).  Masked slots
+are zeroed on load, so padding garbage in the weight block is inert.
 
 Lowered generically this is one dynamic-gather + masked-reduce dispatch
 PER ROUND — on TPU the V ~ 10³ step is dispatch-bound, not

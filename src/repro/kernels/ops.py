@@ -84,8 +84,15 @@ def edge_rounds(w_sp, inject, nbr, mask, reduce: str = "sum",
     The Pallas path fuses gather + multiply + masked-reduce per round
     and runs the whole early-exit while-loop in one launch with the
     index tiles resident in VMEM; the jnp reference dispatches one
-    gather per round (the sparse engine's PR-1 hot path).
+    gather per round (the sparse engine's PR-1 hot path).  Edge-slot φ
+    (core.network.PhiSparse) feeds this directly — both backends mask
+    padded weight slots internally, so slot garbage never propagates.
     """
+    if w_sp.shape[-2:] != nbr.shape or nbr.shape != mask.shape:
+        raise ValueError(
+            f"edge weights {w_sp.shape} are not aligned to the neighbor "
+            f"tiles nbr{nbr.shape}/mask{mask.shape}; slot arrays must "
+            "share the [V, Dmax] trailing layout of their Neighbors")
     mode = _pick(impl)
     if mode == "ref":
         return _ref.edge_rounds_ref(w_sp, inject, nbr, mask, reduce=reduce,

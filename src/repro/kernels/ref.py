@@ -66,7 +66,8 @@ def edge_rounds_ref(w_sp, inject, nbr, mask, reduce: str = "sum",
     iterated  x <- combine(inject, reduce_e w·(x[nbr] + shift))  until
     the exact fixed point (loop-free supports are nilpotent) or
     `max_rounds` (cyclic-φ guard).  See kernels/edge_rounds.py for the
-    semantics of reduce="sum"/"max".
+    semantics of reduce="sum"/"max".  Weights in masked (padding) slots
+    are zeroed up front, so PhiSparse slot arrays feed in as-is.
     """
     from repro.core.network import _fixed_point
     V = nbr.shape[0]

@@ -1,0 +1,153 @@
+"""benchmarks/check_regression.py: the sparse per-step perf gate.
+
+Tier-1 checks the diff logic on synthetic reports (no timing, no
+flakiness); the `slow` test runs a real V=20 scale sweep end-to-end and
+diffs the produced report, so the gate's wiring against live
+scale-sweep rows (including the new ``sparse_native`` layout rows)
+stays exercised without putting CPU wall-clock noise in tier-1.
+"""
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # benchmarks/ is a top-level package in the repo
+
+from benchmarks.check_regression import (compare, compare_files,  # noqa: E402
+                                         is_gated, load_rows)
+
+
+def _write(path, rows):
+    with open(path, "w") as f:
+        json.dump(rows, f)
+    return str(path)
+
+
+def _row(name, us, impl=None):
+    r = {"name": name, "us_per_call": us, "derived": ""}
+    if impl is not None:
+        r["engine_impl"] = impl
+    return r
+
+
+def test_compare_flags_only_gated_slowdowns(tmp_path):
+    committed = _write(tmp_path / "committed.json", [
+        _row("scale_step_sparse_V100", 100.0, "ref"),
+        _row("scale_step_sparse_native_V100", 80.0, "ref"),
+        _row("scale_rounds_ref_V100", 10.0, "ref"),
+        _row("scale_step_dense_V100", 1000.0),          # not gated
+        _row("scale_step_broadcast_V500", 0.0),         # skipped row
+        _row("fig4_abilene", 50.0),                     # not gated
+    ])
+    fresh = _write(tmp_path / "fresh.json", [
+        _row("scale_step_sparse_V100", 130.0, "ref"),          # +30%: fail
+        _row("scale_step_sparse_native_V100", 85.0, "ref"),    # +6%: ok
+        _row("scale_rounds_ref_V100", 5.0, "ref"),             # faster: ok
+        _row("scale_step_dense_V100", 99999.0),                # ignored
+        _row("fig4_abilene", 99999.0),                         # ignored
+    ])
+    regs, improved, missing = compare(load_rows(fresh), load_rows(committed),
+                                      threshold=0.2)
+    assert [(r[0], r[1]) for r in regs] == [("scale_step_sparse_V100", "ref")]
+    assert [(r[0], r[1]) for r in improved] == [("scale_rounds_ref_V100",
+                                                 "ref")]
+    assert missing == []  # the zero-us skipped row is not comparable
+    assert compare_files(fresh, committed) == 1
+    # a looser threshold lets the +30% through
+    r2, _, _ = compare(load_rows(fresh), load_rows(committed), threshold=0.5)
+    assert r2 == []
+
+
+def test_empty_baseline_is_an_error_not_a_pass(tmp_path):
+    """A committed baseline with no gated sparse rows (wrong or stale
+    file) must fail the gate, not green-light everything vacuously."""
+    committed = _write(tmp_path / "c.json", [_row("fig4_abilene", 50.0)])
+    fresh = _write(tmp_path / "f.json",
+                   [_row("scale_step_sparse_V100", 1e9, "ref")])
+    assert compare_files(fresh, committed) == 2
+
+
+def test_compare_files_rejects_same_path(tmp_path):
+    """Diffing a report against itself on disk is always vacuously
+    clean — the CLI refuses instead of green-lighting it."""
+    path = _write(tmp_path / "r.json",
+                  [_row("scale_step_sparse_V100", 100.0, "ref")])
+    assert compare_files(path, path) == 2
+
+
+def test_missing_rows_are_notes_not_failures(tmp_path):
+    """Rows present on one side only are informational — as long as at
+    least one gated row WAS compared (machines sweep different sizes)."""
+    committed = _write(tmp_path / "c.json",
+                       [_row("scale_step_sparse_V1000", 1000.0, "ref"),
+                        _row("scale_step_sparse_V100", 100.0, "ref")])
+    fresh = _write(tmp_path / "f.json",
+                   [_row("scale_step_sparse_V20", 10.0, "ref"),
+                    _row("scale_step_sparse_V100", 105.0, "ref")])
+    regs, _, missing = compare(load_rows(fresh), load_rows(committed))
+    assert regs == []
+    assert sorted(m[2] for m in missing) == ["absent_from_committed",
+                                             "absent_from_fresh"]
+    assert compare_files(fresh, committed) == 0
+
+
+def test_no_overlap_is_an_error_not_a_pass(tmp_path):
+    """A gate run that compared ZERO gated rows (e.g. the sweep never
+    ran) must fail loudly rather than pass vacuously."""
+    committed = _write(tmp_path / "c.json",
+                       [_row("scale_step_sparse_V1000", 1000.0, "ref")])
+    fresh = _write(tmp_path / "f.json",
+                   [_row("fig4_abilene", 10.0)])
+    assert compare_files(fresh, committed) == 2
+
+
+def test_engine_impl_distinguishes_rows(tmp_path):
+    """ref and pallas rows with the same name never cross-compare."""
+    committed = _write(tmp_path / "c.json", [
+        _row("scale_step_sparse_V100", 100.0, "ref"),
+        _row("scale_step_sparse_V100", 500.0, "pallas_interpret"),
+    ])
+    fresh = _write(tmp_path / "f.json", [
+        _row("scale_step_sparse_V100", 110.0, "ref"),
+        _row("scale_step_sparse_V100", 510.0, "pallas_interpret"),
+    ])
+    regs, _, missing = compare(load_rows(fresh), load_rows(committed))
+    assert regs == [] and missing == []
+
+
+def test_gating_prefixes():
+    assert is_gated("scale_step_sparse_V1000")
+    assert is_gated("scale_step_sparse_native_V1000")
+    assert is_gated("scale_run_sparse_V100")
+    assert is_gated("scale_rounds_pallas_interpret_V20")
+    assert not is_gated("scale_step_dense_V100")
+    assert not is_gated("scale_speedup_V100")
+    assert not is_gated("fig5b_convergence")
+
+
+@pytest.mark.slow
+def test_end_to_end_mini_sweep(tmp_path):
+    """Run a real V=20 scale sweep, dump its report and push it through
+    the gate: fresh-vs-itself is never a regression, and the sweep must
+    emit both layouts' sparse rows (the data the gate exists to watch)."""
+    from benchmarks import common, scale_sweep
+    saved = list(common.ROWS)
+    common.ROWS.clear()
+    try:
+        scale_sweep.run(sizes=(20,))
+        rows = list(common.ROWS)
+    finally:
+        common.ROWS[:] = saved
+    names = {r["name"] for r in rows}
+    assert "scale_step_sparse_V20" in names
+    assert "scale_step_sparse_native_V20" in names
+    assert "scale_run_sparse_native_V20" in names
+    assert "scale_native_speedup_V20" in names
+    fresh = _write(tmp_path / "fresh.json", rows)
+    baseline = _write(tmp_path / "baseline.json", rows)
+    # a report is never a regression against an identical baseline
+    # (distinct paths: compare_files rejects literally the same file)
+    assert compare_files(fresh, baseline) == 0
+    gated = [r for r in rows if is_gated(r["name"])
+             and r["us_per_call"] > 0.0]
+    assert len(gated) >= 6

@@ -172,9 +172,9 @@ def test_broadcast_early_exit_matches_dense_and_differentiates():
 def test_distributed_sparse_step_matches_single_device(name):
     """make_distributed_step(method="sparse", nbrs=...) shard_maps the
     neighbor-list engine over the task axis (replicated index tiles,
-    one psum of F/G): one step matches the single-device sparse step
-    bitwise up to psum reduction order (result rows exactly, data rows
-    to one float32 ulp)."""
+    one psum of F/G) in the edge-slot PhiSparse layout: one step matches
+    the single-device native step bitwise up to psum reduction order
+    (result rows exactly, data rows to one float32 ulp)."""
     from repro.core.distributed import (make_distributed_step, pad_tasks,
                                         task_mesh)
     net, phi, nbrs = _setup(name)
@@ -183,15 +183,19 @@ def test_distributed_sparse_step_matches_single_device(name):
                                               nbrs=nbrs))
     step = make_distributed_step(mesh, method="sparse", nbrs=nbrs)
     net_p, phi_p, S = pad_tasks(net, phi, mesh.devices.size)
-    phi_dist, cost = step(net_p, phi_p, consts, jnp.asarray(1.0))
+    phi_dist, cost = step(net_p, core.phi_to_sparse(phi_p, nbrs), consts,
+                          jnp.asarray(1.0))
+    assert isinstance(phi_dist, core.PhiSparse)
     # make_distributed_step pins kappa=0.0 (Gallager scaling off)
-    phi_s, aux = _sgp_step_impl(net, phi, consts, method="sparse",
-                                nbrs=nbrs, kappa=0.0,
+    phi_s, aux = _sgp_step_impl(net, core.phi_to_sparse(phi, nbrs), consts,
+                                method="sparse", nbrs=nbrs, kappa=0.0,
                                 sigma=jnp.asarray(1.0))
     np.testing.assert_array_equal(np.asarray(phi_dist.result[:S]),
                                   np.asarray(phi_s.result))
     np.testing.assert_allclose(np.asarray(phi_dist.data[:S]),
                                np.asarray(phi_s.data), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(phi_dist.local[:S]),
+                               np.asarray(phi_s.local), atol=1e-6)
     np.testing.assert_allclose(float(cost), float(aux["cost"]), rtol=1e-7)
 
 
