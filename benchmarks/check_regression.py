@@ -7,7 +7,11 @@ committed one and fail on sparse per-step slowdowns.
 
 Rows are keyed by (name, engine_impl).  Only the sparse scale-sweep
 timing rows (``scale_flows_sparse*``, ``scale_step_sparse*``,
-``scale_run_sparse*``, ``scale_rounds_*``) gate the exit status: a
+``scale_run_sparse*``, ``scale_rounds_*``) and the streaming churn
+replay rows (``replay_*``: per-iteration/refeasibilize wall-clock and
+the warm iterations-to-target; the cold counts are ungated context —
+they share their target with the warm run, so warm improvements move
+them) gate the exit status: a
 fresh row more than ``threshold`` (default 20%) slower than its
 committed counterpart is a regression and the process exits 1.  Rows
 present on only one side are reported but never fail — machines differ
@@ -27,9 +31,22 @@ import json
 import sys
 
 # rows that gate the exit status: the sparse engine's per-step costs —
-# the perf trajectory the sparse-native Phi layout is accountable for
+# the perf trajectory the sparse-native Phi layout is accountable for —
+# plus the streaming replay rows (churn wall-clock AND warm-start
+# iteration counts: a warm restart that stops beating cold is a
+# regression even if each iteration got no slower)
 GATED_PREFIXES = ("scale_flows_sparse", "scale_step_sparse",
-                  "scale_run_sparse", "scale_rounds_")
+                  "scale_run_sparse", "scale_rounds_", "replay_")
+# ...except the cold-restart iteration counts: cold shares its
+# iterations-to-target TARGET with the warm run (min of the two finals),
+# so a warm-start IMPROVEMENT inflates the cold count — it is context
+# for the warm row, not a perf promise of its own
+UNGATED_PREFIXES = ("replay_cold_iters_",)
+
+# gated row families: a fresh report missing an ENTIRE family the
+# committed baseline has means that sweep never ran — overwriting the
+# baseline would silently un-gate the family forever (see report())
+FAMILIES = ("scale_", "replay_")
 
 
 def rows_to_dict(rows) -> dict:
@@ -50,7 +67,8 @@ def load_rows(path: str) -> dict:
 
 
 def is_gated(name: str) -> bool:
-    return name.startswith(GATED_PREFIXES)
+    return (name.startswith(GATED_PREFIXES)
+            and not name.startswith(UNGATED_PREFIXES))
 
 
 def compare(fresh: dict, committed: dict, threshold: float = 0.2):
@@ -108,6 +126,19 @@ def report(fresh: dict, committed: dict, threshold: float = 0.2,
               "scale sweep and point --committed at a report that has "
               "them", file=out)
         return 2
+    for fam in FAMILIES:
+        has_committed = any(k[0].startswith(fam) and is_gated(k[0])
+                            for k in committed)
+        has_fresh = any(k[0].startswith(fam) and is_gated(k[0])
+                        for k in fresh)
+        if has_committed and not has_fresh:
+            # a whole gated family vanished: that sweep never ran.
+            # Passing here would let --json overwrite the baseline
+            # without the family's rows, silently un-gating it forever.
+            print(f"# ERROR: committed baseline has gated {fam}* rows "
+                  "but the fresh report has none — run that sweep too "
+                  "(scale: --only scale; replay: --replay)", file=out)
+            return 2
     return 1 if regressions else 0
 
 

@@ -1,0 +1,116 @@
+"""Streaming churn replay sweep (fig: none — the online, multi-event
+regime beyond the paper's single-failure Fig. 5b).
+
+Replays the canned `<scenario>_churn` schedule (rate surge, hub
+failure, link flap, hub recovery, source re-draw — see
+core.scenarios.churn_schedule) through `core.ReplayEngine` with a cold
+SPT restart run beside every repair event, and reports
+
+  replay_warm_iters_<name>   1 + Σ warm iterations-to-target over repair
+                             events (derived: per-event warm/cold
+                             pairs; the +1 keeps a PERFECT warm start —
+                             zero iterations — a comparable row: the
+                             gate drops us_per_call <= 0 rows, which
+                             would un-gate the metric exactly when the
+                             baseline is best)
+  replay_cold_iters_<name>   1 + Σ cold-restart iterations-to-target
+  replay_iter_<name>         us per warm replay iteration (steady state,
+                             post-schedule topology)
+  replay_refeas_<name>       us per refeasibilize_sparse repair (hub
+                             failure on the final topology)
+  replay_cost_<name>         derived-only cost-recovery curve summary
+                             (cost before -> after repair -> recovered,
+                             per event)
+
+The `replay_*` timing rows and the warm iteration counts are gated by
+benchmarks/check_regression.py exactly like the `scale_*_sparse_*`
+rows, so churn wall-clock (or warm-start quality) regressions are
+caught against the committed BENCH_report.json; the cold counts are
+ungated context (they share the warm run's target, so a warm
+improvement inflates them).  Emitted by ``benchmarks.run --replay``
+(kept out of the default set: the sweep replays sw_1000 end-to-end —
+but a baseline WITH replay rows refuses to be regenerated without
+them, see check_regression's family guard).
+"""
+import time
+
+import jax
+
+from repro import core
+
+from .common import emit, time_call
+
+NAMES = ("sw_queue", "sw_1000")          # --full adds grid_1024
+N_TAIL = 6
+
+
+def _bench_replay(name: str, tail_iters: int = N_TAIL):
+    net = core.make_scenario(core.TABLE_II[name])
+    sched = core.churn_schedule(f"{name}_churn", net)
+    eng = core.ReplayEngine(net)
+    t0 = time.perf_counter()
+    hist = eng.play(sched, tail_iters=tail_iters, cold_baseline=True)
+    wall = (time.perf_counter() - t0) * 1e6
+
+    repairs = [r for r in hist["records"] if r.warm_iters is not None]
+    warm = sum(r.warm_iters for r in repairs)
+    cold = sum(r.cold_iters for r in repairs)
+    pairs = "|".join(f"{type(r.event).__name__}:{r.warm_iters}v{r.cold_iters}"
+                     for r in repairs)
+    # counts emitted +1 so a perfect (0-iteration) warm start stays a
+    # comparable row under the gate's us_per_call > 0 filter
+    emit(f"replay_warm_iters_{name}", float(1 + warm), pairs)
+    emit(f"replay_cold_iters_{name}", float(1 + cold),
+         f"{len(repairs)}_repair_events")
+    curve = "|".join(
+        f"{type(r.event).__name__}:{r.cost_before:.1f}->{r.cost_after:.1f}"
+        f"->{(r.segment_costs or [r.cost_after])[-1]:.1f}"
+        for r in hist["records"])
+    emit(f"replay_cost_{name}", 0.0,
+         f"final={hist['final_cost']:.2f};{curve}",
+         )
+
+    # steady-state per-iteration wall clock on the post-schedule system
+    # (jit caches are warm after the replay; the engine keeps advancing).
+    # A driver that ended the schedule numerically stuck would make
+    # iterate() a no-op — timing that would commit a near-zero baseline
+    # every honest later run fails against, so refuse to emit instead.
+    us_it = time_call(lambda: eng.iterate(1), n=3, warmup=1)
+    if eng.state.stopped:
+        # the stop can also trip MID-timing, turning the remaining
+        # calls into no-ops — check after, not before
+        emit(f"replay_iter_{name}", 0.0, "driver_stopped_not_timed")
+        return
+    emit(f"replay_iter_{name}", us_it,
+         f"V={net.V};wall_total_us={wall:.0f}")
+
+    # one repair roundtrip (slot remap + renorm + SPT rebuild) on the
+    # live topology: fail the current hub, repair the live iterate
+    net_f = core.fail_node(eng.net, core.hub_node(eng.net))
+    sp, nbrs = eng.phi, eng.nbrs
+
+    def repair():
+        out, _ = core.refeasibilize_sparse(net_f, sp, nbrs)
+        jax.block_until_ready(out.data)
+
+    us_rf = time_call(repair, n=3, warmup=1)
+    emit(f"replay_refeas_{name}", us_rf, f"V={net.V}")
+
+
+def run(full: bool = False, names=None):
+    names = names or (NAMES + ("grid_1024",) if full else NAMES)
+    for name in names:
+        _bench_replay(name)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also replay the grid_1024 churn schedule")
+    ap.add_argument("--names", default=None,
+                    help="comma-separated TABLE_II scenario names")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=a.full,
+        names=tuple(a.names.split(",")) if a.names else None)

@@ -24,7 +24,14 @@ def main(argv=None) -> int:
                          "dense/broadcast engines at every scale-sweep size "
                          "(dense at V=1000 takes hours on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset of: " + ",".join(ALL))
+                    help="comma-separated subset of: " + ",".join(ALL)
+                         + ",replay")
+    ap.add_argument("--replay", action="store_true",
+                    help="also run the streaming churn replay sweep "
+                         "(benchmarks.replay_sweep) and emit its "
+                         "replay_* rows — part of the committed "
+                         "BENCH_report.json baseline "
+                         "(regenerate with --only scale --replay)")
     ap.add_argument("--report", default="dryrun_report.json")
     ap.add_argument("--json", default="BENCH_report.json",
                     help="write every emitted row to this JSON file "
@@ -35,7 +42,9 @@ def main(argv=None) -> int:
                          "overwrite it) and exit nonzero on >20%% sparse "
                          "per-step slowdown (benchmarks.check_regression)")
     args = ap.parse_args(argv)
-    names = args.only.split(",") if args.only else ALL
+    names = args.only.split(",") if args.only else list(ALL)
+    if args.replay and "replay" not in names:
+        names.append("replay")
 
     committed_rows = None
     if args.check_against:
@@ -72,6 +81,9 @@ def main(argv=None) -> int:
                 # trajectory tracks); only the dense/broadcast engines
                 # stay capped at DENSE_V_LIMIT unless --full
                 scale_sweep.run(full=args.full)
+            elif name == "replay":
+                from . import replay_sweep
+                replay_sweep.run(full=args.full)
             elif name == "roofline":
                 from . import roofline
                 roofline.run(args.report)

@@ -1,0 +1,56 @@
+"""Streaming churn replay: the online mode beyond Fig. 5b.
+
+A 5-event schedule — rate surge, hub failure, link cut, hub RECOVERY,
+rates easing off — replayed against a live warm-started iterate, with a
+cost-recovery printout per event.  The warm column is the replay
+engine; the cold column re-solves from the SPT φ⁰ after every repair
+(what you'd do without the engine).
+
+    PYTHONPATH=src python examples/replay_churn.py
+"""
+import numpy as np
+
+from repro import core
+
+net = core.make_scenario(core.TABLE_II["fog"])
+hub = core.churn_hub(net)          # busiest non-destination node
+adj = np.asarray(net.adj)
+# a busy link that does NOT touch the hub (cut while the hub is down)
+u = int(next(i for i in np.argsort(-adj.sum(1))
+             if i != hub and any(j != hub for j in np.nonzero(adj[i])[0])))
+v = int(next(j for j in np.nonzero(adj[u])[0] if j != hub))
+
+schedule = core.ChurnSchedule((
+    (4,  core.RateScale(1.4)),          # demand surges 40%
+    (8,  core.NodeFail(hub)),           # the busiest node dies
+    (12, core.LinkCut(u, v)),           # ...and a busy link goes with it
+    (16, core.NodeRecover(hub)),        # the node comes back
+    (20, core.RateScale(0.7)),          # demand eases off
+), name="fog_5_events")
+
+print(f"== replaying {schedule.n_events} events on fog "
+      f"(V={net.V}, hub={hub}) ==")
+engine = core.ReplayEngine(net)
+hist = engine.play(schedule, tail_iters=8, cold_baseline=True)
+
+print(f"{'event':<22}{'t':>4}{'before':>10}{'shock':>10}"
+      f"{'recovered':>11}{'warm':>6}{'cold':>6}")
+for rec in hist["records"]:
+    recovered = (rec.segment_costs or [rec.cost_after])[-1]
+    warm = "-" if rec.warm_iters is None else rec.warm_iters
+    cold = "-" if rec.cold_iters is None else rec.cold_iters
+    print(f"{type(rec.event).__name__:<22}{rec.it:>4}"
+          f"{rec.cost_before:>10.2f}{rec.cost_after:>10.2f}"
+          f"{recovered:>11.2f}{warm:>6}{cold:>6}")
+
+repairs = [r for r in hist["records"] if r.warm_iters is not None]
+warm = sum(r.warm_iters for r in repairs)
+cold = sum(r.cold_iters for r in repairs)
+print(f"\nfinal cost {hist['final_cost']:.2f} after {hist['n_iters']} "
+      f"iterations; warm start needed {warm} iterations-to-target vs "
+      f"{cold} for cold SPT restarts across {len(repairs)} repairs")
+
+# every intermediate iterate was feasible + loop-free, by construction —
+# the same invariants tests/test_replay.py asserts after every event
+core.check_invariants(engine.net, engine.phi, engine.nbrs)
+print("final iterate: feasible, loop-free (check_invariants passed)")

@@ -7,6 +7,8 @@ Public API:
   run_spoo, run_lcor, run_lpr, run_all                  (baselines, §V)
   theorem1_residual, flow_domain_optimum                (optimality, §III)
   TABLE_II, make_scenario, fail_node                    (scenarios, §V)
+  ChurnSchedule, random_schedule, churn_schedule        (churn events)
+  ReplayEngine, check_invariants                        (streaming replay)
 """
 from .costs import Cost, CostFamily, FAMILIES, LINEAR, QUEUE, SAT
 from .network import (CECNetwork, Flows, Neighbors, Phi, PhiSparse,
@@ -16,13 +18,21 @@ from .network import (CECNetwork, Flows, Neighbors, Phi, PhiSparse,
                       refeasibilize_sparse, scatter_edges, sparse_to_phi,
                       spt_phi, spt_phi_sparse, total_cost, uniform_phi)
 from .marginals import Marginals, compute_marginals, phi_gradients
-from .sgp import SGPConsts, make_consts, project_rows, run, sgp_step
+from .sgp import (RunState, SGPConsts, init_run_state, make_consts,
+                  project_rows, run, run_chunk, sgp_step)
 from .baselines import run_all, run_lcor, run_lpr, run_spoo
 from .optimality import (flow_domain_optimum, marginals_vs_autodiff,
                          theorem1_residual)
-from .scenarios import (TABLE_II, ScenarioSpec, enforce_feasibility,
-                        fail_node, make_scenario)
-from .distributed import run_distributed, task_mesh
+from .scenarios import (TABLE_II, ScenarioSpec, churn_hub, churn_schedule,
+                        enforce_feasibility, fail_node, hub_node,
+                        make_scenario)
+from .distributed import (DistributedRunState, init_distributed_state,
+                          run_distributed, run_distributed_chunk, task_mesh)
+from .events import (ChurnSchedule, ChurnState, DestRedraw, LinkCut,
+                     LinkRestore, NodeFail, NodeRecover, RateScale,
+                     SourceRedraw, event_kind, random_schedule)
+from .replay import (EventRecord, ReplayEngine, check_feasible,
+                     check_invariants, iters_to_target)
 from . import moe_bridge, topologies
 
 __all__ = [
@@ -34,9 +44,18 @@ __all__ = [
     "sparse_to_phi", "spt_phi", "spt_phi_sparse", "total_cost",
     "uniform_phi",
     "Marginals", "compute_marginals", "phi_gradients",
-    "SGPConsts", "make_consts", "project_rows", "run", "sgp_step",
+    "RunState", "SGPConsts", "init_run_state", "make_consts",
+    "project_rows", "run", "run_chunk", "sgp_step",
     "run_all", "run_lcor", "run_lpr", "run_spoo",
     "flow_domain_optimum", "marginals_vs_autodiff", "theorem1_residual",
-    "TABLE_II", "ScenarioSpec", "enforce_feasibility", "fail_node",
-    "make_scenario", "topologies",
+    "TABLE_II", "ScenarioSpec", "churn_hub", "churn_schedule",
+    "enforce_feasibility", "fail_node", "hub_node", "make_scenario",
+    "topologies",
+    "DistributedRunState", "init_distributed_state", "run_distributed",
+    "run_distributed_chunk", "task_mesh",
+    "ChurnSchedule", "ChurnState", "DestRedraw", "LinkCut", "LinkRestore",
+    "NodeFail", "NodeRecover", "RateScale", "SourceRedraw", "event_kind",
+    "random_schedule",
+    "EventRecord", "ReplayEngine", "check_feasible", "check_invariants",
+    "iters_to_target",
 ]

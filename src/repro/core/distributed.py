@@ -27,7 +27,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .network import (CECNetwork, Neighbors, Phi, PhiSparse,
                       build_neighbors, phi_to_sparse, sparse_to_phi)
-from .sgp import SGPConsts, _sgp_step_impl, make_consts
+from .sgp import SGPConsts, _sgp_step_impl, accept_step, make_consts
 
 AXIS = "tasks"
 
@@ -139,6 +139,135 @@ def _call_with_nbrs(jitted, nbrs, net, phi, consts, sigma):
     return jitted(net, phi, consts, sigma, nbrs)
 
 
+@dataclasses.dataclass
+class DistributedRunState:
+    """Resumable host-side state of `run_distributed` (NOT a pytree).
+
+    Mirrors `sgp.RunState` for the shard_map driver: the padded net and
+    φ, the compiled shard_map step (reused across chunks — same-graph
+    churn events swap `net_p` in via `rebaseline_distributed_state`
+    without retracing; topology events rebuild the state since the
+    index tiles change shape), and the accept/reject bookkeeping.  `init_distributed_state` + chunks of
+    `run_distributed_chunk` walk exactly `run_distributed`'s
+    trajectory.
+    """
+    phi: object                      # padded iterate (PhiSparse if sparse)
+    consts: SGPConsts
+    nbrs: Optional[Neighbors]
+    net_p: CECNetwork                # task-padded network
+    step: object                     # jitted shard_map step fn
+    mesh: Mesh
+    method: str
+    scaling: str
+    variant: str
+    engine_impl: Optional[str]
+    S: int                           # original (unpadded) task count
+    costs: list
+    min_scale: float = 0.05
+    sigma: float = 1.0
+    n_rejected: int = 0
+    it: int = 0                      # iterations EXECUTED (incl. rejected)
+    stopped: bool = False
+
+
+def init_distributed_state(net: CECNetwork, phi0,
+                           mesh: Optional[Mesh] = None,
+                           variant: str = "sgp", scaling: str = "adaptive",
+                           kappa: float = 0.0, min_scale: float = 0.05,
+                           method: str = "dense",
+                           engine_impl: Optional[str] = None
+                           ) -> DistributedRunState:
+    """Pad, convert at the boundary, build the shard_map step and
+    evaluate T⁰ — exactly `run_distributed`'s prologue."""
+    from .network import total_cost_jit as _tc
+    mesh = mesh or task_mesh()
+    n_dev = mesh.devices.size
+    nbrs = build_neighbors(net.adj) if method == "sparse" else None
+    sparse_in = isinstance(phi0, PhiSparse)
+    if sparse_in and method != "sparse":
+        # same contract as core.run / compute_flows: the dense engines
+        # need dense coordinates — at the scale PhiSparse exists for,
+        # silently materializing them would be an OOM, not a favor
+        raise ValueError("PhiSparse requires method='sparse'; convert "
+                         "with sparse_to_phi for the dense/broadcast "
+                         "engines")
+    net_p, phi_p, S = pad_tasks(net, phi0, n_dev)
+    if method == "sparse" and not sparse_in:
+        # boundary: the loop iterates natively in edge slots
+        phi_p = phi_to_sparse(phi_p, nbrs)
+    step = make_distributed_step(mesh, variant=variant, scaling=scaling,
+                                 kappa=kappa, method=method, nbrs=nbrs,
+                                 engine_impl=engine_impl)
+    T0 = _tc(net_p, phi_p, method, nbrs=nbrs, engine_impl=engine_impl)
+    consts = make_consts(net_p, T0, min_scale)
+    return DistributedRunState(
+        phi=phi_p, consts=consts, nbrs=nbrs, net_p=net_p, step=step,
+        mesh=mesh, method=method, scaling=scaling, variant=variant,
+        engine_impl=engine_impl, S=S, costs=[float(T0)],
+        min_scale=min_scale)
+
+
+def rebaseline_distributed_state(state: DistributedRunState,
+                                 net: CECNetwork, phi_sp
+                                 ) -> DistributedRunState:
+    """Swap a SAME-GRAPH network (rate churn: r/cost params moved; or a
+    destination re-draw — `dest` is just another step input) into the
+    existing state and re-baseline T⁰/the Eq. 16 constants — the
+    compiled shard_map step is kept, so such events cost zero retraces.
+    `net.adj` must equal the adjacency the state was built from (the
+    step computes with the init-time `Neighbors` tiles); topology
+    events must rebuild via `init_distributed_state` instead."""
+    from .network import total_cost_jit as _tc
+    net_p, phi_p, S = pad_tasks(net, phi_sp, state.mesh.devices.size)
+    T0 = _tc(net_p, phi_p, state.method, nbrs=state.nbrs,
+             engine_impl=state.engine_impl)
+    state.net_p, state.phi, state.S = net_p, phi_p, S
+    state.consts = make_consts(net_p, T0, state.min_scale)
+    state.costs = [float(T0)]
+    state.sigma, state.n_rejected, state.stopped = 1.0, 0, False
+    return state
+
+
+def run_distributed_chunk(state: DistributedRunState,
+                          n_iters: int) -> DistributedRunState:
+    """Advance the distributed driver `n_iters` iterations in place —
+    `run_distributed`'s loop body, resumable between events.  A stopped
+    state (sigma blow-up) stays stopped until re-baselined."""
+    from .network import total_cost_jit as _tc
+    if state.stopped:
+        return state
+    phi, costs = state.phi, state.costs
+    sigma, n_rejected = state.sigma, state.n_rejected
+    for _ in range(n_iters):
+        phi_new, cost = state.step(state.net_p, phi, state.consts,
+                                   jnp.asarray(sigma))
+        new_cost = float(_tc(state.net_p, phi_new, state.method,
+                             nbrs=state.nbrs,
+                             engine_impl=state.engine_impl))
+        state.it += 1
+        accepted, sigma, stop = accept_step(new_cost, costs[-1], sigma,
+                                            state.scaling, state.variant)
+        if not accepted:
+            n_rejected += 1
+            if stop:
+                state.stopped = True
+                break
+        else:
+            phi = phi_new
+            costs.append(new_cost)
+    state.phi, state.sigma, state.n_rejected = phi, sigma, n_rejected
+    return state
+
+
+def unpad_phi(state: DistributedRunState):
+    """The current iterate restricted to the original task count."""
+    phi = state.phi
+    if isinstance(phi, PhiSparse):
+        return PhiSparse(phi.data[:state.S], phi.local[:state.S],
+                         phi.result[:state.S])
+    return Phi(phi.data[:state.S], phi.result[:state.S])
+
+
 def run_distributed(net: CECNetwork, phi0, n_iters: int = 200,
                     mesh: Optional[Mesh] = None, variant: str = "sgp",
                     scaling: str = "adaptive", kappa: float = 0.0,
@@ -156,59 +285,19 @@ def run_distributed(net: CECNetwork, phi0, n_iters: int = 200,
     `PhiSparse` φ⁰ is padded, iterated AND returned in slot layout, so
     the huge-S regime never touches a dense φ at all).
     Bitwise-equivalent to the single-device path up to reduction order
-    (validated in tests).
+    (validated in tests).  Resumable: `init_distributed_state` +
+    `run_distributed_chunk` walk the same trajectory in chunks (the
+    streaming replay engine interleaves churn events between them).
     """
-    from .network import total_cost_jit as _tc
-
-    mesh = mesh or task_mesh()
-    n_dev = mesh.devices.size
-    nbrs = build_neighbors(net.adj) if method == "sparse" else None
     sparse_in = isinstance(phi0, PhiSparse)
-    if sparse_in and method != "sparse":
-        # same contract as core.run / compute_flows: the dense engines
-        # need dense coordinates — at the scale PhiSparse exists for,
-        # silently materializing them would be an OOM, not a favor
-        raise ValueError("PhiSparse requires method='sparse'; convert "
-                         "with sparse_to_phi for the dense/broadcast "
-                         "engines")
-    net_p, phi_p, S = pad_tasks(net, phi0, n_dev)
+    state = init_distributed_state(net, phi0, mesh=mesh, variant=variant,
+                                   scaling=scaling, kappa=kappa,
+                                   min_scale=min_scale, method=method,
+                                   engine_impl=engine_impl)
+    state = run_distributed_chunk(state, n_iters)
+    phi = state.phi
     if method == "sparse" and not sparse_in:
-        # boundary: the loop below iterates natively in edge slots
-        phi_p = phi_to_sparse(phi_p, nbrs)
-    step = make_distributed_step(mesh, variant=variant, scaling=scaling,
-                                 kappa=kappa, method=method, nbrs=nbrs,
-                                 engine_impl=engine_impl)
-    T0 = _tc(net_p, phi_p, method, nbrs=nbrs, engine_impl=engine_impl)
-    consts = make_consts(net_p, T0, min_scale)
-
-    # device placement
-    def shard_spec(spec_tree):
-        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
-                            is_leaf=lambda x: isinstance(x, P))
-
-    costs = [float(T0)]
-    sigma = 1.0
-    n_rejected = 0
-    phi = phi_p
-    for _ in range(n_iters):
-        phi_new, cost = step(net_p, phi, consts, jnp.asarray(sigma))
-        new_cost = float(_tc(net_p, phi_new, method, nbrs=nbrs,
-                             engine_impl=engine_impl))
-        if scaling == "adaptive" and variant == "sgp" \
-                and new_cost > costs[-1] * (1.0 + 1e-12):
-            sigma *= 4.0
-            n_rejected += 1
-            if sigma > 1e12:
-                break
-        else:
-            phi = phi_new
-            costs.append(new_cost)
-            sigma = max(sigma / 1.5, 1.0)
-    if method == "sparse" and not sparse_in:
-        phi = sparse_to_phi(phi, nbrs, net.V)     # boundary: back to dense
-    if isinstance(phi, PhiSparse):
-        phi_out = PhiSparse(phi.data[:S], phi.local[:S], phi.result[:S])
-    else:
-        phi_out = Phi(phi.data[:S], phi.result[:S])
-    return phi_out, {"costs": costs, "final_cost": costs[-1],
-                     "n_rejected": n_rejected}
+        state.phi = sparse_to_phi(phi, state.nbrs, net.V)  # back to dense
+    phi_out = unpad_phi(state)
+    return phi_out, {"costs": state.costs, "final_cost": state.costs[-1],
+                     "n_rejected": state.n_rejected}

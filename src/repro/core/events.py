@@ -1,0 +1,364 @@
+"""Churn events for the streaming replay engine (core.replay).
+
+The paper's adaptivity claim (Fig. 5b) is a SINGLE node failure; the
+online-CEC line of work stresses schemes with multi-event churn: rates
+drifting, sources and destinations moving, nodes failing AND coming
+back, links flapping.  This module is the declarative vocabulary for
+that: small frozen event dataclasses, a `ChurnSchedule` pairing each
+event with the global SGP iteration it fires at, and the `ChurnState`
+accumulator that turns a pristine scenario plus the events applied so
+far into the CURRENT `CECNetwork`.
+
+Design: events never mutate a network in place.  `ChurnState` keeps the
+pristine base plus the minimal churn facts (failed-node set, cut-link
+set, logical rates, destinations) and re-derives the live network from
+them, so recovery events are exact inverses by construction — a node
+that fails and recovers restores precisely its original links, compute
+capacity and exogenous rates (`fail_node`'s semantics, made
+reversible).
+
+Event kinds (what the replay engine must do after applying one):
+
+  "rate"      rates scaled in place, graph identical — existing zero
+              rates stay zero, so φ stays feasible as-is and the driver
+              just re-baselines cost/curvature.
+  "topology"  adjacency changed — the iterate must go through
+              `refeasibilize_sparse` onto the new graph's `Neighbors`.
+  "routing"   graph identical but task structure moved.  A destination
+              re-draw refeasibilizes with the affected task
+              force-rebuilt from the SPT (its surviving rows still
+              point at the OLD destination); a source re-draw
+              refeasibilizes too, because a source can land on a node
+              whose result row is empty (e.g. one that just recovered)
+              — the repair's direct-source damage rule then rebuilds
+              that task so its result flow isn't silently dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .network import CECNetwork
+
+
+# ------------------------------------------------------------------ events
+@dataclasses.dataclass(frozen=True)
+class RateScale:
+    """Scale the exogenous input rates of one task (or all) by `factor`."""
+    factor: float
+    task: Optional[int] = None      # None = every task
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceRedraw:
+    """Move task `task`'s data sources to fresh nodes (seeded).
+
+    The rate VALUES are kept (permuted onto the new sources) so total
+    exogenous load is unchanged — the event moves load, not volume.
+    """
+    task: int
+    seed: int
+
+
+@dataclasses.dataclass(frozen=True)
+class DestRedraw:
+    """Move task `task`'s destination — to `node` when given (lets a
+    schedule generator know, and protect, the target in advance), else
+    to a seeded draw over currently-alive nodes at apply time."""
+    task: int
+    seed: int = 0
+    node: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFail:
+    """Fail a node: links removed, compute disabled, its inputs stop,
+    tasks destined to it go dark (`scenarios.fail_node` semantics)."""
+    node: int
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeRecover:
+    """Undo a `NodeFail`: original links, capacity and rates return."""
+    node: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkCut:
+    """Cut the link u -> v (and v -> u when `both`)."""
+    u: int
+    v: int
+    both: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkRestore:
+    """Undo a `LinkCut` (only restores links the base graph has)."""
+    u: int
+    v: int
+    both: bool = True
+
+
+_KIND = {RateScale: "rate", SourceRedraw: "routing", DestRedraw: "routing",
+         NodeFail: "topology", NodeRecover: "topology",
+         LinkCut: "topology", LinkRestore: "topology"}
+
+
+def event_kind(event) -> str:
+    """"rate" | "topology" | "routing" (see module docstring)."""
+    return _KIND[type(event)]
+
+
+# ---------------------------------------------------------------- schedule
+@dataclasses.dataclass(frozen=True)
+class ChurnSchedule:
+    """A declarative churn scenario: ((iteration, event), ...) sorted by
+    the GLOBAL SGP iteration each event fires at."""
+    events: Tuple[Tuple[int, object], ...]
+    name: str = ""
+
+    def __post_init__(self):
+        its = [t for t, _ in self.events]
+        if any(b <= a for a, b in zip(its, its[1:])):
+            # ties would give the earlier event a zero-iteration
+            # follow-up segment, silently dropping its recovery stats
+            raise ValueError(f"schedule {self.name!r} events must fire "
+                             "at strictly increasing iterations")
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+    @property
+    def horizon(self) -> int:
+        """Iteration of the last event (0 for an empty schedule)."""
+        return self.events[-1][0] if self.events else 0
+
+
+# ------------------------------------------------------------- churn state
+class ChurnState:
+    """Pristine scenario + applied events -> the current network.
+
+    Keeps the minimal churn facts and re-derives the live `CECNetwork`
+    on demand; `apply` returns the event's kind so the replay engine
+    knows whether the iterate needs repair.
+    """
+
+    def __init__(self, base: CECNetwork):
+        self.base = base
+        self.failed: set = set()
+        self.cut: set = set()                       # directed (u, v) pairs
+        self.r = np.asarray(base.r).copy()          # logical rates
+        self.dest = np.asarray(base.dest).copy()
+
+    def clone(self) -> "ChurnState":
+        """Independent copy sharing the (immutable) base network —
+        cheap enough to test-apply candidate events against."""
+        c = ChurnState.__new__(ChurnState)
+        c.base = self.base
+        c.failed = set(self.failed)
+        c.cut = set(self.cut)
+        c.r = self.r.copy()
+        c.dest = self.dest.copy()
+        return c
+
+    # -------------------------------------------------------------- events
+    def apply(self, event) -> str:
+        """Fold one event in; returns its kind."""
+        if isinstance(event, RateScale):
+            if event.task is None:
+                self.r *= event.factor
+            else:
+                self.r[event.task] *= event.factor
+        elif isinstance(event, SourceRedraw):
+            rng = np.random.RandomState(event.seed)
+            row = self.r[event.task]
+            vals = row[row > 0.0]
+            alive = np.setdiff1d(np.arange(row.shape[0]),
+                                 np.fromiter(self.failed, int, len(self.failed)))
+            if vals.size and alive.size >= vals.size:
+                src = rng.choice(alive, size=vals.size, replace=False)
+                row[:] = 0.0
+                row[src] = rng.permutation(vals)
+        elif isinstance(event, DestRedraw):
+            if event.node is not None and event.node not in self.failed:
+                self.dest[event.task] = event.node
+            else:
+                rng = np.random.RandomState(event.seed)
+                cand = np.setdiff1d(
+                    np.arange(self.r.shape[1]),
+                    np.fromiter(self.failed, int, len(self.failed)))
+                cand = cand[cand != self.dest[event.task]]
+                if cand.size:
+                    self.dest[event.task] = rng.choice(cand)
+        elif isinstance(event, NodeFail):
+            self.failed.add(int(event.node))
+        elif isinstance(event, NodeRecover):
+            self.failed.discard(int(event.node))
+        elif isinstance(event, LinkCut):
+            self.cut.add((int(event.u), int(event.v)))
+            if event.both:
+                self.cut.add((int(event.v), int(event.u)))
+        elif isinstance(event, LinkRestore):
+            self.cut.discard((int(event.u), int(event.v)))
+            if event.both:
+                self.cut.discard((int(event.v), int(event.u)))
+        else:
+            raise TypeError(f"unknown churn event {event!r}")
+        return event_kind(event)
+
+    # ------------------------------------------------------------- network
+    def network(self) -> CECNetwork:
+        """Assemble the CURRENT network (numpy, outside jit).
+
+        Failures go through `scenarios.fail_node` itself — links
+        removed, compute disabled, inputs stopped, dead-destination
+        tasks dark — so replayed churn means exactly what the paper's
+        Fig. 5b failure means (one source of truth for the sentinels);
+        cut links are overlaid on top.  Everything derives from the
+        pristine base every time, so recovery is exact.
+        """
+        from .scenarios import fail_node
+        net = dataclasses.replace(
+            self.base,
+            r=jnp.asarray(self.r),
+            dest=jnp.asarray(self.dest, dtype=jnp.int32))
+        for node in sorted(self.failed):
+            net = fail_node(net, node)
+        if self.cut:
+            adj = np.asarray(net.adj).copy()
+            for (u, v) in self.cut:
+                adj[u, v] = False
+            net = dataclasses.replace(net, adj=jnp.asarray(adj))
+        return net
+
+
+# ------------------------------------------------------- random schedules
+def _reaches(adj: np.ndarray, srcs, dest: int) -> bool:
+    """True iff every node in `srcs` reaches `dest` on directed `adj`
+    (BFS on the reversed graph from `dest`; numpy, generator-side)."""
+    want = {int(s) for s in srcs if int(s) != dest}
+    if not want:
+        return True
+    seen = np.zeros(adj.shape[0], bool)
+    seen[dest] = True
+    frontier = [dest]
+    while frontier:
+        preds = np.nonzero(adj[:, frontier].any(axis=1) & ~seen)[0]
+        seen[preds] = True
+        frontier = list(preds)
+    return all(seen[s] for s in want)
+
+
+def _all_delivered(state: "ChurnState") -> bool:
+    """Every live exogenous source reaches its task's destination on
+    `state`'s current network (failed-node sources are already masked
+    out of `network().r` — a failed source going dark is `fail_node`
+    semantics, not a disconnection)."""
+    cur = state.network()
+    adj = np.asarray(cur.adj)
+    r = np.asarray(cur.r)
+    dest = np.asarray(cur.dest)
+    return all(_reaches(adj, np.nonzero(r[s] > 0.0)[0], int(dest[s]))
+               for s in range(r.shape[0]))
+
+
+def random_schedule(net: CECNetwork, n_events: int, seed: int = 0,
+                    start: int = 1, gap: Tuple[int, int] = (1, 3),
+                    max_failed: int = 2, max_cut: int = 2,
+                    name: str = "") -> ChurnSchedule:
+    """A seeded, self-consistent random churn schedule.
+
+    Recoveries/restores only target currently-failed nodes / cut links,
+    destination nodes are never failed — including destinations MOVED
+    by a generated `DestRedraw`, whose target is picked here (explicit
+    `node`) exactly so it can be protected — at most `max_failed` nodes
+    are down and `max_cut` links cut at once, and NO generated event
+    (fail, cut, recover, source/dest re-draw) ever leaves a live
+    exogenous source disconnected from its task's destination: a
+    silently-undeliverable flow would make the property loop and the
+    warm-vs-cold benchmark measure a partially-dark system.  The guard
+    is definitionally consistent with replay semantics — each candidate
+    event is test-applied to a scratch `ChurnState` and checked on the
+    very network replay would derive; candidates that would break
+    delivery degrade to a `RateScale`.  Event times advance by uniform
+    gaps from `gap` — the property-test layer replays one of these
+    after EVERY event and asserts the iterate invariants.
+    """
+    rng = np.random.RandomState(seed)
+    base_adj = np.asarray(net.adj)
+    V = base_adj.shape[0]
+    S = int(net.dest.shape[0])
+    probe = ChurnState(net)           # generator-side replay of the events
+    events = []
+    t = start
+
+    def try_event(ev) -> bool:
+        trial = probe.clone()
+        trial.apply(ev)
+        if not _all_delivered(trial):
+            return False
+        probe.apply(ev)               # commit (apply is deterministic)
+        return True
+
+    for _ in range(n_events):
+        choices = ["rate", "rate", "source", "dest", "fail", "cut"]
+        if probe.failed:
+            choices += ["recover", "recover"]
+        # probe.cut holds both directions of every both-way LinkCut
+        canonical_cut = sorted({(min(u, v), max(u, v))
+                                for (u, v) in probe.cut})
+        if canonical_cut:
+            choices.append("restore")
+        kind = choices[rng.randint(len(choices))]
+        ev = None
+        if kind == "fail":
+            protected = set(int(d) for d in probe.dest)
+            cand = [i for i in range(V)
+                    if i not in probe.failed and i not in protected]
+            if len(probe.failed) < max_failed and cand:
+                node = int(cand[rng.randint(len(cand))])
+                if try_event(NodeFail(node)):
+                    ev = NodeFail(node)
+        elif kind == "recover":
+            node = int(sorted(probe.failed)[rng.randint(len(probe.failed))])
+            # a recovered source must reach its destination again too
+            if try_event(NodeRecover(node)):
+                ev = NodeRecover(node)
+        elif kind == "cut":
+            us, vs = np.nonzero(np.triu(base_adj | base_adj.T))
+            ok = [(int(u), int(v)) for u, v in zip(us, vs)
+                  if u not in probe.failed and v not in probe.failed
+                  and (int(u), int(v)) not in probe.cut]
+            if len(canonical_cut) < max_cut and ok:
+                u, v = ok[rng.randint(len(ok))]
+                if try_event(LinkCut(u, v)):
+                    ev = LinkCut(u, v)
+        elif kind == "restore":
+            u, v = canonical_cut[rng.randint(len(canonical_cut))]
+            if try_event(LinkRestore(u, v)):
+                ev = LinkRestore(u, v)
+        elif kind == "source":
+            task = int(rng.randint(S))
+            cand = SourceRedraw(task, int(rng.randint(1 << 16)))
+            if try_event(cand):
+                ev = cand
+        elif kind == "dest":
+            task = int(rng.randint(S))
+            alive = [i for i in range(V) if i not in probe.failed
+                     and i != int(probe.dest[task])]
+            if alive:
+                node = int(alive[rng.randint(len(alive))])
+                if try_event(DestRedraw(task, node=node)):
+                    ev = DestRedraw(task, node=node)
+        if ev is None:                    # "rate", or an infeasible pick
+            ev = RateScale(float(rng.uniform(0.6, 1.6)),
+                           task=None if rng.rand() < 0.5
+                           else int(rng.randint(S)))
+            probe.apply(ev)               # keep the probe in sync
+        events.append((t, ev))
+        t += int(rng.randint(gap[0], gap[1] + 1))
+    return ChurnSchedule(tuple(events), name=name or f"random_{seed}")

@@ -669,14 +669,33 @@ def is_loop_free(net: CECNetwork, phi, tol: float = 0.0) -> jnp.ndarray:
     return ~(has_cycle(sup_d) | has_cycle(sup_r))
 
 
-def refeasibilize(net: CECNetwork, phi: Phi) -> Phi:
+def refeasibilize(net: CECNetwork, phi: Phi,
+                  rebuild_tasks: jnp.ndarray | None = None) -> Phi:
     """Project φ back to feasibility after topology change (node failure).
 
     Zeroes mass on removed edges and renormalizes; data rows left with
-    no mass fall back to local offload; result rows left with no mass
-    fall back to the shortest-path tree toward their destination on the
-    NEW graph (spreading over all out-edges can close a loop and make
-    the traffic solve singular).
+    no mass fall back to local offload; result rows that LOST their mass
+    to the change fall back to the shortest-path tree toward their
+    destination on the NEW graph (spreading over all out-edges can close
+    a loop and make the traffic solve singular).
+
+    Rows that were ALREADY empty before the change — a recovered node
+    rejoining with no routing yet, padding tasks — are left empty when
+    they carry no result traffic on the repaired strategy (no surviving
+    row forwards to them and they compute no direct input), so they are
+    feasible as-is, and the next SGP step grows them a row through the
+    loop-protected blocked-set protocol.  This is what lets a
+    failure→recovery roundtrip keep the warm iterate instead of
+    resetting every task to the SPT tree.  An empty row that WILL carry
+    result traffic immediately — the node locally computes restored
+    exogenous input (r·φ_local > 0, a > 0), as a recovered source node
+    does — still counts as damage: leaving it empty would silently drop
+    that result flow from the objective (understating cost and making
+    the driver reject the step that repairs it).
+
+    rebuild_tasks : optional [S] bool — tasks to force-rebuild from the
+    new graph's SPT regardless of damage (e.g. a destination re-draw,
+    where the surviving rows still point at the OLD destination).
 
     Dense layout only — edge-slot iterates go through
     `refeasibilize_sparse`, which repairs the slots in place and
@@ -696,14 +715,23 @@ def refeasibilize(net: CECNetwork, phi: Phi) -> Phi:
 
     result = phi.result * adjf[None]
     rsum = jnp.sum(result, axis=-1)                       # [S, V]
+    rsum_before = jnp.sum(phi.result, axis=-1)            # incl. cut edges
     S, V = net.S, net.V
     is_dest = (jnp.arange(V)[None] == net.dest[:, None])  # [S, V]
-    # A task whose routing lost mass anywhere is rebuilt ENTIRELY from
-    # the shortest-path tree on the new graph: mixing surviving rows
-    # with repaired rows can close a loop (making the traffic solve
+    # A task whose routing LOST mass anywhere (a row emptied by the
+    # change at a node still alive) is rebuilt ENTIRELY from the
+    # shortest-path tree on the new graph: mixing surviving rows with
+    # repaired rows can close a loop (making the traffic solve
     # singular); per-task SPT replacement is always loop-free.
     alive = jnp.any(net.adj, axis=-1)[None] | is_dest     # nodes with exits
-    broken = jnp.any((rsum <= 1e-12) & ~is_dest & alive, axis=-1)  # [S]
+    # empty rows about to carry result traffic (direct source, locally
+    # computed) are damage too — see the docstring
+    src = (net.r * data[..., -1] > 1e-12) & (net.a[:, None] > 0.0)
+    damaged = (rsum <= 1e-12) & ((rsum_before > 1e-12) | src) \
+        & ~is_dest & alive
+    broken = jnp.any(damaged, axis=-1)                    # [S]
+    if rebuild_tasks is not None:
+        broken = broken | rebuild_tasks
     spt = spt_phi(net).result
     result = result / jnp.maximum(rsum[..., None], 1e-30)
     result = jnp.where(rsum[..., None] > 1e-12, result, 0.0)
@@ -731,16 +759,25 @@ def _slot_remap(old: Neighbors, new: Neighbors):
 
 
 def refeasibilize_sparse(net: CECNetwork, phi_sp: PhiSparse,
-                         nbrs: Neighbors) -> Tuple[PhiSparse, Neighbors]:
+                         nbrs: Neighbors,
+                         rebuild_tasks: jnp.ndarray | None = None
+                         ) -> Tuple[PhiSparse, Neighbors]:
     """`refeasibilize` for edge-slot iterates after a topology change.
 
     `nbrs` is the Neighbors the iterate is aligned to (the OLD graph);
     the repaired strategy comes back aligned to `build_neighbors` of the
     NEW `net.adj`, together with those new index tiles.  Same policy as
-    the dense version: surviving mass renormalized per row, missing data
-    mass to local offload, any task whose result routing lost mass
-    rebuilt entirely from the new graph's shortest-path tree (partial
-    repair can close a loop).  All slot-level except the one dense SPT
+    the dense version (bitwise): surviving mass renormalized per row,
+    missing data mass to local offload, any task whose result routing
+    LOST mass rebuilt entirely from the new graph's shortest-path tree
+    (partial repair can close a loop), rows that were already empty —
+    recovered nodes rejoining after a failure — left empty so the warm
+    iterate survives a failure→recovery roundtrip (`_slot_remap` handles
+    growing neighborhoods: restored edges come back as zero-mass slots),
+    UNLESS the empty row locally computes restored exogenous input and
+    would silently drop its result flow (see `refeasibilize`).
+    `rebuild_tasks` force-rebuilds specific tasks from the SPT (see
+    `refeasibilize`).  All slot-level except the one dense SPT
     construction at the boundary.
     """
     new_nbrs = build_neighbors(net.adj)
@@ -760,13 +797,20 @@ def refeasibilize_sparse(net: CECNetwork, phi_sp: PhiSparse,
     data = data / tot[..., None]
     local = local / tot
 
-    result = reslot(mask_slots(phi_sp.result, nbrs))
+    result_masked = mask_slots(phi_sp.result, nbrs)
+    result = reslot(result_masked)
     rsum = jnp.sum(result, axis=-1)                        # [S, V]
+    rsum_before = jnp.sum(result_masked, axis=-1)
     S, V = net.S, net.V
     is_dest = (jnp.arange(V)[None] == net.dest[:, None])   # [S, V]
-    # same broken-task policy as the dense path (see refeasibilize)
+    # same damaged-row policy as the dense path (see refeasibilize)
     alive = jnp.any(new_nbrs.out_mask, axis=-1)[None] | is_dest
-    broken = jnp.any((rsum <= 1e-12) & ~is_dest & alive, axis=-1)  # [S]
+    src = (net.r * local > 1e-12) & (net.a[:, None] > 0.0)
+    damaged = (rsum <= 1e-12) & ((rsum_before > 1e-12) | src) \
+        & ~is_dest & alive
+    broken = jnp.any(damaged, axis=-1)                     # [S]
+    if rebuild_tasks is not None:
+        broken = broken | rebuild_tasks
     spt_sp = gather_edges(spt_phi(net).result, new_nbrs)
     result = result / jnp.maximum(rsum[..., None], 1e-30)
     result = jnp.where(rsum[..., None] > 1e-12, result, 0.0)

@@ -1,0 +1,334 @@
+"""Streaming churn replay for the sparse engine.
+
+Turns the static-instance solver into an online system: a
+`ReplayEngine` owns a live edge-slot `PhiSparse` iterate and applies a
+`ChurnSchedule` of events (rate churn, source/destination re-draws,
+node failures AND recoveries, link cuts — see core.events) to it,
+repairing the iterate with `refeasibilize_sparse` on topology events
+and WARM-STARTING the resumable drivers (`sgp.run_chunk` /
+`distributed.run_distributed_chunk`) between events instead of
+re-solving from the SPT φ⁰ each time.
+
+Guarantees the test layer (tests/test_replay.py) locks down:
+
+* a zero-event replay is BITWISE `run(method="sparse")` — the engine
+  adds nothing to the uninterrupted trajectory;
+* after every event the iterate satisfies `check_invariants`: data rows
+  on the simplex, result rows simplex-or-empty, exactly zero mass on
+  dead/padding slots, loop-free supports;
+* within each inter-event segment the accepted-cost sequence is
+  monotone non-increasing (the adaptive driver's accept/reject), i.e.
+  cost recovers monotonically after every shock.
+
+`play(..., cold_baseline=True)` additionally runs a cold SPT restart
+beside every repair event and records warm-vs-cold
+iterations-to-target — the number the BENCH replay rows
+(benchmarks/replay_sweep.py) track across PRs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .events import ChurnSchedule, ChurnState, DestRedraw
+from .network import (CECNetwork, Neighbors, PhiSparse, build_neighbors,
+                      is_loop_free, refeasibilize_sparse, sparse_to_phi,
+                      spt_phi_sparse)
+from .sgp import init_run_state, run_chunk
+from . import distributed as dist
+
+
+# ------------------------------------------------------------ invariants
+def check_feasible(phi_sp: PhiSparse, nbrs: Neighbors,
+                   dest=None, atol: float = 1e-5) -> None:
+    """Assert the edge-slot iterate is feasible.
+
+    Data rows (slots + local column) lie on the simplex at every node;
+    result rows are simplex rows or exactly-empty rows (a node a churn
+    event just disconnected/reconnected carries no routing until the
+    next SGP step grows it one); destination rows carry no result mass;
+    padding slots hold EXACTLY zero.  The last check is deliberately
+    STRICTER than the `PhiSparse` layout contract (which lets padding
+    hold garbage because every consumer masks it): the SGP step and
+    `refeasibilize_sparse` both PRODUCE exactly-zero padding, and the
+    replay engine pins that so any new producer that starts leaving
+    scratch values in dead slots is flagged here instead of surfacing
+    as a confusing downstream diff.
+    """
+    data = np.asarray(phi_sp.data)
+    local = np.asarray(phi_sp.local[..., 0])
+    result = np.asarray(phi_sp.result)
+    pad = ~np.asarray(nbrs.out_mask)[None]
+    if not (data[np.broadcast_to(pad, data.shape)] == 0.0).all():
+        raise AssertionError("nonzero mass on dead data slots")
+    if not (result[np.broadcast_to(pad, result.shape)] == 0.0).all():
+        raise AssertionError("nonzero mass on dead result slots")
+    if data.min() < 0.0 or local.min() < -atol:
+        raise AssertionError("negative routing fraction")
+    np.testing.assert_allclose(data.sum(-1) + local, 1.0, atol=atol,
+                               err_msg="data rows off the simplex")
+    rsum = result.sum(-1)
+    ok = (np.abs(rsum - 1.0) < atol) | (np.abs(rsum) < atol)
+    if not ok.all():
+        raise AssertionError(
+            f"result rows neither simplex nor empty: sums "
+            f"{np.unique(np.round(rsum[~ok], 4))[:8]}")
+    if dest is not None:
+        d = np.asarray(dest)
+        if not (rsum[np.arange(d.shape[0]), d] < atol).all():
+            raise AssertionError("destination rows carry result mass")
+
+
+def check_invariants(net: CECNetwork, phi_sp: PhiSparse, nbrs: Neighbors,
+                     n_loop_tasks: Optional[int] = None,
+                     atol: float = 1e-5) -> None:
+    """`check_feasible` + loop-freedom.
+
+    The boolean-closure loop-free check is O(S·V²·log V), so at V ~ 10³
+    pass `n_loop_tasks` to spot-check a task slice (the invariant is
+    per-task, slicing loses no soundness for the checked tasks).
+    """
+    check_feasible(phi_sp, nbrs, dest=net.dest, atol=atol)
+    if n_loop_tasks is not None and n_loop_tasks < net.S:
+        sl = slice(0, n_loop_tasks)
+        net = dataclasses.replace(
+            net, dest=net.dest[sl], r=net.r[sl], a=net.a[sl],
+            w=net.w[sl], task_type=net.task_type[sl])
+        phi_sp = PhiSparse(phi_sp.data[sl], phi_sp.local[sl],
+                           phi_sp.result[sl])
+    phi = sparse_to_phi(phi_sp, nbrs, net.V)
+    if not bool(is_loop_free(net, phi)):
+        raise AssertionError("replayed iterate has a support loop")
+
+
+def iters_to_target(costs, target: float) -> int:
+    """Index of the first cost <= target (len(costs) if never reached)."""
+    for i, c in enumerate(costs):
+        if c <= target:
+            return i
+    return len(costs)
+
+
+# ---------------------------------------------------------------- records
+@dataclasses.dataclass
+class EventRecord:
+    """What one churn event did to the live iterate."""
+    it: int                      # global iteration the event fired at
+    event: object
+    kind: str                    # "rate" | "topology" | "routing"
+    cost_before: float           # last accepted cost on the old network
+    cost_after: float            # repaired iterate's cost on the new one
+    segment_costs: list = dataclasses.field(default_factory=list)
+    segment_iters: int = 0       # iterations EXECUTED after the event
+                                 # (rejected steps count; accepted costs
+                                 # land in segment_costs)
+    # cold-baseline stats (play(cold_baseline=True), repair events only)
+    warm_iters: Optional[int] = None
+    cold_iters: Optional[int] = None
+    cold_final: Optional[float] = None
+
+
+# ----------------------------------------------------------------- engine
+class ReplayEngine:
+    """Event-driven streaming replay over a live `PhiSparse` iterate.
+
+    driver="run" resumes the single-process `sgp.run` loop
+    (`RunState`/`run_chunk`); driver="distributed" resumes the
+    shard_mapped `run_distributed` loop — rate and routing events keep
+    the graph and swap the padded network into the existing compiled
+    step (no retrace); only topology events rebuild it (their
+    `Neighbors` tiles change).
+
+    run_opts are forwarded to every `run_chunk` call (variant, scaling,
+    proj_impl, ... — driver="distributed" instead bakes variant/scaling
+    in at init).
+    """
+
+    def __init__(self, net: CECNetwork, phi0: Optional[PhiSparse] = None,
+                 driver: str = "run", engine_impl: Optional[str] = None,
+                 min_scale: float = 0.05, mesh=None,
+                 run_opts: Optional[dict] = None):
+        if driver not in ("run", "distributed"):
+            raise ValueError(f"unknown replay driver {driver!r}")
+        self.churn = ChurnState(net)
+        self.net = net
+        self.nbrs = build_neighbors(net.adj)
+        self.driver = driver
+        self.engine_impl = engine_impl
+        self.min_scale = min_scale
+        self.mesh = mesh
+        self.run_opts = dict(run_opts or {})
+        if engine_impl is not None:
+            # thread the backend into every run_chunk call (the
+            # distributed driver instead bakes it into its step)
+            self.run_opts.setdefault("engine_impl", engine_impl)
+        self.records: list[EventRecord] = []
+        self.cost_log: list[float] = []      # finished segments' costs
+        self.total_iters = 0
+        self._segment_open = False           # iterations attribute to
+                                             # records[-1] only while open
+        phi0 = spt_phi_sparse(net, self.nbrs) if phi0 is None else phi0
+        if not isinstance(phi0, PhiSparse):
+            raise TypeError("ReplayEngine iterates natively: pass a "
+                            "PhiSparse phi0 (e.g. spt_phi_sparse)")
+        self._init_state(phi0)
+
+    # ------------------------------------------------------------- driver
+    def _init_state(self, phi_sp: PhiSparse) -> None:
+        if self.driver == "run":
+            self.state: object = init_run_state(
+                self.net, phi_sp, min_scale=self.min_scale,
+                method="sparse", engine_impl=self.engine_impl,
+                nbrs=self.nbrs)
+        else:
+            self.state = dist.init_distributed_state(
+                self.net, phi_sp, mesh=self.mesh, method="sparse",
+                min_scale=self.min_scale, engine_impl=self.engine_impl,
+                variant=self.run_opts.get("variant", "sgp"),
+                scaling=self.run_opts.get("scaling", "adaptive"),
+                kappa=self.run_opts.get("kappa", 0.0))
+            self.mesh = self.state.mesh      # reuse across re-inits
+
+    @property
+    def phi(self) -> PhiSparse:
+        """The live (unpadded) edge-slot iterate."""
+        if self.driver == "run":
+            return self.state.phi
+        return dist.unpad_phi(self.state)
+
+    @property
+    def costs(self) -> list:
+        """Full accepted-cost trajectory across all segments so far."""
+        return self.cost_log + list(self.state.costs)
+
+    @property
+    def cost(self) -> float:
+        return self.state.costs[-1]
+
+    def iterate(self, n_iters: int) -> list:
+        """Advance the warm driver `n_iters` iterations; returns the
+        accepted costs appended by this chunk.  Counters advance by the
+        iterations actually EXECUTED (the driver may stop early on a
+        sigma blow-up or a tol exit passed via run_opts)."""
+        if n_iters <= 0:
+            return []
+        before = len(self.state.costs)
+        it_before = self.state.it
+        if self.driver == "run":
+            run_chunk(self.net, self.state, n_iters, **self.run_opts)
+        else:
+            dist.run_distributed_chunk(self.state, n_iters)
+        executed = self.state.it - it_before
+        self.total_iters += executed
+        new = list(self.state.costs[before:])
+        if self.records and self._segment_open:
+            self.records[-1].segment_costs.extend(new)
+            self.records[-1].segment_iters += executed
+        return new
+
+    # ------------------------------------------------------------- events
+    def apply_event(self, event) -> EventRecord:
+        """Fold one churn event into the live system.
+
+        Rate events keep the iterate (still feasible) and only
+        re-baseline cost/curvature; topology and routing events repair
+        it through `refeasibilize_sparse` (re-slotting onto the new
+        graph's index tiles, destination re-draws force-rebuilding the
+        moved task).  Either way the driver state is re-initialized
+        from the WARM iterate — never from the SPT.
+        """
+        cost_before = float(self.state.costs[-1])
+        kind = self.churn.apply(event)
+        net_new = self.churn.network()
+        phi = self.phi
+        if kind in ("topology", "routing"):
+            rebuild = None
+            if isinstance(event, DestRedraw):
+                rebuild = np.zeros(net_new.S, bool)
+                rebuild[event.task] = True
+                rebuild = jnp.asarray(rebuild)
+            phi, self.nbrs = refeasibilize_sparse(net_new, phi, self.nbrs,
+                                                  rebuild_tasks=rebuild)
+        self.net = net_new
+        self.cost_log.extend(self.state.costs)
+        if self.driver == "distributed" and kind != "topology":
+            # rate/routing events keep the graph (self.nbrs stays the
+            # memoized tiles the step was built from): swap the churned
+            # net into the compiled step instead of rebuilding it
+            dist.rebaseline_distributed_state(self.state, net_new, phi)
+        else:
+            self._init_state(phi)             # warm re-baseline
+        rec = EventRecord(it=self.total_iters, event=event, kind=kind,
+                          cost_before=cost_before,
+                          cost_after=float(self.state.costs[-1]))
+        self.records.append(rec)
+        self._segment_open = True
+        return rec
+
+    # --------------------------------------------------------------- play
+    def play(self, schedule: ChurnSchedule, tail_iters: int = 5,
+             cold_baseline: bool = False, rel_tol: float = 0.02,
+             callback: Optional[Callable] = None) -> dict:
+        """Replay a whole schedule: iterate to each event's firing
+        iteration, apply it, continue warm; after the last event run
+        `tail_iters` more.
+
+        cold_baseline=True runs, beside every repair (topology/routing)
+        event's follow-up segment, a cold SPT restart on the same
+        post-event network for the same iteration budget, and records
+        warm/cold iterations-to-target where the target is the better
+        of the two finals × (1 + rel_tol) — the warm-start win the
+        BENCH replay rows track.
+
+        callback(record, engine), if given, fires after each event is
+        applied (before its follow-up segment runs).
+        """
+        t_prev = 0
+        pending: Optional[EventRecord] = None
+        for (t_ev, event) in schedule.events:
+            self.iterate(t_ev - t_prev)
+            self._finish_cold(pending, cold_baseline, rel_tol)
+            pending = self.apply_event(event)
+            if callback is not None:
+                callback(pending, self)
+            t_prev = t_ev
+        self.iterate(tail_iters)
+        self._finish_cold(pending, cold_baseline, rel_tol)
+        # the schedule is over: later iterate() calls (timing probes,
+        # manual driving) must not pollute the last event's segment
+        self._segment_open = False
+        return self.history()
+
+    def _finish_cold(self, rec: Optional[EventRecord],
+                     cold_baseline: bool, rel_tol: float) -> None:
+        """After `rec`'s follow-up segment ran warm, run the cold SPT
+        restart on the same network for the same budget and fill in the
+        warm/cold iterations-to-target.  The cold side always uses the
+        single-process driver (it is a measurement probe, not part of
+        the replayed system)."""
+        if rec is None or not cold_baseline or rec.kind == "rate":
+            return
+        n = rec.segment_iters
+        if n == 0:
+            return
+        cold0 = spt_phi_sparse(self.net, self.nbrs)
+        cold = init_run_state(self.net, cold0, min_scale=self.min_scale,
+                              method="sparse", engine_impl=self.engine_impl,
+                              nbrs=self.nbrs)
+        # the probe must stay invisible: no user callback firing, no
+        # tol early-exit shortening its budget vs the warm segment
+        probe_opts = {k: v for k, v in self.run_opts.items()
+                      if k not in ("callback", "tol")}
+        run_chunk(self.net, cold, n, **probe_opts)
+        warm_costs = [rec.cost_after] + rec.segment_costs
+        target = min(warm_costs[-1], cold.costs[-1]) * (1.0 + rel_tol)
+        rec.warm_iters = iters_to_target(warm_costs, target)
+        rec.cold_iters = iters_to_target(cold.costs, target)
+        rec.cold_final = float(cold.costs[-1])
+
+    def history(self) -> dict:
+        return {"costs": self.costs, "final_cost": self.cost,
+                "records": self.records, "n_iters": self.total_iters}

@@ -152,6 +152,70 @@ def enforce_feasibility(net: CECNetwork, margin: float = 0.75,
     return net
 
 
+# ------------------------------------------------------- churn scenarios
+def hub_node(net: CECNetwork) -> int:
+    """The highest-out-degree node — the most damaging single failure."""
+    return int(np.argmax(np.asarray(net.adj).sum(axis=1)))
+
+
+def churn_hub(net: CECNetwork) -> int:
+    """The busiest node that is NOT a task destination — the most
+    damaging failure that doesn't darken demand (failing a destination
+    drops its tasks' rates, so the cost change would measure vanished
+    load instead of routing adaptation)."""
+    dests = set(int(d) for d in np.asarray(net.dest))
+    for i in np.argsort(-np.asarray(net.adj).sum(axis=1)):
+        if int(i) not in dests:
+            return int(i)
+    return hub_node(net)        # every node is a destination (tiny nets)
+
+
+def churn_schedule(name: str, net: CECNetwork):
+    """Canned multi-event churn schedules for the streaming replay
+    engine (core.replay): a seeded mix of rate scaling, source
+    re-draws, hub failure AND recovery, and a link flap — the
+    multi-event stress the paper's single-failure Fig. 5b never
+    exercises.  `net` must be the scenario the schedule targets (the
+    hub/link picks are degree-derived from it); the failed hub is the
+    busiest NON-destination node (`churn_hub`), so the gated warm-vs-
+    cold numbers measure routing adaptation, not disappearing demand.
+
+    Names: "<scenario>_churn" for every TABLE_II row, e.g.
+    "sw_1000_churn" / "grid_1024_churn".
+    """
+    from .events import (ChurnSchedule, LinkCut, LinkRestore, NodeFail,
+                         NodeRecover, RateScale, SourceRedraw)
+    base = name[:-len("_churn")] if name.endswith("_churn") else name
+    if base not in TABLE_II:
+        raise KeyError(f"no churn schedule for scenario {name!r}")
+    hub = churn_hub(net)
+    adj = np.asarray(net.adj)
+    # a busy link away from the hub (flapped while the hub is down);
+    # hub-dominated graphs may leave no such link — fall back to a hub
+    # edge (cutting it while the hub is down is then simply a no-op)
+    order = np.argsort(-adj.sum(axis=1))
+    u = v = None
+    for i in order:
+        if i == hub:
+            continue
+        js = [j for j in np.nonzero(adj[i])[0] if j != hub]
+        if js:
+            u, v = int(i), int(js[0])
+            break
+    if u is None:
+        u, v = hub, int(np.nonzero(adj[hub])[0][0])
+    events = (
+        (2, RateScale(1.5)),                  # global rate surge
+        (5, NodeFail(hub)),                   # worst-case failure
+        (9, LinkCut(u, v)),                   # link flap, down...
+        (12, NodeRecover(hub)),               # ...the hub returns
+        (15, LinkRestore(u, v)),              # ...and the link
+        (17, SourceRedraw(0, seed=net.S)),    # task 0's sources move
+        (19, RateScale(0.75)),                # load drops back off
+    )
+    return ChurnSchedule(events, name=f"{base}_churn")
+
+
 def fail_node(net: CECNetwork, node: int) -> CECNetwork:
     """Paper Fig. 5b: node failure — links removed, compute disabled,
     its exogenous inputs stop; tasks destined to it are dropped (rates

@@ -473,6 +473,145 @@ sgp_step = jax.jit(
 
 
 # ------------------------------------------------------------------- driver
+def accept_step(new_cost: float, prev_cost: float, sigma: float,
+                scaling: str, variant: str):
+    """Shared accept/reject rule + sigma safeguard of both python-loop
+    drivers (`run_chunk` and `distributed.run_distributed_chunk`).
+
+    A non-finite cost is never accepted (NaN comparisons are False —
+    without the guard a diverged step would poison the trajectory and
+    auto-accept forever); under adaptive SGP an uphill step is rejected
+    and sigma quadrupled (stopping past 1e12), accepted steps decay
+    sigma toward 1.  Returns (accepted, sigma, stopped).
+    """
+    accepted = np.isfinite(new_cost) and not (
+        scaling == "adaptive" and variant == "sgp"
+        and new_cost > prev_cost * (1.0 + 1e-12))
+    stopped = False
+    if not accepted:
+        sigma *= 4.0          # reject: step too aggressive
+        if sigma > 1e12:      # numerically stuck: stop
+            stopped = True
+    else:
+        sigma = max(sigma / 1.5, 1.0)
+    return accepted, sigma, stopped
+
+
+@dataclasses.dataclass
+class RunState:
+    """Resumable host-side state of the `run` driver (NOT a pytree).
+
+    Everything the python loop carries between iterations, so a caller
+    can interleave iteration chunks with external events (topology
+    churn, rate changes — see core.replay) and `run_chunk` picks up
+    EXACTLY where the previous chunk stopped: chunked iteration is
+    bitwise identical to one uninterrupted `run` (locked by
+    tests/test_replay.py).  `phi` stays in whatever layout the loop
+    iterates (edge-slot `PhiSparse` under method="sparse"); `it` is the
+    GLOBAL iteration count (drives the paper-scaling refresh cadence
+    across chunks).
+    """
+    phi: object                      # Phi | PhiSparse iterate
+    consts: SGPConsts
+    nbrs: Optional[Neighbors]
+    method: str
+    costs: list
+    min_scale: float = 0.05          # diag(M) floor consts were built with
+    sigma: float = 1.0
+    n_rejected: int = 0
+    it: int = 0
+    rng: Optional[jax.Array] = None
+    stopped: bool = False            # sigma blow-up / tol early exit
+
+
+def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
+                   method: str = "dense", rng: Optional[jax.Array] = None,
+                   engine_impl: Optional[str] = None,
+                   nbrs: Optional[Neighbors] = None) -> RunState:
+    """Set up the resumable driver state exactly as `run` would: build
+    (or accept) the neighbor lists, convert a dense φ⁰ to slots under
+    method="sparse", evaluate T⁰ and the Eq. 16 constants."""
+    from .network import total_cost_jit as _tc
+    if method == "sparse":
+        nbrs = build_neighbors(net.adj) if nbrs is None else nbrs
+    else:
+        nbrs = None
+    if method == "sparse" and not isinstance(phi0, PhiSparse):
+        phi0 = phi_to_sparse(phi0, nbrs)   # boundary: iterate in slots
+    T0 = _tc(net, phi0, method, nbrs=nbrs, engine_impl=engine_impl)
+    consts = make_consts(net, T0, min_scale)
+    return RunState(phi=phi0, consts=consts, nbrs=nbrs, method=method,
+                    costs=[float(T0)], min_scale=min_scale, rng=rng)
+
+
+def run_chunk(net: CECNetwork, state: RunState, n_iters: int,
+              variant: str = "sgp", beta: float = 1.0,
+              allowed_data=None, allowed_result=None,
+              async_frac: float = 0.0,
+              tol: float = 0.0, callback=None, use_blocking: bool = True,
+              refresh_every: int = 20, scaling: str = "adaptive",
+              kappa: float = 0.0, proj_impl: Optional[str] = None,
+              engine_impl: Optional[str] = None) -> RunState:
+    """Advance the driver `n_iters` iterations, updating `state` in
+    place (and returning it).  This IS `run`'s loop body — `run` is
+    init_run_state + one run_chunk — so interleaving chunks with events
+    never diverges from the uninterrupted driver.  A state that stopped
+    (tol early exit, sigma blow-up) stays stopped: further chunks are
+    no-ops, exactly as the uninterrupted loop would not have continued.
+    The paper-scaling consts refresh uses the `min_scale` the state was
+    initialized with."""
+    from .network import total_cost_jit as _tc
+    if state.stopped:
+        return state
+    if scaling == "paper":
+        kappa = 1.0  # Eq. 16 verbatim
+    min_scale = state.min_scale
+    phi, consts, nbrs = state.phi, state.consts, state.nbrs
+    method, costs = state.method, state.costs
+    sigma, n_rejected, rng = state.sigma, state.n_rejected, state.rng
+    done = state.it                  # iterations executed so far (global)
+    for it in range(state.it, state.it + n_iters):
+        done = it + 1
+        if (scaling == "paper" and refresh_every and it > 0
+                and it % refresh_every == 0):
+            consts = make_consts(net, jnp.asarray(costs[-1]), min_scale)
+        mask_d = mask_r = None
+        if async_frac > 0.0 and rng is not None:
+            rng, k1, k2 = jax.random.split(rng, 3)
+            mask_d = jax.random.bernoulli(k1, 1.0 - async_frac, (net.S, net.V))
+            mask_r = jax.random.bernoulli(k2, 1.0 - async_frac, (net.S, net.V))
+        phi_new, aux = sgp_step(net, phi, consts, variant=variant, beta=beta,
+                                mask_data=mask_d, mask_result=mask_r,
+                                allowed_data=allowed_data,
+                                allowed_result=allowed_result, method=method,
+                                use_blocking=use_blocking, scaling=scaling,
+                                sigma=sigma, kappa=kappa,
+                                proj_impl=proj_impl, engine_impl=engine_impl,
+                                nbrs=nbrs)
+        new_cost = float(_tc(net, phi_new, method, nbrs=nbrs,
+                             engine_impl=engine_impl))
+        accepted, sigma, stop = accept_step(new_cost, costs[-1], sigma,
+                                            scaling, variant)
+        if not accepted:
+            n_rejected += 1
+            if stop:
+                state.stopped = True
+                break
+        else:
+            phi = phi_new
+            costs.append(new_cost)
+        if callback is not None:
+            callback(it, phi, aux, accepted)
+        if tol > 0.0 and len(costs) > 4:
+            if abs(costs[-2] - costs[-1]) <= tol * max(costs[-1], 1e-12):
+                state.stopped = True
+                break
+    state.phi, state.consts = phi, consts
+    state.sigma, state.n_rejected, state.rng = sigma, n_rejected, rng
+    state.it = done
+    return state
+
+
 def run(net: CECNetwork, phi0, n_iters: int = 200,
         variant: str = "sgp", beta: float = 1.0,
         allowed_data=None, allowed_result=None,
@@ -517,59 +656,25 @@ def run(net: CECNetwork, phi0, n_iters: int = 200,
     instances with small-capacity links, where the paper's sublevel-sup
     constants are astronomically conservative.
 
+    The loop itself is resumable: `init_run_state` + repeated
+    `run_chunk` calls walk the identical trajectory and let callers
+    (core.replay's streaming churn engine) interleave events between
+    chunks.
+
     Returns (phi_final, history dict of per-iteration costs).
     """
-    from .network import total_cost_jit as _tc
-    if scaling == "paper":
-        kappa = 1.0  # Eq. 16 verbatim
-    nbrs = build_neighbors(net.adj) if method == "sparse" else None
     dense_in = not isinstance(phi0, PhiSparse)
+    state = init_run_state(net, phi0, min_scale=min_scale, method=method,
+                           rng=rng, engine_impl=engine_impl)
+    state = run_chunk(net, state, n_iters, variant=variant, beta=beta,
+                      allowed_data=allowed_data,
+                      allowed_result=allowed_result,
+                      async_frac=async_frac, tol=tol, callback=callback,
+                      use_blocking=use_blocking, refresh_every=refresh_every,
+                      scaling=scaling, kappa=kappa, proj_impl=proj_impl,
+                      engine_impl=engine_impl)
+    phi = state.phi
     if method == "sparse" and dense_in:
-        phi0 = phi_to_sparse(phi0, nbrs)   # boundary: iterate in slots
-    T0 = _tc(net, phi0, method, nbrs=nbrs, engine_impl=engine_impl)
-    consts = make_consts(net, T0, min_scale)
-    phi = phi0
-    costs = [float(T0)]
-    sigma = 1.0
-    n_rejected = 0
-    for it in range(n_iters):
-        if (scaling == "paper" and refresh_every and it > 0
-                and it % refresh_every == 0):
-            consts = make_consts(net, jnp.asarray(costs[-1]), min_scale)
-        mask_d = mask_r = None
-        if async_frac > 0.0 and rng is not None:
-            rng, k1, k2 = jax.random.split(rng, 3)
-            mask_d = jax.random.bernoulli(k1, 1.0 - async_frac, (net.S, net.V))
-            mask_r = jax.random.bernoulli(k2, 1.0 - async_frac, (net.S, net.V))
-        phi_new, aux = sgp_step(net, phi, consts, variant=variant, beta=beta,
-                                mask_data=mask_d, mask_result=mask_r,
-                                allowed_data=allowed_data,
-                                allowed_result=allowed_result, method=method,
-                                use_blocking=use_blocking, scaling=scaling,
-                                sigma=sigma, kappa=kappa,
-                                proj_impl=proj_impl, engine_impl=engine_impl,
-                                nbrs=nbrs)
-        new_cost = float(_tc(net, phi_new, method, nbrs=nbrs,
-                             engine_impl=engine_impl))
-        accepted = np.isfinite(new_cost) and not (
-            scaling == "adaptive" and variant == "sgp"
-            and new_cost > costs[-1] * (1.0 + 1e-12))
-        if not accepted:
-            sigma *= 4.0          # reject: step too aggressive
-            n_rejected += 1
-            if sigma > 1e12:      # numerically stuck: stop
-                break
-        else:
-            phi = phi_new
-            costs.append(new_cost)
-            sigma = max(sigma / 1.5, 1.0)
-        if callback is not None:
-            callback(it, phi, aux, accepted)
-        if tol > 0.0 and len(costs) > 4:
-            if abs(costs[-2] - costs[-1]) <= tol * max(costs[-1], 1e-12):
-                break
-    if method == "sparse" and dense_in:
-        phi = sparse_to_phi(phi, nbrs, net.V)  # boundary: back to dense
-    final_cost = costs[-1]
-    return phi, {"costs": costs, "final_cost": final_cost,
-                 "n_rejected": n_rejected}
+        phi = sparse_to_phi(phi, state.nbrs, net.V)  # boundary: back to dense
+    return phi, {"costs": state.costs, "final_cost": state.costs[-1],
+                 "n_rejected": state.n_rejected}

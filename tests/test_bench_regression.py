@@ -120,9 +120,68 @@ def test_gating_prefixes():
     assert is_gated("scale_step_sparse_native_V1000")
     assert is_gated("scale_run_sparse_V100")
     assert is_gated("scale_rounds_pallas_interpret_V20")
+    # the streaming-replay rows gate like the sparse scale rows: churn
+    # wall-clock AND warm-start iteration counts are watched — but NOT
+    # the cold counts (their target moves when the warm run improves)
+    assert is_gated("replay_iter_sw_1000")
+    assert is_gated("replay_refeas_sw_queue")
+    assert is_gated("replay_warm_iters_sw_1000")
+    assert not is_gated("replay_cold_iters_grid_1024")
     assert not is_gated("scale_step_dense_V100")
     assert not is_gated("scale_speedup_V100")
     assert not is_gated("fig5b_convergence")
+
+
+def test_missing_gated_family_fails_loudly():
+    """A fresh report lacking an ENTIRE gated family the baseline has
+    (e.g. regenerating without --replay) must fail, not quietly strip
+    the family from the next committed baseline."""
+    import io
+    from benchmarks.check_regression import report
+    committed = {("scale_step_sparse_V20", "ref"): 10.0,
+                 ("replay_iter_sw_1000", None): 100.0}
+    fresh_scale_only = {("scale_step_sparse_V20", "ref"): 10.5}
+    buf = io.StringIO()
+    assert report(fresh_scale_only, committed, out=buf) == 2
+    assert "replay_" in buf.getvalue()
+    # both families present (even partially): normal comparison
+    fresh_both = {("scale_step_sparse_V20", "ref"): 10.5,
+                  ("replay_iter_sw_queue", None): 50.0}
+    assert report(fresh_both, committed, out=io.StringIO()) == 0
+
+
+def test_replay_rows_gate_slowdowns(tmp_path):
+    """A churn replay that got slower (or a warm start that stopped
+    saving iterations) fails the gate like any sparse-row slowdown."""
+    committed = _write(tmp_path / "c.json", [
+        _row("replay_iter_sw_1000", 100000.0),
+        _row("replay_warm_iters_sw_1000", 5.0),
+        _row("replay_cost_sw_1000", 0.0),            # derived-only row
+    ])
+    fresh = _write(tmp_path / "f.json", [
+        _row("replay_iter_sw_1000", 101000.0),       # +1%: fine
+        _row("replay_warm_iters_sw_1000", 9.0),      # +80%: regression
+        _row("replay_cost_sw_1000", 0.0),
+    ])
+    regs, _, _ = compare(load_rows(fresh), load_rows(committed))
+    assert [(r[0]) for r in regs] == ["replay_warm_iters_sw_1000"]
+    assert compare_files(fresh, committed) == 1
+
+
+def test_report_with_nothing_compared_fails_loudly():
+    """The fails-loudly path hit DIRECTLY (not via files): comparing
+    zero gated rows — both dicts empty, or disjoint — returns 2 and
+    says why, instead of green-lighting the run vacuously."""
+    import io
+    from benchmarks.check_regression import report
+    buf = io.StringIO()
+    assert report({}, {}, out=buf) == 2
+    out = buf.getvalue()
+    assert "no gated" in out and "ERROR" in out
+    # disjoint gated rows: still nothing compared
+    fresh = {("replay_iter_sw_1000", None): 10.0}
+    committed = {("scale_step_sparse_V20", "ref"): 10.0}
+    assert report(fresh, committed, out=io.StringIO()) == 2
 
 
 @pytest.mark.slow
@@ -151,3 +210,29 @@ def test_end_to_end_mini_sweep(tmp_path):
     gated = [r for r in rows if is_gated(r["name"])
              and r["us_per_call"] > 0.0]
     assert len(gated) >= 6
+
+
+@pytest.mark.slow
+def test_end_to_end_mini_replay_sweep(tmp_path):
+    """Run a real (small-scenario) churn replay sweep, dump its rows
+    and push them through the gate: the sweep must emit the gated
+    replay_* rows (timing + warm/cold iteration counts) and an
+    identical baseline is never a regression."""
+    from benchmarks import common, replay_sweep
+    saved = list(common.ROWS)
+    common.ROWS.clear()
+    try:
+        replay_sweep.run(names=("abilene",))
+        rows = list(common.ROWS)
+    finally:
+        common.ROWS[:] = saved
+    names = {r["name"] for r in rows}
+    assert {"replay_iter_abilene", "replay_refeas_abilene",
+            "replay_warm_iters_abilene", "replay_cold_iters_abilene",
+            "replay_cost_abilene"} <= names
+    fresh = _write(tmp_path / "fresh.json", rows)
+    baseline = _write(tmp_path / "baseline.json", rows)
+    assert compare_files(fresh, baseline) == 0
+    gated = [r for r in rows if is_gated(r["name"])
+             and r["us_per_call"] > 0.0]
+    assert len(gated) >= 2    # per-iter + refeas timings at minimum
