@@ -7,8 +7,9 @@ committed one and fail on sparse per-step slowdowns.
 
 Rows are keyed by (name, engine_impl).  Only the sparse scale-sweep
 timing rows (``scale_flows_sparse*``, ``scale_step_sparse*``,
-``scale_run_sparse*``, ``scale_rounds_*``) and the streaming churn
-replay rows (``replay_*``: per-iteration/refeasibilize wall-clock and
+``scale_run_sparse*``, ``scale_fusedrun_V*`` — the fused pipelined
+driver, the hot-loop row this PR's throughput target lives on —
+``scale_rounds_*``) and the streaming churn replay rows (``replay_*``: per-iteration/refeasibilize wall-clock and
 the warm iterations-to-target; the cold counts are ungated context —
 they share their target with the warm run, so warm improvements move
 them) gate the exit status: a
@@ -36,7 +37,8 @@ import sys
 # iteration counts: a warm restart that stops beating cold is a
 # regression even if each iteration got no slower)
 GATED_PREFIXES = ("scale_flows_sparse", "scale_step_sparse",
-                  "scale_run_sparse", "scale_rounds_", "replay_")
+                  "scale_run_sparse", "scale_fusedrun_V", "scale_rounds_",
+                  "replay_")
 # ...except the cold-restart iteration counts: cold shares its
 # iterations-to-target TARGET with the warm run (min of the two finals),
 # so a warm-start IMPROVEMENT inflates the cold count — it is context
@@ -96,13 +98,19 @@ def compare(fresh: dict, committed: dict, threshold: float = 0.2):
 
 
 def report(fresh: dict, committed: dict, threshold: float = 0.2,
-           out=sys.stdout) -> int:
+           out=sys.stdout, require_families: bool = True) -> int:
     """Diff two loaded row dicts; print a summary; return exit status.
 
     Takes the already-loaded dicts so a caller about to overwrite the
     committed file (benchmarks.run --check-against) can snapshot the
     baseline FIRST — comparing a report against itself on disk would
     always pass.
+
+    require_families=False relaxes the whole-family-vanished guard for
+    PARTIAL sweeps that never replace the baseline (the CI quick
+    subset runs --only scale at two sizes: missing replay_* rows are
+    then expected notes, not a gate error) — callers about to
+    overwrite the committed baseline must keep it True.
     """
     regressions, improvements, missing = compare(fresh, committed, threshold)
     for name, impl, base, new, ratio in regressions:
@@ -126,7 +134,7 @@ def report(fresh: dict, committed: dict, threshold: float = 0.2,
               "scale sweep and point --committed at a report that has "
               "them", file=out)
         return 2
-    for fam in FAMILIES:
+    for fam in FAMILIES if require_families else ():
         has_committed = any(k[0].startswith(fam) and is_gated(k[0])
                             for k in committed)
         has_fresh = any(k[0].startswith(fam) and is_gated(k[0])

@@ -30,7 +30,10 @@ schedule = core.ChurnSchedule((
 
 print(f"== replaying {schedule.n_events} events on fog "
       f"(V={net.V}, hub={hub}) ==")
-engine = core.ReplayEngine(net)
+# loop_driver="fused": each warm inter-event segment runs as one async
+# on-device pipeline with a single host sync at its end — bitwise the
+# python host loop, minus every per-iteration device round-trip
+engine = core.ReplayEngine(net, loop_driver="fused")
 hist = engine.play(schedule, tail_iters=8, cold_baseline=True)
 
 print(f"{'event':<22}{'t':>4}{'before':>10}{'shock':>10}"

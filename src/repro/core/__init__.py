@@ -11,12 +11,13 @@ Public API:
   ReplayEngine, check_invariants                        (streaming replay)
 """
 from .costs import Cost, CostFamily, FAMILIES, LINEAR, QUEUE, SAT
-from .network import (CECNetwork, Flows, Neighbors, Phi, PhiSparse,
-                      as_dense_phi, build_neighbors, compute_flows,
-                      cost_of_flows, gather_edges, is_loop_free, mask_slots,
-                      offload_phi, phi_to_sparse, refeasibilize,
-                      refeasibilize_sparse, scatter_edges, sparse_to_phi,
-                      spt_phi, spt_phi_sparse, total_cost, uniform_phi)
+from .network import (CECNetwork, Flows, FlowsCarry, Neighbors, Phi,
+                      PhiSparse, as_dense_phi, build_neighbors,
+                      compute_flows, cost_of_flows, flows_carry_and_cost,
+                      gather_edges, is_loop_free, mask_slots, offload_phi,
+                      phi_to_sparse, refeasibilize, refeasibilize_sparse,
+                      scatter_edges, sparse_to_phi, spt_phi,
+                      spt_phi_sparse, total_cost, uniform_phi)
 from .marginals import Marginals, compute_marginals, phi_gradients
 from .sgp import (RunState, SGPConsts, init_run_state, make_consts,
                   project_rows, run, run_chunk, sgp_step)
@@ -37,8 +38,9 @@ from . import moe_bridge, topologies
 
 __all__ = [
     "Cost", "CostFamily", "FAMILIES", "LINEAR", "QUEUE", "SAT",
-    "CECNetwork", "Flows", "Neighbors", "Phi", "PhiSparse", "as_dense_phi",
-    "build_neighbors", "compute_flows", "cost_of_flows", "gather_edges",
+    "CECNetwork", "Flows", "FlowsCarry", "Neighbors", "Phi", "PhiSparse",
+    "as_dense_phi", "build_neighbors", "compute_flows", "cost_of_flows",
+    "flows_carry_and_cost", "gather_edges",
     "is_loop_free", "mask_slots", "offload_phi", "phi_to_sparse",
     "refeasibilize", "refeasibilize_sparse", "scatter_edges",
     "sparse_to_phi", "spt_phi", "spt_phi_sparse", "total_cost",

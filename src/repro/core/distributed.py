@@ -6,10 +6,11 @@ over TASKS: each device owns a shard of the |S| tasks (a task's routing
 variables, traffic solves, marginal recursions and QP projections are
 all task-local), and the only cross-task coupling — total link flows
 F_ij and workloads G_i, i.e. the paper's "measurement" phase — is a
-single `psum` per iteration.
+single `psum` per iteration (of the [V, Dmax] edge-slot flow tiles
+under method="sparse").
 
 This scales the optimizer itself: a 512-chip pod solves 512× the tasks
-per iteration at the cost of one all-reduce of a [V,V]+[V] buffer, and
+per iteration at the cost of one all-reduce of a link-flow buffer, and
 is the engine behind the serving-layer request router
 (`repro.serving.router`), where |S| is the number of active request
 classes.
@@ -25,9 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .network import (CECNetwork, Neighbors, Phi, PhiSparse,
-                      build_neighbors, phi_to_sparse, sparse_to_phi)
-from .sgp import SGPConsts, _sgp_step_impl, accept_step, make_consts
+from .network import (CECNetwork, FlowsCarry, Neighbors, Phi, PhiSparse,
+                      build_neighbors, flows_carry_and_cost_jit,
+                      phi_to_sparse, sparse_to_phi)
+from .sgp import (SGPConsts, _accept_update, _fold_fused_histories,
+                  _sgp_step_flows_impl, _sgp_step_impl, _tol_converged,
+                  accept_step, make_consts)
 
 AXIS = "tasks"
 
@@ -89,6 +93,19 @@ def pad_tasks(net: CECNetwork, phi, n_shards: int):
     return net_p, Phi(data, result), S
 
 
+_TASK_SHARDED_NET = CECNetwork(
+    adj=P(), link_cost=P(), comp_cost=P(),
+    dest=P(AXIS), r=P(AXIS), a=P(AXIS), w=P(AXIS), task_type=P(AXIS))
+_CONSTS_SPEC = SGPConsts(P(), P(), P(), P())
+# only the cross-task couplings (F, G) are replicated post-psum
+_CARRY_SPEC = FlowsCarry(t_data=P(AXIS), t_result=P(AXIS), F=P(), G=P())
+
+
+def _phi_spec(method: str):
+    return (PhiSparse(P(AXIS), P(AXIS), P(AXIS)) if method == "sparse"
+            else Phi(P(AXIS), P(AXIS)))
+
+
 def make_distributed_step(mesh: Mesh, variant: str = "sgp",
                           scaling: str = "adaptive", kappa: float = 0.0,
                           method: str = "dense",
@@ -105,16 +122,15 @@ def make_distributed_step(mesh: Mesh, variant: str = "sgp",
     any device (`run_distributed` converts at the boundary).  `nbrs`
     must then be the precomputed `build_neighbors(adj)`; engine_impl
     picks the message-passing backend (see kernels.ops.edge_rounds).
+
+    This is the standalone (phi -> phi_new, cost-of-phi) step kept for
+    external callers; the drivers use `make_distributed_step_flows`,
+    which also carries the flows so each iterate's flow solve runs
+    exactly once.
     """
     if method == "sparse" and nbrs is None:
         raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
                          "precomputed outside jit")
-    task_sharded = CECNetwork(
-        adj=P(), link_cost=P(), comp_cost=P(),
-        dest=P(AXIS), r=P(AXIS), a=P(AXIS), w=P(AXIS), task_type=P(AXIS))
-    phi_spec = (PhiSparse(P(AXIS), P(AXIS), P(AXIS)) if method == "sparse"
-                else Phi(P(AXIS), P(AXIS)))
-    consts_spec = SGPConsts(P(), P(), P(), P())
     # replicated index tiles (None, an empty pytree, off the sparse path)
     nbrs_spec = (Neighbors(P(), P(), P(), P(), P())
                  if nbrs is not None else None)
@@ -128,8 +144,9 @@ def make_distributed_step(mesh: Mesh, variant: str = "sgp",
 
     sharded = _shard_map(
         step, mesh=mesh,
-        in_specs=(task_sharded, phi_spec, consts_spec, P(), nbrs_spec),
-        out_specs=(phi_spec, P()))
+        in_specs=(_TASK_SHARDED_NET, _phi_spec(method), _CONSTS_SPEC, P(),
+                  nbrs_spec),
+        out_specs=(_phi_spec(method), P()))
     jitted = jax.jit(sharded)
     # keep the public step signature (net, phi, consts, sigma)
     return partial(_call_with_nbrs, jitted, nbrs)
@@ -139,23 +156,68 @@ def _call_with_nbrs(jitted, nbrs, net, phi, consts, sigma):
     return jitted(net, phi, consts, sigma, nbrs)
 
 
+def make_distributed_step_flows(mesh: Mesh, variant: str = "sgp",
+                                scaling: str = "adaptive",
+                                kappa: float = 0.0, method: str = "dense",
+                                nbrs: Optional[Neighbors] = None,
+                                engine_impl: Optional[str] = None):
+    """The drivers' shard_mapped per-iteration primitive:
+    step(net, phi, fl, consts, sigma) -> (phi_new, fl_new, cost_new).
+
+    `fl` is the current iterate's `FlowsCarry` (F/G replicated
+    post-psum, traffic task-sharded; under method="sparse" F is the
+    [V, Dmax] edge-slot tile, so the per-iteration collective shrinks
+    to one psum of [V, Dmax]+[V]).  The candidate's flows/cost are
+    evaluated INSIDE the same call — the host loop's separate
+    total_cost recomputation (a second flow solve per iteration) is
+    gone.  Both `run_distributed_chunk` drivers dispatch THIS compiled
+    executable, which is what makes the fused pipeline bitwise the
+    python loop.
+    """
+    if method == "sparse" and nbrs is None:
+        raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
+                         "precomputed outside jit")
+    nbrs_spec = (Neighbors(P(), P(), P(), P(), P())
+                 if nbrs is not None else None)
+
+    def step(net, phi, fl, consts, sigma, nbrs):
+        return _sgp_step_flows_impl(
+            net, phi, fl, consts, variant=variant, scaling=scaling,
+            sigma=sigma, kappa=kappa, method=method, psum_axis=AXIS,
+            engine_impl=engine_impl, nbrs=nbrs)
+
+    sharded = _shard_map(
+        step, mesh=mesh,
+        in_specs=(_TASK_SHARDED_NET, _phi_spec(method), _CARRY_SPEC,
+                  _CONSTS_SPEC, P(), nbrs_spec),
+        out_specs=(_phi_spec(method), _CARRY_SPEC, P()))
+    jitted = jax.jit(sharded)
+    return partial(_call_with_nbrs_flows, jitted, nbrs)
+
+
+def _call_with_nbrs_flows(jitted, nbrs, net, phi, fl, consts, sigma):
+    return jitted(net, phi, fl, consts, sigma, nbrs)
+
+
 @dataclasses.dataclass
 class DistributedRunState:
     """Resumable host-side state of `run_distributed` (NOT a pytree).
 
     Mirrors `sgp.RunState` for the shard_map driver: the padded net and
-    φ, the compiled shard_map step (reused across chunks — same-graph
-    churn events swap `net_p` in via `rebaseline_distributed_state`
-    without retracing; topology events rebuild the state since the
-    index tiles change shape), and the accept/reject bookkeeping.  `init_distributed_state` + chunks of
-    `run_distributed_chunk` walk exactly `run_distributed`'s
-    trajectory.
+    φ, the current iterate's `FlowsCarry` (each iterate's flow solve
+    runs exactly once — when it was the candidate), the compiled
+    shard_map step (reused across chunks — same-graph churn events swap
+    `net_p` in via `rebaseline_distributed_state` without retracing;
+    topology events rebuild the state since the index tiles change
+    shape), and the accept/reject bookkeeping.
+    `init_distributed_state` + chunks of `run_distributed_chunk` walk
+    exactly `run_distributed`'s trajectory.
     """
     phi: object                      # padded iterate (PhiSparse if sparse)
     consts: SGPConsts
     nbrs: Optional[Neighbors]
     net_p: CECNetwork                # task-padded network
-    step: object                     # jitted shard_map step fn
+    step: object                     # jitted shard_map step-flows fn
     mesh: Mesh
     method: str
     scaling: str
@@ -168,6 +230,7 @@ class DistributedRunState:
     n_rejected: int = 0
     it: int = 0                      # iterations EXECUTED (incl. rejected)
     stopped: bool = False
+    flows: Optional[FlowsCarry] = None   # flows of `phi` (device carry)
 
 
 def init_distributed_state(net: CECNetwork, phi0,
@@ -178,8 +241,8 @@ def init_distributed_state(net: CECNetwork, phi0,
                            engine_impl: Optional[str] = None
                            ) -> DistributedRunState:
     """Pad, convert at the boundary, build the shard_map step and
-    evaluate T⁰ — exactly `run_distributed`'s prologue."""
-    from .network import total_cost_jit as _tc
+    evaluate φ⁰'s flows + T⁰ (one solve, both carried) — exactly
+    `run_distributed`'s prologue."""
     mesh = mesh or task_mesh()
     n_dev = mesh.devices.size
     nbrs = build_neighbors(net.adj) if method == "sparse" else None
@@ -195,16 +258,18 @@ def init_distributed_state(net: CECNetwork, phi0,
     if method == "sparse" and not sparse_in:
         # boundary: the loop iterates natively in edge slots
         phi_p = phi_to_sparse(phi_p, nbrs)
-    step = make_distributed_step(mesh, variant=variant, scaling=scaling,
-                                 kappa=kappa, method=method, nbrs=nbrs,
-                                 engine_impl=engine_impl)
-    T0 = _tc(net_p, phi_p, method, nbrs=nbrs, engine_impl=engine_impl)
+    step = make_distributed_step_flows(mesh, variant=variant,
+                                       scaling=scaling, kappa=kappa,
+                                       method=method, nbrs=nbrs,
+                                       engine_impl=engine_impl)
+    fl_p, T0 = flows_carry_and_cost_jit(net_p, phi_p, method, nbrs=nbrs,
+                                        engine_impl=engine_impl)
     consts = make_consts(net_p, T0, min_scale)
     return DistributedRunState(
         phi=phi_p, consts=consts, nbrs=nbrs, net_p=net_p, step=step,
         mesh=mesh, method=method, scaling=scaling, variant=variant,
         engine_impl=engine_impl, S=S, costs=[float(T0)],
-        min_scale=min_scale)
+        min_scale=min_scale, flows=fl_p)
 
 
 def rebaseline_distributed_state(state: DistributedRunState,
@@ -212,38 +277,60 @@ def rebaseline_distributed_state(state: DistributedRunState,
                                  ) -> DistributedRunState:
     """Swap a SAME-GRAPH network (rate churn: r/cost params moved; or a
     destination re-draw — `dest` is just another step input) into the
-    existing state and re-baseline T⁰/the Eq. 16 constants — the
-    compiled shard_map step is kept, so such events cost zero retraces.
-    `net.adj` must equal the adjacency the state was built from (the
-    step computes with the init-time `Neighbors` tiles); topology
-    events must rebuild via `init_distributed_state` instead."""
-    from .network import total_cost_jit as _tc
+    existing state and re-baseline T⁰/φ's flows/the Eq. 16 constants —
+    the compiled shard_map step is kept, so such events cost zero
+    retraces.  `net.adj` must equal the adjacency the state was built
+    from (the step computes with the init-time `Neighbors` tiles);
+    topology events must rebuild via `init_distributed_state` instead."""
     net_p, phi_p, S = pad_tasks(net, phi_sp, state.mesh.devices.size)
-    T0 = _tc(net_p, phi_p, state.method, nbrs=state.nbrs,
-             engine_impl=state.engine_impl)
+    fl_p, T0 = flows_carry_and_cost_jit(net_p, phi_p, state.method,
+                                        nbrs=state.nbrs,
+                                        engine_impl=state.engine_impl)
     state.net_p, state.phi, state.S = net_p, phi_p, S
+    state.flows = fl_p
     state.consts = make_consts(net_p, T0, state.min_scale)
     state.costs = [float(T0)]
     state.sigma, state.n_rejected, state.stopped = 1.0, 0, False
     return state
 
 
-def run_distributed_chunk(state: DistributedRunState,
-                          n_iters: int) -> DistributedRunState:
+def run_distributed_chunk(state: DistributedRunState, n_iters: int,
+                          tol: float = 0.0,
+                          driver: Optional[str] = None
+                          ) -> DistributedRunState:
     """Advance the distributed driver `n_iters` iterations in place —
     `run_distributed`'s loop body, resumable between events.  A stopped
-    state (sigma blow-up) stays stopped until re-baselined."""
-    from .network import total_cost_jit as _tc
-    if state.stopped:
+    state (sigma blow-up / tol early exit) stays stopped until
+    re-baselined.
+
+    driver="fused" (default) pipelines the whole chunk asynchronously:
+    the shard_mapped step and the on-device `_accept_update` select are
+    dispatched without ever blocking, and the per-iteration histories
+    come back in ONE device_get at the end — bitwise the python loop
+    (driver="host"), which shares the step's compiled executable and
+    mirrors the select arithmetic in f32 (`accept_step`).  `tol`, like
+    the single-process driver, fires only after an ACCEPTED step.
+    """
+    if driver is None:
+        driver = "fused"
+    if driver not in ("host", "fused"):
+        raise ValueError(f"unknown driver {driver!r}")
+    if state.stopped or n_iters <= 0:
         return state
+    fl = state.flows
+    if fl is None:
+        fl, _ = flows_carry_and_cost_jit(state.net_p, state.phi,
+                                         state.method, nbrs=state.nbrs,
+                                         engine_impl=state.engine_impl)
+    if driver == "fused":
+        return _run_distributed_chunk_fused(state, fl, n_iters, tol)
     phi, costs = state.phi, state.costs
     sigma, n_rejected = state.sigma, state.n_rejected
     for _ in range(n_iters):
-        phi_new, cost = state.step(state.net_p, phi, state.consts,
-                                   jnp.asarray(sigma))
-        new_cost = float(_tc(state.net_p, phi_new, state.method,
-                             nbrs=state.nbrs,
-                             engine_impl=state.engine_impl))
+        phi_new, fl_new, cost_new = state.step(state.net_p, phi, fl,
+                                               state.consts,
+                                               jnp.float32(sigma))
+        new_cost = float(cost_new)
         state.it += 1
         accepted, sigma, stop = accept_step(new_cost, costs[-1], sigma,
                                             state.scaling, state.variant)
@@ -253,9 +340,43 @@ def run_distributed_chunk(state: DistributedRunState,
                 state.stopped = True
                 break
         else:
-            phi = phi_new
+            phi, fl = phi_new, fl_new
             costs.append(new_cost)
-    state.phi, state.sigma, state.n_rejected = phi, sigma, n_rejected
+            if _tol_converged(costs, tol):
+                state.stopped = True
+                break
+    state.phi, state.flows = phi, fl
+    state.sigma, state.n_rejected = sigma, n_rejected
+    return state
+
+
+def _run_distributed_chunk_fused(state: DistributedRunState, fl,
+                                 n_iters: int, tol: float
+                                 ) -> DistributedRunState:
+    """Async-pipelined distributed chunk: one device sync per chunk
+    (see `sgp._run_chunk_fused` — same design, shard_mapped step)."""
+    adaptive = state.scaling == "adaptive" and state.variant == "sgp"
+    phi = state.phi
+    sigma = jnp.float32(state.sigma)
+    prev = jnp.float32(state.costs[-1])
+    n_costs = jnp.asarray(len(state.costs), jnp.int32)
+    n_rej = jnp.asarray(0, jnp.int32)
+    stopped = jnp.asarray(False)
+    tol32 = jnp.float32(tol)
+    cost_hist, take_hist, live_hist = [], [], []
+    for _ in range(n_iters):
+        phi_new, fl_new, cost_new = state.step(state.net_p, phi, fl,
+                                               state.consts, sigma)
+        (phi, fl, sigma, prev, n_costs, n_rej, stopped, _, take,
+         live) = _accept_update(phi_new, fl_new, cost_new, phi, fl,
+                                sigma, prev, n_costs, n_rej, stopped,
+                                None, None, tol32, adaptive=adaptive)
+        cost_hist.append(cost_new)
+        take_hist.append(take)
+        live_hist.append(live)
+    _fold_fused_histories(state, sigma, n_rej, stopped, cost_hist,
+                          take_hist, live_hist)
+    state.phi, state.flows = phi, fl
     return state
 
 
@@ -272,29 +393,34 @@ def run_distributed(net: CECNetwork, phi0, n_iters: int = 200,
                     mesh: Optional[Mesh] = None, variant: str = "sgp",
                     scaling: str = "adaptive", kappa: float = 0.0,
                     min_scale: float = 0.05, method: str = "dense",
-                    engine_impl: Optional[str] = None):
+                    tol: float = 0.0, engine_impl: Optional[str] = None,
+                    driver: Optional[str] = None):
     """Driver: distributed SGP with the same safeguard as `sgp.run`.
 
     method="sparse" runs the neighbor-list engine on every shard (the
     V ~ 10³ × S ~ 10⁴ regime: per-task edge arrays shard over devices,
-    the [V, Dmax] index tiles are replicated, one psum of F/G couples
-    the shards); φ is converted to the edge-slot `PhiSparse` layout at
-    the boundary and iterated natively, so the loop never materializes
-    [S, V, V+1].  Returns (phi_final [original S], history); the
-    returned φ matches the input layout (dense `Phi` in, dense back; a
-    `PhiSparse` φ⁰ is padded, iterated AND returned in slot layout, so
-    the huge-S regime never touches a dense φ at all).
-    Bitwise-equivalent to the single-device path up to reduction order
-    (validated in tests).  Resumable: `init_distributed_state` +
-    `run_distributed_chunk` walk the same trajectory in chunks (the
-    streaming replay engine interleaves churn events between them).
+    the [V, Dmax] index tiles are replicated, one psum of the edge-slot
+    F tile + G couples the shards); φ is converted to the edge-slot
+    `PhiSparse` layout at the boundary and iterated natively, so the
+    loop materializes neither [S, V, V+1] nor [V, V] arrays.  Returns
+    (phi_final [original S], history); the returned φ matches the input
+    layout (dense `Phi` in, dense back; a `PhiSparse` φ⁰ is padded,
+    iterated AND returned in slot layout, so the huge-S regime never
+    touches a dense φ at all).  Bitwise-equivalent to the single-device
+    path up to reduction order (validated in tests).  Resumable:
+    `init_distributed_state` + `run_distributed_chunk` walk the same
+    trajectory in chunks (the streaming replay engine interleaves churn
+    events between them).  driver="fused" (default) pipelines each
+    chunk with one host sync at the end; driver="host" is the bitwise
+    python-loop reference.  `tol` stops after an accepted step improves
+    by less than tol·cost (once >4 costs accumulated).
     """
     sparse_in = isinstance(phi0, PhiSparse)
     state = init_distributed_state(net, phi0, mesh=mesh, variant=variant,
                                    scaling=scaling, kappa=kappa,
                                    min_scale=min_scale, method=method,
                                    engine_impl=engine_impl)
-    state = run_distributed_chunk(state, n_iters)
+    state = run_distributed_chunk(state, n_iters, tol=tol, driver=driver)
     phi = state.phi
     if method == "sparse" and not sparse_in:
         state.phi = sparse_to_phi(phi, state.nbrs, net.V)  # back to dense

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from .costs import Cost
 from .network import (CECNetwork, Flows, Neighbors, Phi, PhiSparse,
                       _phi_edge_views, _solve_fp_broadcast, build_neighbors,
-                      gather_edges, solve_downstream_sparse)
+                      gather_edges, link_cost_sparse, mask_slots,
+                      solve_downstream_sparse)
 
 BIG = 1e12  # marginal cost assigned to non-edges (never selected)
 
@@ -64,16 +65,22 @@ def _solve_downstream(phi_nbr: jnp.ndarray, b: jnp.ndarray,
 def compute_marginals(net: CECNetwork, phi, fl: Flows,
                       method: str = "dense",
                       nbrs: Neighbors | None = None,
-                      engine_impl: str | None = None) -> Marginals:
+                      engine_impl: str | None = None,
+                      slot_F: bool = False) -> Marginals:
     """`phi` is a dense `Phi`, or (method="sparse" only) an edge-slot
-    `PhiSparse` consumed in place — no gather, no dense intermediate."""
+    `PhiSparse` consumed in place — no gather, no dense intermediate.
+
+    slot_F=True (sparse drivers) declares that `fl.F` is already the
+    [V, Dmax] edge-slot link flow (a driver `FlowsCarry`): D' is then
+    evaluated directly on the slots — bitwise the dense evaluation per
+    real slot, at ~Dmax/V of the work."""
     if isinstance(phi, PhiSparse) and method != "sparse":
         raise ValueError("PhiSparse requires method='sparse'")
     if method == "sparse":
         return _compute_marginals_sparse(
             net, phi, fl,
             nbrs if nbrs is not None else build_neighbors(net.adj),
-            engine_impl)
+            engine_impl, slot_F=slot_F)
     adjf = net.adj.astype(phi.data.dtype)
     Dp = jnp.where(net.adj, net.link_cost.d1(fl.F), 0.0)
     Cp = net.comp_cost.d1(fl.G)
@@ -102,9 +109,13 @@ def compute_marginals(net: CECNetwork, phi, fl: Flows,
 
 def _compute_marginals_sparse(net: CECNetwork, phi, fl: Flows,
                               nbrs: Neighbors,
-                              impl: str | None = None) -> Marginals:
+                              impl: str | None = None,
+                              slot_F: bool = False) -> Marginals:
     """Eq. 9-13 as out-edge message passing in [S, V, Dmax] layout."""
-    Dp_sp = gather_edges(net.link_cost.d1(fl.F), nbrs)    # [V, Dmax]
+    if slot_F:   # fl.F already lives on the slots; padding masked to 0
+        Dp_sp = mask_slots(link_cost_sparse(net, nbrs).d1(fl.F), nbrs)
+    else:
+        Dp_sp = gather_edges(net.link_cost.d1(fl.F), nbrs)  # [V, Dmax]
     Cp = net.comp_cost.d1(fl.G)
 
     phi_d_sp, phi_loc, phi_r_sp = _phi_edge_views(phi, nbrs)

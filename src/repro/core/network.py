@@ -396,6 +396,100 @@ class Flows:
     f_result: jnp.ndarray  # [S, V, V] | [S, V, Dmax] per-task result link flow
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FlowsCarry:
+    """The slice of `Flows` the NEXT driver iteration actually consumes.
+
+    The SGP drivers carry an iterate's flows between iterations so each
+    iterate's flow solve runs exactly once.  Marginals need the link
+    flows (→ D'/C'), the Eq. 16 scaling and the zero-traffic jump need
+    t_data/t_result — the per-task per-edge f_data/f_result arrays are
+    NOT consumed downstream, and keeping them out of the step outputs
+    lets XLA fuse them away instead of materializing ~2×[S, V, Dmax]
+    buffers every iteration.
+
+    Under the sparse driver `F` is the [V, Dmax] EDGE-SLOT total link
+    flow (aligned to `Neighbors.out_nbr`, padding exactly zero) — the
+    drivers never build the dense [V, V] link matrix at all; under the
+    dense/broadcast drivers it is the usual [V, V].  The methods are
+    static through the jitted steps, so the layout is unambiguous.
+    """
+    t_data: jnp.ndarray    # [S, V]
+    t_result: jnp.ndarray  # [S, V]
+    F: jnp.ndarray         # [V, Dmax] slots (sparse driver) | [V, V]
+    G: jnp.ndarray         # [V]
+
+
+def link_cost_sparse(net: "CECNetwork", nbrs: Neighbors) -> Cost:
+    """The link cost with its [V, V] parameters gathered onto edge
+    slots, so D(F)/D'(F)/D''(F) evaluate directly on a [V, Dmax]
+    slot-layout flow array (bitwise the dense evaluation per real slot;
+    padding slots produce garbage and must be masked by the caller)."""
+    return Cost(net.link_cost.family,
+                gather_edges(net.link_cost.params, nbrs))
+
+
+def cost_of_carry(net: "CECNetwork", carry: FlowsCarry,
+                  nbrs: Neighbors | None = None) -> jnp.ndarray:
+    """`cost_of_flows` for a driver `FlowsCarry`: slot-domain link sum
+    when `nbrs` is given (sparse driver — ~Dmax/V of the dense cost
+    evaluation), dense otherwise.  The slot and dense sums differ only
+    in reduction order (same per-edge values)."""
+    if nbrs is None:
+        link = jnp.where(net.adj, net.link_cost.value(carry.F), 0.0)
+    else:
+        link = mask_slots(link_cost_sparse(net, nbrs).value(carry.F), nbrs)
+    return jnp.sum(link) + jnp.sum(net.comp_cost.value(carry.G))
+
+
+def flows_carry_and_cost(net: "CECNetwork", phi, method: str = "dense",
+                         nbrs: Neighbors | None = None,
+                         engine_impl: str | None = None,
+                         psum_axis: str | None = None):
+    """(FlowsCarry, total cost) of one iterate — the drivers' flow
+    evaluation, run exactly once per iterate (when it is the candidate,
+    or at the boundary for φ⁰).
+
+    The sparse path stays entirely in edge-slot domain: the total link
+    flow is accumulated as [V, Dmax] slots and the cost evaluated on
+    them, so no [V, V] array is materialized anywhere in the sparse
+    iteration loop (completing what the PhiSparse layout did for φ).
+    `psum_axis` all-reduces F/G for the shard_mapped distributed step.
+    """
+    if method != "sparse":
+        fl = compute_flows(net, phi, method, nbrs=nbrs,
+                           engine_impl=engine_impl)
+        if psum_axis is not None:
+            fl = psum_flows(fl, psum_axis)
+        return flows_carry(fl), cost_of_flows(net, fl)
+    nbrs = nbrs if nbrs is not None else build_neighbors(net.adj)
+    phi_d_sp, phi_loc, phi_r_sp = _phi_edge_views(phi, nbrs)
+    t_data = _solve_traffic_sparse(phi_d_sp, net.r, nbrs, engine_impl)
+    g = t_data * phi_loc
+    t_result = _solve_traffic_sparse(phi_r_sp, net.a[:, None] * g, nbrs,
+                                     engine_impl)
+    f_data = t_data[..., None] * phi_d_sp         # [S, V, Dmax]
+    f_result = t_result[..., None] * phi_r_sp
+    F_sp = jnp.sum(f_data + f_result, axis=0)     # [V, Dmax] slots
+    G = jnp.sum(net.w * g, axis=0)
+    if psum_axis is not None:
+        F_sp = jax.lax.psum(F_sp, psum_axis)
+        G = jax.lax.psum(G, psum_axis)
+    carry = FlowsCarry(t_data, t_result, F_sp, G)
+    return carry, cost_of_carry(net, carry, nbrs)
+
+
+flows_carry_and_cost_jit = jax.jit(
+    flows_carry_and_cost,
+    static_argnames=("method", "engine_impl", "psum_axis"))
+
+
+def flows_carry(fl) -> "FlowsCarry":
+    """Project a full dense-F `Flows` onto the driver-carry slice."""
+    return FlowsCarry(fl.t_data, fl.t_result, fl.F, fl.G)
+
+
 # --------------------------------------------------------------------------
 def _solve_traffic(phi_nbr: jnp.ndarray, inject: jnp.ndarray,
                    method: str = "dense") -> jnp.ndarray:
@@ -492,11 +586,24 @@ def total_cost(net: CECNetwork, phi, method: str = "dense",
     return cost_of_flows(net, fl)
 
 
-# jitted variant for per-iteration cost evaluation in the drivers: at
+# jitted variant for one-off cost evaluations at the public boundary: at
 # V=1000 the eager path spends ~10x the jitted time on op dispatch
-# (one such call per accept/reject decision)
 total_cost_jit = jax.jit(total_cost,
                          static_argnames=("method", "engine_impl"))
+
+
+def psum_flows(fl: Flows, axis: str) -> Flows:
+    """All-reduce the cross-task couplings of a task-sharded `Flows`.
+
+    Total link flow F and workload G are the only quantities that mix
+    tasks (the paper's link-measurement phase); everything else is
+    task-local and stays per-shard.  One psum pair per call — this is
+    the single collective of the distributed SGP iteration.
+    """
+    return dataclasses.replace(fl, F=jax.lax.psum(fl.F, axis),
+                               G=jax.lax.psum(fl.G, axis))
+
+
 
 
 def cost_of_flows(net: CECNetwork, fl: Flows) -> jnp.ndarray:

@@ -142,15 +142,25 @@ class ReplayEngine:
     step (no retrace); only topology events rebuild it (their
     `Neighbors` tiles change).
 
+    loop_driver picks how each warm inter-event segment executes:
+    "fused" (the default, resolved by the chunk drivers) pipelines the
+    whole segment on device with ONE host sync at its end — the
+    streaming regime this engine exists for, where per-iteration
+    host round-trips would dominate at scale; "host" forces the
+    per-iteration python reference loop (bitwise-identical trajectory,
+    so replay results do not depend on the choice).
+
     run_opts are forwarded to every `run_chunk` call (variant, scaling,
-    proj_impl, ... — driver="distributed" instead bakes variant/scaling
-    in at init).
+    proj_impl, driver, ... — driver="distributed" instead bakes
+    variant/scaling in at init; a run_opts "driver" wins over
+    loop_driver for the "run" engine).
     """
 
     def __init__(self, net: CECNetwork, phi0: Optional[PhiSparse] = None,
                  driver: str = "run", engine_impl: Optional[str] = None,
                  min_scale: float = 0.05, mesh=None,
-                 run_opts: Optional[dict] = None):
+                 run_opts: Optional[dict] = None,
+                 loop_driver: Optional[str] = None):
         if driver not in ("run", "distributed"):
             raise ValueError(f"unknown replay driver {driver!r}")
         self.churn = ChurnState(net)
@@ -160,7 +170,10 @@ class ReplayEngine:
         self.engine_impl = engine_impl
         self.min_scale = min_scale
         self.mesh = mesh
+        self.loop_driver = loop_driver
         self.run_opts = dict(run_opts or {})
+        if loop_driver is not None and driver == "run":
+            self.run_opts.setdefault("driver", loop_driver)
         if engine_impl is not None:
             # thread the backend into every run_chunk call (the
             # distributed driver instead bakes it into its step)
@@ -220,7 +233,8 @@ class ReplayEngine:
         if self.driver == "run":
             run_chunk(self.net, self.state, n_iters, **self.run_opts)
         else:
-            dist.run_distributed_chunk(self.state, n_iters)
+            dist.run_distributed_chunk(self.state, n_iters,
+                                       driver=self.loop_driver)
         executed = self.state.it - it_before
         self.total_iters += executed
         new = list(self.state.costs[before:])

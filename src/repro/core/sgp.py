@@ -36,15 +36,23 @@ import numpy as np
 
 from .costs import Cost
 from .marginals import BIG, Marginals, compute_marginals
-from .network import (CECNetwork, Flows, Neighbors, Phi, PhiSparse,
-                      _phi_edge_views, build_neighbors, compute_flows,
-                      cost_of_flows, gather_edges, phi_to_sparse,
-                      scatter_edges, sparse_to_phi)
+from .network import (CECNetwork, Flows, FlowsCarry, Neighbors, Phi,
+                      PhiSparse, _phi_edge_views, build_neighbors,
+                      compute_flows, cost_of_flows, flows_carry_and_cost,
+                      flows_carry_and_cost_jit, gather_edges,
+                      link_cost_sparse, mask_slots, phi_to_sparse,
+                      psum_flows, scatter_edges, sparse_to_phi)
 from ..kernels import ops as kernel_ops
 
 SUPPORT_TOL = 1e-9   # φ below this is treated as zero support
 SNAP_TOL = 1e-12     # post-projection snap-to-zero
 TRAFFIC_EPS = 1e-9   # rows with traffic below this take the one-hot jump
+# the accept/reject safeguard's sigma decay factor, as an explicit f32
+# reciprocal: XLA strength-reduces division by a constant into a
+# reciprocal multiply inside jit (but NOT eagerly / in numpy), so a
+# literal `sigma / 1.5` cannot be bitwise-mirrored on the host — an
+# explicit multiply compiles to the same op everywhere
+SIGMA_DECAY = np.float32(1.0 / 1.5)
 
 
 @jax.tree_util.register_dataclass
@@ -135,7 +143,12 @@ def project_rows(phi_row: jnp.ndarray, delta: jnp.ndarray, M: jnp.ndarray,
             v_j(λ) = max(0, φ_j - (δ_j + λ) / (2 M_j)).
 
     All inputs are [..., K]; fully vectorized over leading dims.
-    This is the pure-jnp oracle for kernels/simplex_project.
+    This is the pure-jnp oracle for kernels/simplex_project; the Pallas
+    kernel solves the same dual with the original division-form
+    fixed-`n_iter` bisection, so the two agree to the bisection's
+    resolution (locked at 1e-4 in the kernel tests), not bitwise —
+    mirroring the hoisted form + early exit there is a TPU-validation
+    task for an accelerator session.
     """
     Msafe = jnp.where(permitted, jnp.maximum(M, 1e-12), 1.0)
     phi0 = jnp.where(permitted, phi_row, 0.0)
@@ -146,19 +159,41 @@ def project_rows(phi_row: jnp.ndarray, delta: jnp.ndarray, M: jnp.ndarray,
     lam_hi = jnp.max(jnp.where(permitted, -d + 2.0 * Msafe * phi0, -BIG),
                      axis=-1, keepdims=True)
 
-    def v_of(lam):
-        v = phi0 - (d + lam) / (2.0 * Msafe)
-        return jnp.where(permitted, jnp.maximum(v, 0.0), 0.0)
+    # Slope-intercept form of the dual residual: on the permitted set
+    # v_j(λ) = max(q_j - λ w_j, 0) with q = φ - d/(2M), w = 1/(2M);
+    # blocked coordinates contribute exactly 0 via (q, w) = (-BIG, 0).
+    # Hoisting the division out of the bisection makes each halving one
+    # multiply-subtract + reduce — this loop is the single hottest
+    # computation of the whole driver at V ~ 10³.
+    w = jnp.where(permitted, 1.0 / (2.0 * Msafe), 0.0)
+    q = jnp.where(permitted, phi0 - d / (2.0 * Msafe), -BIG)
 
-    def body(carry, _):
-        lo, hi = carry
+    def v_of(lam):
+        return jnp.maximum(q - lam * w, 0.0)
+
+    # Bisection with early exit: once every row's (lo, hi) bracket stops
+    # moving (in float32 that happens after ~30 of the 60 halvings — the
+    # midpoint rounds onto an endpoint), further iterations reproduce
+    # the SAME bracket, so exiting is bitwise identical to running the
+    # full `n_iter` at roughly half the memory traffic.  Not
+    # reverse-differentiable (while_loop); nothing differentiates
+    # through the projection.
+    def cond(carry):
+        k, _, _, changed = carry
+        return jnp.logical_and(k < n_iter, changed)
+
+    def body(carry):
+        k, lo, hi, _ = carry
         mid = 0.5 * (lo + hi)
         s = jnp.sum(v_of(mid), axis=-1, keepdims=True)
-        lo = jnp.where(s > 1.0, mid, lo)
-        hi = jnp.where(s > 1.0, hi, mid)
-        return (lo, hi), None
+        lo2 = jnp.where(s > 1.0, mid, lo)
+        hi2 = jnp.where(s > 1.0, hi, mid)
+        changed = jnp.any(lo2 != lo) | jnp.any(hi2 != hi)
+        return k + 1, lo2, hi2, changed
 
-    (lo, hi), _ = jax.lax.scan(body, (lam_lo, lam_hi), None, length=n_iter)
+    _, lo, hi, _ = jax.lax.while_loop(
+        cond, body,
+        (jnp.asarray(0, jnp.int32), lam_lo, lam_hi, jnp.asarray(True)))
     v = v_of(0.5 * (lo + hi))
     v = jnp.where(v > SNAP_TOL, v, 0.0)
     s = jnp.sum(v, axis=-1, keepdims=True)
@@ -243,6 +278,47 @@ def _max_path_len_sparse(sup: jnp.ndarray, nbrs: Neighbors,
         reduce="max", shift=1.0, max_rounds=nbrs.V, impl=impl)
 
 
+def _taint_pair_sparse(sup_a: jnp.ndarray, rho_a: jnp.ndarray,
+                       sup_b: jnp.ndarray, rho_b: jnp.ndarray,
+                       nbrs: Neighbors, impl: Optional[str] = None):
+    """Both taint recursions (data + result) in ONE batched launch.
+
+    The two `_taint_sparse` problems share the neighbor tiles, so they
+    stack along the task axis into a single `edge_rounds_stacked` call —
+    bitwise identical to the two unstacked solves (rounds past a
+    sub-problem's exact fixed point are no-ops; locked by
+    tests/test_fused_driver.py) at half the recursion launches.
+    """
+    # bfloat16 carries the {0, 1} encoding EXACTLY (products and maxes
+    # of 0/1 stay 0/1), and the boolean-or closure is the deepest
+    # memory-bound recursion of the step — half-width floats halve its
+    # traffic with bit-identical boolean results
+    dt = jnp.bfloat16
+
+    def has_improper(sup, rho):
+        improper = sup & (rho[:, nbrs.out_nbr] >= rho[:, :, None])
+        return jnp.any(improper, axis=-1)
+
+    t_a, t_b = kernel_ops.edge_rounds_stacked(
+        [(sup_a.astype(dt), has_improper(sup_a, rho_a).astype(dt)),
+         (sup_b.astype(dt), has_improper(sup_b, rho_b).astype(dt))],
+        nbrs.out_nbr, nbrs.out_mask, reduce="max", max_rounds=nbrs.V,
+        impl=impl)
+    return t_a > 0.5, t_b > 0.5
+
+
+def _max_path_len_pair_sparse(sup_a: jnp.ndarray, sup_b: jnp.ndarray,
+                              nbrs: Neighbors, impl: Optional[str] = None):
+    """Both longest-path recursions (result + data) in ONE batched
+    launch — the `_taint_pair_sparse` trick applied to
+    `_max_path_len_sparse` (same bitwise-equivalence argument)."""
+    h0 = jnp.zeros(sup_a.shape[:2], dtype=jnp.float32)
+    return kernel_ops.edge_rounds_stacked(
+        [(sup_a.astype(jnp.float32), h0), (sup_b.astype(jnp.float32), h0)],
+        nbrs.out_nbr, nbrs.out_mask, reduce="max", shift=1.0,
+        max_rounds=nbrs.V, impl=impl)
+
+
 def blocked_sets_sparse(net: CECNetwork, phi, mg: Marginals,
                         nbrs: Neighbors, engine_impl: Optional[str] = None):
     """`blocked_sets` over edge slots: permitted masks [S, V, Dmax(+1)].
@@ -253,8 +329,9 @@ def blocked_sets_sparse(net: CECNetwork, phi, mg: Marginals,
     sup_d = phi_d_sp > SUPPORT_TOL
     sup_r = phi_r_sp > SUPPORT_TOL
 
-    taint_d = _taint_sparse(sup_d, mg.rho_data, nbrs, engine_impl)
-    taint_r = _taint_sparse(sup_r, mg.rho_result, nbrs, engine_impl)
+    taint_d, taint_r = _taint_pair_sparse(sup_d, mg.rho_data,
+                                          sup_r, mg.rho_result,
+                                          nbrs, engine_impl)
 
     def permitted(sup, rho, taint):
         uphill = rho[:, nbrs.out_nbr] >= rho[:, :, None]
@@ -273,53 +350,31 @@ def blocked_sets_sparse(net: CECNetwork, phi, mg: Marginals,
 
 
 # ------------------------------------------------------------------ the step
-def _sgp_step_impl(net: CECNetwork, phi, consts: SGPConsts,
-                   variant: str = "sgp", beta: float = 1.0,
-                   mask_data: Optional[jnp.ndarray] = None,
-                   mask_result: Optional[jnp.ndarray] = None,
-                   allowed_data: Optional[jnp.ndarray] = None,
-                   allowed_result: Optional[jnp.ndarray] = None,
-                   method: str = "dense", use_blocking: bool = True,
-                   scaling: str = "adaptive",
-                   sigma: jnp.ndarray | float = 1.0,
-                   kappa: jnp.ndarray | float = 1.0,
-                   psum_axis: Optional[str] = None,
-                   proj_impl: Optional[str] = None,
-                   engine_impl: Optional[str] = None,
-                   nbrs: Optional[Neighbors] = None):
-    """One synchronized iteration of Algorithm 1 over every (node, task).
+def _sgp_propose_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
+                      variant: str = "sgp", beta: float = 1.0,
+                      mask_data: Optional[jnp.ndarray] = None,
+                      mask_result: Optional[jnp.ndarray] = None,
+                      allowed_data: Optional[jnp.ndarray] = None,
+                      allowed_result: Optional[jnp.ndarray] = None,
+                      method: str = "dense", use_blocking: bool = True,
+                      scaling: str = "adaptive",
+                      sigma: jnp.ndarray | float = 1.0,
+                      kappa: jnp.ndarray | float = 1.0,
+                      proj_impl: Optional[str] = None,
+                      engine_impl: Optional[str] = None,
+                      nbrs: Optional[Neighbors] = None,
+                      slot_F: bool = False):
+    """The projection half of one Algorithm-1 iteration: given the
+    CURRENT iterate φ and its (already measured, psum'ed if distributed)
+    flows `fl`, compute marginals, blocked sets, the Eq. 16 scaling and
+    the projected candidate iterate.  Returns (phi_new, marginals).
 
-    mask_* : [S, V] bool — rows that update this iteration (Theorem 2
-             asynchrony; default: all).
-    allowed_* : extra permission masks for restricted baselines
-             (SPOO/LCOR); ANDed into the blocked-set permission.
-             Always given in the dense [S, V, V+1] / [S, V, V] layout.
-    use_blocking=False skips the taint protocol — only valid when the
-             allowed masks themselves guarantee loop-freedom (SPOO's
-             fixed shortest-path tree).
-    scaling : "paper"  — Eq. 16 verbatim: curvature sup over the
-                          T0-sublevel set.  Guaranteed descent but
-                          extremely conservative when any link has small
-                          capacity (A ∝ (1+T0)³/cap²).
-              "adaptive" — same Eq. 16 structure, with curvature at the
-                          CURRENT flows times safety factor `sigma`; the
-                          driver enforces monotone descent by rejecting
-                          uphill steps and raising sigma (backtracking).
-    proj_impl : QP projection backend, see `_project` ("oracle" = the
-             in-module jnp path; default = kernels.ops dispatch).
-    engine_impl : sparse message-passing backend for every fixed-point
-             recursion (traffic, marginals, taint, path bounds), see
-             kernels.ops.edge_rounds — None = backend default (fused
-             Pallas kernel on TPU, jnp reference elsewhere).
-    nbrs   : precomputed `Neighbors`; required when method="sparse"
-             (the whole iteration then runs in [S, V, Dmax] edge-slot
-             layout).
-
-    φ layout: a dense `Phi` always works; with method="sparse" an
-    edge-slot `PhiSparse` is consumed AND produced natively — the step
-    then materializes no [S, V, V+1] array at all (the dense-Phi sparse
-    path instead gathers on entry and scatters back on exit, and is the
-    bitwise reference for the native layout).
+    Splitting the step here is what lets the drivers compute each
+    iterate's flows exactly once: `fl` is threaded through the driver
+    carry (host loop and fused scan alike), so the flow solve of a
+    candidate happens when it is PROPOSED and is simply reused when it
+    is accepted and stepped FROM.  See `_sgp_step_impl` for the
+    argument/layout contract (identical, minus `fl`).
     """
     sparse = method == "sparse"
     native = isinstance(phi, PhiSparse)
@@ -328,18 +383,8 @@ def _sgp_step_impl(net: CECNetwork, phi, consts: SGPConsts,
     if sparse and nbrs is None:
         raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
                          "precomputed outside jit")
-    fl = compute_flows(net, phi, method, nbrs=nbrs, engine_impl=engine_impl)
-    if psum_axis is not None:
-        # Distributed mode (shard_map over the task axis): per-task
-        # traffic is local; total link flow / workload — the only
-        # cross-task coupling — is one all-reduce, exactly the paper's
-        # link-measurement phase.
-        fl = dataclasses.replace(
-            fl,
-            F=jax.lax.psum(fl.F, psum_axis),
-            G=jax.lax.psum(fl.G, psum_axis))
     mg = compute_marginals(net, phi, fl, method, nbrs=nbrs,
-                           engine_impl=engine_impl)
+                           engine_impl=engine_impl, slot_F=slot_F)
 
     S, V = net.S, net.V
     is_dest = jnp.arange(V)[None] == net.dest[:, None]
@@ -381,38 +426,58 @@ def _sgp_step_impl(net: CECNetwork, phi, consts: SGPConsts,
         perm_r = perm_r & allowed_result
 
     if variant == "sgp":
-        # Eq. 16 scaling matrices.
-        h_r = (_max_path_len_sparse(sup_r, nbrs, engine_impl) if sparse
-               else _max_path_len(sup_r))                     # [S, V]
-        h_d = (_max_path_len_sparse(sup_d, nbrs, engine_impl) if sparse
-               else _max_path_len(sup_d))
-        n_r = jnp.sum(perm_r, axis=-1).astype(phi.result.dtype)
-        n_d = jnp.sum(perm_d, axis=-1).astype(phi.data.dtype)
-
         if scaling == "paper":
-            A_link, A_comp, A_max = consts.A_link, consts.A_comp, consts.A_max
+            A_comp, A_max = consts.A_comp, consts.A_max
+            A_link_e = (gather_edges(consts.A_link, nbrs)[None] if sparse
+                        else consts.A_link[None])          # [1, V, Dmax]
+        elif slot_F:
+            # carry F already on the slots: evaluate the curvature there
+            # (bitwise the dense evaluation per real slot, ~Dmax/V work)
+            A_link_e = (mask_slots(link_cost_sparse(net, nbrs).d2(fl.F),
+                                   nbrs) * sigma)[None]
+            A_comp = net.comp_cost.d2(fl.G) * sigma
+            A_max = jnp.maximum(jnp.max(A_link_e), jnp.max(A_comp))
         else:  # current-flow curvature, safeguarded by the driver
             A_link = jnp.where(net.adj, net.link_cost.d2(fl.F), 0.0) * sigma
             A_comp = net.comp_cost.d2(fl.G) * sigma
             A_max = jnp.maximum(jnp.max(A_link), jnp.max(A_comp))
+            A_link_e = (gather_edges(A_link, nbrs)[None] if sparse
+                        else A_link[None])                 # [1, V, Dmax]
 
-        if sparse:
-            A_link_e = gather_edges(A_link, nbrs)[None]       # [1, V, Dmax]
-            hj_r = h_r[:, nbrs.out_nbr]                       # h at edge head
-            hj_d = h_d[:, nbrs.out_nbr]
+        if isinstance(kappa, (int, float)) and float(kappa) == 0.0:
+            # The drivers' default (kappa=0, Gallager cross-terms off):
+            # every κ·n·h·A_max term is exactly 0 for the finite
+            # path/degree bounds, so Eq. 16 reduces to the raw
+            # link/compute curvature — skip the longest-path recursions
+            # and permitted-degree sums entirely (bitwise: A + 0·x == A).
+            diag_r = A_link_e
+            diag_d = jnp.concatenate(
+                [A_link_e, A_comp[None, :, None]], axis=-1)
         else:
-            A_link_e = A_link[None]
-            hj_r = h_r[:, None, :]
-            hj_d = h_d[:, None, :]
-
-        kap = jnp.asarray(kappa, dtype=phi.result.dtype)
-        diag_r = A_link_e + kap * n_r[..., None] * hj_r * A_max
+            # Eq. 16 scaling matrices (sparse: both longest-path
+            # recursions ride one stacked launch, bitwise = the
+            # unstacked pair).
+            if sparse:
+                h_r, h_d = _max_path_len_pair_sparse(sup_r, sup_d, nbrs,
+                                                     engine_impl)  # [S, V]
+                hj_r = h_r[:, nbrs.out_nbr]                # h at edge head
+                hj_d = h_d[:, nbrs.out_nbr]
+            else:
+                h_r = _max_path_len(sup_r)
+                h_d = _max_path_len(sup_d)
+                hj_r = h_r[:, None, :]
+                hj_d = h_d[:, None, :]
+            n_r = jnp.sum(perm_r, axis=-1).astype(phi.result.dtype)
+            n_d = jnp.sum(perm_d, axis=-1).astype(phi.data.dtype)
+            kap = jnp.asarray(kappa, dtype=phi.result.dtype)
+            diag_r = A_link_e + kap * n_r[..., None] * hj_r * A_max
+            diag_d_nbr = A_link_e + kap * n_d[..., None] * hj_d * A_max
+            a2 = (net.a ** 2)[:, None]
+            diag_d_loc = (A_comp[None]
+                          + kap * n_d * a2 * (1.0 + h_r) * A_max)
+            diag_d = jnp.concatenate([diag_d_nbr, diag_d_loc[..., None]],
+                                     axis=-1)
         Mr = 0.5 * fl.t_result[..., None] * diag_r
-        diag_d_nbr = A_link_e + kap * n_d[..., None] * hj_d * A_max
-        a2 = (net.a ** 2)[:, None]
-        diag_d_loc = (A_comp[None]
-                      + kap * n_d * a2 * (1.0 + h_r) * A_max)
-        diag_d = jnp.concatenate([diag_d_nbr, diag_d_loc[..., None]], axis=-1)
         Md = 0.5 * fl.t_data[..., None] * diag_d
         # floor for flat (linear) costs: behaves like conservative GP
         Mr = jnp.maximum(Mr, consts.min_scale * fl.t_result[..., None])
@@ -460,16 +525,136 @@ def _sgp_step_impl(net: CECNetwork, phi, consts: SGPConsts,
     if mask_result is not None:
         new_r = jnp.where(mask_result[..., None], new_r, old_r)
 
-    cost = cost_of_flows(net, fl)
     new_phi = (PhiSparse(new_d[..., :-1], new_d[..., -1:], new_r) if native
                else Phi(new_d, new_r))
-    return new_phi, {"cost": cost, "flows": fl, "marginals": mg}
+    return new_phi, mg
 
 
+def _sgp_step_impl(net: CECNetwork, phi, consts: SGPConsts,
+                   variant: str = "sgp", beta: float = 1.0,
+                   mask_data: Optional[jnp.ndarray] = None,
+                   mask_result: Optional[jnp.ndarray] = None,
+                   allowed_data: Optional[jnp.ndarray] = None,
+                   allowed_result: Optional[jnp.ndarray] = None,
+                   method: str = "dense", use_blocking: bool = True,
+                   scaling: str = "adaptive",
+                   sigma: jnp.ndarray | float = 1.0,
+                   kappa: float = 1.0,  # static in the jit (0.0 elides Eq.16 cross-terms)
+                   psum_axis: Optional[str] = None,
+                   proj_impl: Optional[str] = None,
+                   engine_impl: Optional[str] = None,
+                   nbrs: Optional[Neighbors] = None):
+    """One synchronized iteration of Algorithm 1 over every (node, task).
+
+    mask_* : [S, V] bool — rows that update this iteration (Theorem 2
+             asynchrony; default: all).
+    allowed_* : extra permission masks for restricted baselines
+             (SPOO/LCOR); ANDed into the blocked-set permission.
+             Always given in the dense [S, V, V+1] / [S, V, V] layout.
+    use_blocking=False skips the taint protocol — only valid when the
+             allowed masks themselves guarantee loop-freedom (SPOO's
+             fixed shortest-path tree).
+    scaling : "paper"  — Eq. 16 verbatim: curvature sup over the
+                          T0-sublevel set.  Guaranteed descent but
+                          extremely conservative when any link has small
+                          capacity (A ∝ (1+T0)³/cap²).
+              "adaptive" — same Eq. 16 structure, with curvature at the
+                          CURRENT flows times safety factor `sigma`; the
+                          driver enforces monotone descent by rejecting
+                          uphill steps and raising sigma (backtracking).
+    proj_impl : QP projection backend, see `_project` ("oracle" = the
+             in-module jnp path; default = kernels.ops dispatch).
+    engine_impl : sparse message-passing backend for every fixed-point
+             recursion (traffic, marginals, taint, path bounds), see
+             kernels.ops.edge_rounds — None = backend default (fused
+             Pallas kernel on TPU, jnp reference elsewhere).
+    nbrs   : precomputed `Neighbors`; required when method="sparse"
+             (the whole iteration then runs in [S, V, Dmax] edge-slot
+             layout).
+
+    φ layout: a dense `Phi` always works; with method="sparse" an
+    edge-slot `PhiSparse` is consumed AND produced natively — the step
+    then materializes no [S, V, V+1] array at all (the dense-Phi sparse
+    path instead gathers on entry and scatters back on exit, and is the
+    bitwise reference for the native layout).
+    """
+    fl = compute_flows(net, phi, method, nbrs=nbrs, engine_impl=engine_impl)
+    if psum_axis is not None:
+        # Distributed mode (shard_map over the task axis): per-task
+        # traffic is local; total link flow / workload — the only
+        # cross-task coupling — is one all-reduce, exactly the paper's
+        # link-measurement phase.
+        fl = psum_flows(fl, psum_axis)
+    new_phi, mg = _sgp_propose_impl(
+        net, phi, fl, consts, variant=variant, beta=beta,
+        mask_data=mask_data, mask_result=mask_result,
+        allowed_data=allowed_data, allowed_result=allowed_result,
+        method=method, use_blocking=use_blocking, scaling=scaling,
+        sigma=sigma, kappa=kappa, proj_impl=proj_impl,
+        engine_impl=engine_impl, nbrs=nbrs)
+    return new_phi, {"cost": cost_of_flows(net, fl), "flows": fl,
+                     "marginals": mg}
+
+
+# kappa is static so the default kappa=0.0 eliminates the path-length /
+# degree computations at trace time (see _sgp_propose_impl); it is a
+# config float, so the extra cache entries are bounded
 sgp_step = jax.jit(
     _sgp_step_impl,
     static_argnames=("variant", "method", "use_blocking", "scaling",
-                     "psum_axis", "proj_impl", "engine_impl"))
+                     "kappa", "psum_axis", "proj_impl", "engine_impl"))
+
+
+def _sgp_step_flows_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
+                         variant: str = "sgp", beta: float = 1.0,
+                         mask_data: Optional[jnp.ndarray] = None,
+                         mask_result: Optional[jnp.ndarray] = None,
+                         allowed_data: Optional[jnp.ndarray] = None,
+                         allowed_result: Optional[jnp.ndarray] = None,
+                         method: str = "dense", use_blocking: bool = True,
+                         scaling: str = "adaptive",
+                         sigma: jnp.ndarray | float = 1.0,
+                         kappa: float = 1.0,  # static in the jit (0.0 elides Eq.16 cross-terms)
+                         psum_axis: Optional[str] = None,
+                         proj_impl: Optional[str] = None,
+                         engine_impl: Optional[str] = None,
+                         nbrs: Optional[Neighbors] = None,
+                         with_aux: bool = False):
+    """One DRIVER iteration: propose the candidate from the current
+    iterate's carried flows, then measure the candidate (flows + cost).
+
+    This is the primitive both the python-loop reference and the fused
+    pipelined driver dispatch — the SAME jitted executable, which is
+    what makes their trajectories bitwise identical (XLA fusion is
+    graph-context-dependent, so re-tracing the same ops inside a larger
+    program does NOT reproduce the same floats; sharing the compiled
+    step does).  Per iteration it runs exactly one `compute_flows` — of
+    the candidate; the current iterate's flows arrive via `fl` (a
+    `FlowsCarry`, computed when IT was the candidate, or by the
+    boundary `network.flows_carry_and_cost` for φ⁰).  Returns
+    (phi_new, carry_new, cost_new[, marginals-of-`phi` if with_aux]).
+    """
+    phi_new, mg = _sgp_propose_impl(
+        net, phi, fl, consts, variant=variant, beta=beta,
+        mask_data=mask_data, mask_result=mask_result,
+        allowed_data=allowed_data, allowed_result=allowed_result,
+        method=method, use_blocking=use_blocking, scaling=scaling,
+        sigma=sigma, kappa=kappa, proj_impl=proj_impl,
+        engine_impl=engine_impl, nbrs=nbrs,
+        slot_F=(method == "sparse"))
+    carry_new, cost_new = flows_carry_and_cost(
+        net, phi_new, method, nbrs=nbrs, engine_impl=engine_impl,
+        psum_axis=psum_axis)
+    if with_aux:
+        return phi_new, carry_new, cost_new, mg
+    return phi_new, carry_new, cost_new
+
+
+sgp_step_flows = jax.jit(
+    _sgp_step_flows_impl,
+    static_argnames=("variant", "method", "use_blocking", "scaling",
+                     "kappa", "psum_axis", "proj_impl", "engine_impl",
+                     "with_aux"))
 
 
 # ------------------------------------------------------------------- driver
@@ -483,18 +668,40 @@ def accept_step(new_cost: float, prev_cost: float, sigma: float,
     auto-accept forever); under adaptive SGP an uphill step is rejected
     and sigma quadrupled (stopping past 1e12), accepted steps decay
     sigma toward 1.  Returns (accepted, sigma, stopped).
+
+    All arithmetic is float32: the fused on-device driver carries sigma
+    and the cost comparisons as f32 scalars, and the python-loop
+    reference must walk a bitwise-identical sigma trajectory through
+    any reject→accept sequence (f64 host math would diverge at the
+    first σ decay after a rejection; see SIGMA_DECAY for why the decay
+    is an explicit reciprocal multiply).
     """
-    accepted = np.isfinite(new_cost) and not (
+    new32, prev32 = np.float32(new_cost), np.float32(prev_cost)
+    accepted = bool(np.isfinite(new32)) and not (
         scaling == "adaptive" and variant == "sgp"
-        and new_cost > prev_cost * (1.0 + 1e-12))
+        and new32 > prev32 * np.float32(1.0 + 1e-12))
     stopped = False
+    sigma32 = np.float32(sigma)
     if not accepted:
-        sigma *= 4.0          # reject: step too aggressive
-        if sigma > 1e12:      # numerically stuck: stop
+        sigma32 = sigma32 * np.float32(4.0)  # reject: step too aggressive
+        if sigma32 > np.float32(1e12):       # numerically stuck: stop
             stopped = True
     else:
-        sigma = max(sigma / 1.5, 1.0)
-    return accepted, sigma, stopped
+        sigma32 = max(sigma32 * SIGMA_DECAY, np.float32(1.0))
+    return accepted, float(sigma32), stopped
+
+
+def _tol_converged(costs: list, tol: float) -> bool:
+    """The drivers' relative-improvement early exit, f32 like the fused
+    carry: |c[-2] - c[-1]| <= tol * max(c[-1], 1e-12), armed once more
+    than 4 costs accumulated.  Callers apply it only after an ACCEPTED
+    step — a rejected iteration leaves `costs` unchanged, so re-testing
+    the same stale pair could only stop the run spuriously."""
+    if not (tol > 0.0 and len(costs) > 4):
+        return False
+    c2, c1 = np.float32(costs[-2]), np.float32(costs[-1])
+    return bool(abs(c2 - c1)
+                <= np.float32(tol) * max(c1, np.float32(1e-12)))
 
 
 @dataclasses.dataclass
@@ -509,7 +716,10 @@ class RunState:
     tests/test_replay.py).  `phi` stays in whatever layout the loop
     iterates (edge-slot `PhiSparse` under method="sparse"); `it` is the
     GLOBAL iteration count (drives the paper-scaling refresh cadence
-    across chunks).
+    across chunks); `flows` is the device-resident `FlowsCarry` of
+    `phi` (every iterate's flows are computed exactly once — when it
+    was the candidate — and carried here across chunk boundaries; None
+    forces a re-evaluation at the next chunk's entry).
     """
     phi: object                      # Phi | PhiSparse iterate
     consts: SGPConsts
@@ -522,6 +732,7 @@ class RunState:
     it: int = 0
     rng: Optional[jax.Array] = None
     stopped: bool = False            # sigma blow-up / tol early exit
+    flows: Optional[FlowsCarry] = None   # flows of `phi` (device carry)
 
 
 def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
@@ -530,18 +741,83 @@ def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
                    nbrs: Optional[Neighbors] = None) -> RunState:
     """Set up the resumable driver state exactly as `run` would: build
     (or accept) the neighbor lists, convert a dense φ⁰ to slots under
-    method="sparse", evaluate T⁰ and the Eq. 16 constants."""
-    from .network import total_cost_jit as _tc
+    method="sparse", evaluate φ⁰'s flows + T⁰ (one solve, both carried)
+    and the Eq. 16 constants."""
     if method == "sparse":
         nbrs = build_neighbors(net.adj) if nbrs is None else nbrs
     else:
         nbrs = None
     if method == "sparse" and not isinstance(phi0, PhiSparse):
         phi0 = phi_to_sparse(phi0, nbrs)   # boundary: iterate in slots
-    T0 = _tc(net, phi0, method, nbrs=nbrs, engine_impl=engine_impl)
+    fl0, T0 = flows_carry_and_cost_jit(net, phi0, method, nbrs=nbrs,
+                                       engine_impl=engine_impl)
     consts = make_consts(net, T0, min_scale)
     return RunState(phi=phi0, consts=consts, nbrs=nbrs, method=method,
-                    costs=[float(T0)], min_scale=min_scale, rng=rng)
+                    costs=[float(T0)], min_scale=min_scale, rng=rng,
+                    flows=fl0)
+
+
+def _accept_update_impl(phi_new, fl_new, cost_new, phi, fl, sigma, prev,
+                        n_costs, n_rej, stopped, rng_new, rng, tol,
+                        adaptive: bool):
+    """`accept_step` + `_tol_converged` as branchless on-device selects
+    — one driver iteration's carry update for the fused pipeline.
+
+    Every operation is a single correctly-rounded f32 elementwise op
+    (no multiply-add chains XLA could contract differently), so the
+    carry walks EXACTLY the python reference's f32 trajectory; `stopped`
+    freezes the whole carry, which is the python loop's `break` (later
+    pipelined iterations become no-ops whose outputs are discarded).
+    Returns the updated carry plus (take, live): whether this iteration
+    accepted its candidate / was executed at all.
+    """
+    live = ~stopped
+    acc = jnp.isfinite(cost_new)
+    if adaptive:
+        acc = jnp.logical_and(acc, ~(cost_new > prev * (1.0 + 1e-12)))
+    take = jnp.logical_and(live, acc)
+
+    def sel(a, b):
+        return jnp.where(take, a, b)
+
+    phi = jax.tree.map(sel, phi_new, phi)
+    fl = jax.tree.map(sel, fl_new, fl)
+    sigma_next = jnp.where(acc, jnp.maximum(sigma * SIGMA_DECAY, 1.0),
+                           sigma * 4.0)
+    sigma = jnp.where(live, sigma_next, sigma)
+    stop_sigma = live & ~acc & (sigma > 1e12)
+    n_costs = n_costs + take.astype(jnp.int32)
+    tol_hit = jnp.logical_and(
+        tol > 0.0,
+        jnp.abs(prev - cost_new) <= tol * jnp.maximum(cost_new, 1e-12))
+    stop_tol = take & (n_costs > 4) & tol_hit
+    prev = jnp.where(take, cost_new, prev)
+    n_rej = n_rej + (live & ~acc).astype(jnp.int32)
+    if rng_new is not None:
+        rng = jnp.where(live, rng_new, rng)
+    stopped = stopped | stop_sigma | stop_tol
+    return phi, fl, sigma, prev, n_costs, n_rej, stopped, rng, take, live
+
+
+_accept_update = jax.jit(_accept_update_impl, static_argnames=("adaptive",))
+
+# the paper-scaling consts refresh must be the SAME executable in both
+# drivers (eager vs jitted compilation of the d2_sup chains need not
+# round identically), so both call this
+_make_consts_jit = jax.jit(make_consts)
+
+
+def _entry_flows(net: CECNetwork, state: RunState,
+                 engine_impl: Optional[str]):
+    """The chunk-entry flows carry: reuse the state's device-resident
+    `FlowsCarry` of the current iterate, re-evaluating only if a caller
+    dropped it (e.g. after mutating `state.phi` by hand)."""
+    if state.flows is not None:
+        return state.flows
+    fl, _ = flows_carry_and_cost_jit(net, state.phi, state.method,
+                                     nbrs=state.nbrs,
+                                     engine_impl=engine_impl)
+    return fl
 
 
 def run_chunk(net: CECNetwork, state: RunState, n_iters: int,
@@ -551,7 +827,8 @@ def run_chunk(net: CECNetwork, state: RunState, n_iters: int,
               tol: float = 0.0, callback=None, use_blocking: bool = True,
               refresh_every: int = 20, scaling: str = "adaptive",
               kappa: float = 0.0, proj_impl: Optional[str] = None,
-              engine_impl: Optional[str] = None) -> RunState:
+              engine_impl: Optional[str] = None,
+              driver: Optional[str] = None) -> RunState:
     """Advance the driver `n_iters` iterations, updating `state` in
     place (and returning it).  This IS `run`'s loop body — `run` is
     init_run_state + one run_chunk — so interleaving chunks with events
@@ -559,12 +836,42 @@ def run_chunk(net: CECNetwork, state: RunState, n_iters: int,
     (tol early exit, sigma blow-up) stays stopped: further chunks are
     no-ops, exactly as the uninterrupted loop would not have continued.
     The paper-scaling consts refresh uses the `min_scale` the state was
-    initialized with."""
-    from .network import total_cost_jit as _tc
-    if state.stopped:
+    initialized with.
+
+    driver : "fused" runs the whole chunk as an async on-device
+        pipeline (`_run_chunk_fused`) with ZERO per-iteration host
+        syncs and a single `device_get` at the end; "host" is the
+        per-iteration python loop, the bitwise reference oracle
+        (identical `costs`/sigma/rng trajectory: both drivers dispatch
+        the SAME compiled `sgp_step_flows` executable, and the fused
+        accept/select kernel mirrors `accept_step`'s f32 arithmetic
+        op-for-op).  None (default) picks "fused" unless a `callback`
+        needs the host loop's per-iteration hook.
+
+    The tol early-exit fires only after an ACCEPTED step (both
+    drivers): a rejected iteration leaves `costs` unchanged, and
+    re-testing the stale pair — as the driver did before the fused
+    rewrite — could stop a resumed chunk before it accepted anything.
+    """
+    if driver is None:
+        driver = "host" if callback is not None else "fused"
+    if driver not in ("host", "fused"):
+        raise ValueError(f"unknown driver {driver!r}")
+    if driver == "fused" and callback is not None:
+        raise ValueError("driver='fused' runs the whole chunk on device; "
+                         "per-iteration callbacks need driver='host'")
+    if state.stopped or n_iters <= 0:
         return state
     if scaling == "paper":
         kappa = 1.0  # Eq. 16 verbatim
+    fl = _entry_flows(net, state, engine_impl)
+    if driver == "fused":
+        return _run_chunk_fused(
+            net, state, fl, n_iters, variant=variant, beta=beta,
+            allowed_data=allowed_data, allowed_result=allowed_result,
+            async_frac=async_frac, tol=tol, use_blocking=use_blocking,
+            refresh_every=refresh_every, scaling=scaling, kappa=kappa,
+            proj_impl=proj_impl, engine_impl=engine_impl)
     min_scale = state.min_scale
     phi, consts, nbrs = state.phi, state.consts, state.nbrs
     method, costs = state.method, state.costs
@@ -574,41 +881,137 @@ def run_chunk(net: CECNetwork, state: RunState, n_iters: int,
         done = it + 1
         if (scaling == "paper" and refresh_every and it > 0
                 and it % refresh_every == 0):
-            consts = make_consts(net, jnp.asarray(costs[-1]), min_scale)
+            consts = _make_consts_jit(net, jnp.float32(costs[-1]),
+                                      min_scale)
         mask_d = mask_r = None
         if async_frac > 0.0 and rng is not None:
             rng, k1, k2 = jax.random.split(rng, 3)
             mask_d = jax.random.bernoulli(k1, 1.0 - async_frac, (net.S, net.V))
             mask_r = jax.random.bernoulli(k2, 1.0 - async_frac, (net.S, net.V))
-        phi_new, aux = sgp_step(net, phi, consts, variant=variant, beta=beta,
-                                mask_data=mask_d, mask_result=mask_r,
-                                allowed_data=allowed_data,
-                                allowed_result=allowed_result, method=method,
-                                use_blocking=use_blocking, scaling=scaling,
-                                sigma=sigma, kappa=kappa,
-                                proj_impl=proj_impl, engine_impl=engine_impl,
-                                nbrs=nbrs)
-        new_cost = float(_tc(net, phi_new, method, nbrs=nbrs,
-                             engine_impl=engine_impl))
+        out = sgp_step_flows(
+            net, phi, fl, consts, variant=variant, beta=beta,
+            mask_data=mask_d, mask_result=mask_r,
+            allowed_data=allowed_data, allowed_result=allowed_result,
+            method=method, use_blocking=use_blocking, scaling=scaling,
+            sigma=jnp.float32(sigma), kappa=kappa, proj_impl=proj_impl,
+            engine_impl=engine_impl, nbrs=nbrs,
+            with_aux=callback is not None)
+        phi_new, fl_new, cost_new = out[:3]
+        new_cost = float(cost_new)   # the host driver's per-iteration sync
         accepted, sigma, stop = accept_step(new_cost, costs[-1], sigma,
                                             scaling, variant)
+        if callback is not None:
+            # aux of the iterate the step started FROM, as sgp_step
+            # would report it (its cost IS the last accepted cost;
+            # "flows" is the driver's FlowsCarry slice)
+            aux = {"cost": jnp.float32(costs[-1]), "flows": fl,
+                   "marginals": out[3]}
         if not accepted:
             n_rejected += 1
             if stop:
                 state.stopped = True
                 break
         else:
-            phi = phi_new
+            phi, fl = phi_new, fl_new
             costs.append(new_cost)
         if callback is not None:
             callback(it, phi, aux, accepted)
-        if tol > 0.0 and len(costs) > 4:
-            if abs(costs[-2] - costs[-1]) <= tol * max(costs[-1], 1e-12):
-                state.stopped = True
-                break
-    state.phi, state.consts = phi, consts
+        if accepted and _tol_converged(costs, tol):
+            state.stopped = True
+            break
+    state.phi, state.consts, state.flows = phi, consts, fl
     state.sigma, state.n_rejected, state.rng = sigma, n_rejected, rng
     state.it = done
+    return state
+
+
+def _fold_fused_histories(state, sigma, n_rej, stopped, cost_hist,
+                          take_hist, live_hist) -> None:
+    """The fused chunk's single device→host sync + bookkeeping
+    writeback, shared by both drivers (`_run_chunk_fused`,
+    `distributed._run_distributed_chunk_fused`) so the
+    accept_step-mirroring accounting — which executed-and-accepted
+    iterations append to `costs`, how `it` advances, when `stopped`
+    latches — stays single-sourced."""
+    sigma, n_rej, stopped, cost_hist, take_hist, live_hist = \
+        jax.device_get((sigma, n_rej, stopped, cost_hist, take_hist,
+                        live_hist))
+    for c, t, l in zip(cost_hist, take_hist, live_hist):
+        if l and t:
+            state.costs.append(float(c))
+    state.sigma = float(sigma)
+    state.n_rejected += int(n_rej)
+    state.it += int(np.sum(live_hist))
+    state.stopped = bool(stopped)
+
+
+def _run_chunk_fused(net: CECNetwork, state: RunState, fl, n_iters: int,
+                     variant: str, beta: float, allowed_data,
+                     allowed_result, async_frac: float, tol: float,
+                     use_blocking: bool, refresh_every: int, scaling: str,
+                     kappa: float, proj_impl: Optional[str],
+                     engine_impl: Optional[str]) -> RunState:
+    """The whole accept/reject loop with ZERO host syncs inside: an
+    async pipeline of the SAME compiled step the python reference runs.
+
+    Each iteration dispatches (asynchronously — python never blocks on
+    a device value) the shared `sgp_step_flows` executable plus the tiny
+    `_accept_update` select kernel that applies accept/reject, the
+    sigma safeguard and the accepted-only tol exit on device; the
+    per-iteration candidate costs and accepted/executed flags accumulate
+    as device scalars and come back in ONE `device_get` after the last
+    dispatch — the chunk's single device→host sync.  Because the step
+    executable is literally the host loop's jit-cache entry and the
+    select arithmetic mirrors `accept_step`'s f32 ops, the resulting
+    `costs`/sigma/rng/φ trajectory is bitwise identical to the python
+    loop (locked by tests/test_fused_driver.py).  A mid-chunk stop
+    (sigma blow-up / tol) freezes the carry on device; the remaining
+    pipelined iterations are discarded no-ops, so prefer right-sizing
+    chunks when stops are expected.
+    """
+    adaptive = scaling == "adaptive" and variant == "sgp"
+    refresh = scaling == "paper" and refresh_every
+    use_rng = async_frac > 0.0 and state.rng is not None
+    phi, consts, nbrs = state.phi, state.consts, state.nbrs
+    rng = state.rng
+    sigma = jnp.float32(state.sigma)
+    prev = jnp.float32(state.costs[-1])
+    n_costs = jnp.asarray(len(state.costs), jnp.int32)
+    n_rej = jnp.asarray(0, jnp.int32)
+    stopped = jnp.asarray(False)
+    tol32 = jnp.float32(tol)
+    cost_hist, take_hist, live_hist = [], [], []
+    for it in range(state.it, state.it + n_iters):
+        if refresh and it > 0 and it % refresh_every == 0:
+            fresh = _make_consts_jit(net, prev, state.min_scale)
+            consts = jax.tree.map(
+                lambda old, new: jnp.where(stopped, old, new), consts, fresh)
+        mask_d = mask_r = rng_new = None
+        if use_rng:
+            rng_new, k1, k2 = jax.random.split(rng, 3)
+            mask_d = jax.random.bernoulli(k1, 1.0 - async_frac,
+                                          (net.S, net.V))
+            mask_r = jax.random.bernoulli(k2, 1.0 - async_frac,
+                                          (net.S, net.V))
+        phi_new, fl_new, cost_new = sgp_step_flows(
+            net, phi, fl, consts, variant=variant, beta=beta,
+            mask_data=mask_d, mask_result=mask_r,
+            allowed_data=allowed_data, allowed_result=allowed_result,
+            method=state.method, use_blocking=use_blocking,
+            scaling=scaling, sigma=sigma, kappa=kappa,
+            proj_impl=proj_impl, engine_impl=engine_impl, nbrs=nbrs)
+        (phi, fl, sigma, prev, n_costs, n_rej, stopped, rng, take,
+         live) = _accept_update(phi_new, fl_new, cost_new, phi, fl,
+                                sigma, prev, n_costs, n_rej, stopped,
+                                rng_new, rng, tol32, adaptive=adaptive)
+        cost_hist.append(cost_new)
+        take_hist.append(take)
+        live_hist.append(live)
+    _fold_fused_histories(state, sigma, n_rej, stopped, cost_hist,
+                          take_hist, live_hist)
+    state.phi, state.flows, state.consts = phi, fl, consts
+    if use_rng:
+        state.rng = rng
     return state
 
 
@@ -620,8 +1023,16 @@ def run(net: CECNetwork, phi0, n_iters: int = 200,
         tol: float = 0.0, callback=None, use_blocking: bool = True,
         refresh_every: int = 20, scaling: str = "adaptive",
         kappa: float = 0.0, proj_impl: Optional[str] = None,
-        engine_impl: Optional[str] = None):
-    """Python-loop driver around the jitted step.
+        engine_impl: Optional[str] = None,
+        driver: Optional[str] = None):
+    """Driver around the jitted step.
+
+    driver="fused" (the default when no callback is given) runs each
+    chunk of iterations — accept/reject, sigma safeguard, tol exit and
+    all — as an async on-device pipeline with a single host sync at the
+    end; driver="host" is the per-iteration python loop, kept as the
+    bitwise reference oracle (identical cost/sigma/rng trajectories on
+    CPU).  See `run_chunk`.
 
     method="sparse" precomputes the neighbor lists once (numpy, outside
     jit), converts φ⁰ to the edge-slot `PhiSparse` layout at the
@@ -637,7 +1048,10 @@ def run(net: CECNetwork, phi0, n_iters: int = 200,
     where `phi` is the iterate AFTER the accept/reject decision (the new
     iterate on accepted steps, the reverted one otherwise), `accepted`
     says which happened, and `aux` (cost/flows/marginals) describes the
-    iterate the step started FROM.  Under method="sparse" the callback
+    iterate the step started FROM — `aux["flows"]` is the driver's
+    `FlowsCarry` slice (t_data/t_result/F/G; the per-task f_data /
+    f_result link flows are no longer materialized per iteration —
+    recompute via `compute_flows` if a callback needs them).  Under method="sparse" the callback
     sees the edge-slot `PhiSparse` iterate (convert with
     `sparse_to_phi` if dense coordinates are needed).
 
@@ -672,7 +1086,7 @@ def run(net: CECNetwork, phi0, n_iters: int = 200,
                       async_frac=async_frac, tol=tol, callback=callback,
                       use_blocking=use_blocking, refresh_every=refresh_every,
                       scaling=scaling, kappa=kappa, proj_impl=proj_impl,
-                      engine_impl=engine_impl)
+                      engine_impl=engine_impl, driver=driver)
     phi = state.phi
     if method == "sparse" and dense_in:
         phi = sparse_to_phi(phi, state.nbrs, net.V)  # boundary: back to dense

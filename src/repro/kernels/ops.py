@@ -11,6 +11,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref as _ref
 from .decode_attention import decode_attention as _decode_pallas
@@ -102,6 +103,30 @@ def edge_rounds(w_sp, inject, nbr, mask, reduce: str = "sum",
                           shift=shift, max_rounds=max_rounds,
                           interpret=(mode == "pallas_interpret"),
                           return_rounds=return_rounds, **kw)
+
+
+def edge_rounds_stacked(problems, nbr, mask, reduce: str = "sum",
+                        shift: float = 0.0, max_rounds: Optional[int] = None,
+                        impl: Optional[str] = None):
+    """Several independent `edge_rounds` fixed points sharing one
+    neighbor tiling, solved in ONE launch.
+
+    `problems` is a sequence of `(w_sp, inject)` pairs (each shaped like
+    a single `edge_rounds` problem over the same `nbr`/`mask` tiles);
+    they are stacked along the leading batch (task) axis, iterated
+    together, and split back.  Because the early-exit fixed point is
+    EXACT (rounds past a sub-problem's own fixed point reproduce it
+    bitwise — `step(x) == x` there), the stacked solve is bitwise
+    identical to dispatching the pairs one by one while paying 1/len
+    of the launches: this is how the SGP step batches its data+result
+    taint and path-length recursions (core.sgp).
+    """
+    w = jnp.concatenate([w for w, _ in problems], axis=0)
+    b = jnp.concatenate([inj for _, inj in problems], axis=0)
+    out = edge_rounds(w, b, nbr, mask, reduce=reduce, shift=shift,
+                      max_rounds=max_rounds, impl=impl)
+    splits = np.cumsum([w.shape[0] for w, _ in problems])[:-1]
+    return jnp.split(out, splits, axis=0)
 
 
 def simplex_project(phi, delta, M, permitted, impl: Optional[str] = None,

@@ -10,6 +10,14 @@ tiled into VMEM, the TPU-native adaptation.
 Grid (num_row_blocks,): each step loads a [br, K] row tile and runs the
 fixed 60-iteration bisection entirely in registers/VMEM.  K is padded to
 the 128-lane boundary by ops.py.
+
+NOTE: the jnp oracle (core.sgp.project_rows) now solves the same dual
+in hoisted slope-intercept form with a bracket-fixed-point early exit;
+this kernel keeps the original division-form fixed-round loop, so the
+two agree to the bisection's resolution (kernel tests lock 1e-4), not
+bitwise.  Porting the hoisted form + early exit here is an
+accelerator-session task — it changes TPU-resident math that interpret
+mode cannot performance-validate.
 """
 from __future__ import annotations
 

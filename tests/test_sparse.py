@@ -173,8 +173,13 @@ def test_distributed_sparse_step_matches_single_device(name):
     """make_distributed_step(method="sparse", nbrs=...) shard_maps the
     neighbor-list engine over the task axis (replicated index tiles,
     one psum of F/G) in the edge-slot PhiSparse layout: one step matches
-    the single-device native step bitwise up to psum reduction order
-    (result rows exactly, data rows to one float32 ulp)."""
+    the single-device native step up to psum reduction order and
+    compilation rounding (the shard_mapped step is jitted while the
+    reference here runs eagerly; XLA may contract the projection's
+    multiply-subtract into an FMA only in the former, so rows agree to
+    float32 ulps, not bitwise — the DRIVER-level bitwise locks live in
+    tests/test_fused_driver.py, where both sides share one compiled
+    executable)."""
     from repro.core.distributed import (make_distributed_step, pad_tasks,
                                         task_mesh)
     net, phi, nbrs = _setup(name)
@@ -190,8 +195,8 @@ def test_distributed_sparse_step_matches_single_device(name):
     phi_s, aux = _sgp_step_impl(net, core.phi_to_sparse(phi, nbrs), consts,
                                 method="sparse", nbrs=nbrs, kappa=0.0,
                                 sigma=jnp.asarray(1.0))
-    np.testing.assert_array_equal(np.asarray(phi_dist.result[:S]),
-                                  np.asarray(phi_s.result))
+    np.testing.assert_allclose(np.asarray(phi_dist.result[:S]),
+                               np.asarray(phi_s.result), atol=1e-6)
     np.testing.assert_allclose(np.asarray(phi_dist.data[:S]),
                                np.asarray(phi_s.data), atol=1e-6)
     np.testing.assert_allclose(np.asarray(phi_dist.local[:S]),
