@@ -8,8 +8,10 @@ committed one and fail on sparse per-step slowdowns.
 Rows are keyed by (name, engine_impl).  Only the sparse scale-sweep
 timing rows (``scale_flows_sparse*``, ``scale_step_sparse*``,
 ``scale_run_sparse*``, ``scale_fusedrun_V*`` — the fused pipelined
-driver, the hot-loop row this PR's throughput target lives on —
-``scale_rounds_*``) and the streaming churn replay rows (``replay_*``: per-iteration/refeasibilize wall-clock and
+driver — ``scale_rounds_*``, plus the degree-bucketed engine rows
+``scale_bucketed_*`` and the ``scale_wasted_lanes_*`` lane accounting,
+the V = 10⁴ scaling target this PR's throughput lives on) and the
+streaming churn replay rows (``replay_*``: per-iteration/refeasibilize wall-clock and
 the warm iterations-to-target; the cold counts are ungated context —
 they share their target with the warm run, so warm improvements move
 them) gate the exit status: a
@@ -38,12 +40,17 @@ import sys
 # regression even if each iteration got no slower)
 GATED_PREFIXES = ("scale_flows_sparse", "scale_step_sparse",
                   "scale_run_sparse", "scale_fusedrun_V", "scale_rounds_",
+                  "scale_bucketed_", "scale_wasted_lanes_",
                   "replay_")
 # ...except the cold-restart iteration counts: cold shares its
 # iterations-to-target TARGET with the warm run (min of the two finals),
 # so a warm-start IMPROVEMENT inflates the cold count — it is context
-# for the warm row, not a perf promise of its own
-UNGATED_PREFIXES = ("replay_cold_iters_",)
+# for the warm row, not a perf promise of its own.  The bucketed
+# speedup RATIO is excluded for the same inverted-semantics reason as
+# scale_fusedrun_speedup_*: a higher value is an improvement, and a
+# padded-engine speedup would read as a "regression" — the bucketed
+# flows/step TIMING rows carry the actual promise
+UNGATED_PREFIXES = ("replay_cold_iters_", "scale_bucketed_speedup_")
 
 # gated row families: a fresh report missing an ENTIRE family the
 # committed baseline has means that sweep never ran — overwriting the

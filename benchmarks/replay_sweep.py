@@ -54,16 +54,23 @@ from repro import core
 from .common import emit, time_call
 
 NAMES = ("sw_queue", "sw_1000")          # --full adds grid_1024
+# --topo ba replays the power-law churn row with the degree-bucketed
+# engine (bucket tiles rebuilt beside the neighbor lists on every
+# topology event); ba_10000 is deliberately absent — a multi-segment
+# replay at V = 10⁴ is tens of minutes of single-core wall-clock,
+# benchmarked via the scale sweep's one-call rows instead
+NAMES_BA = ("ba_1000",)
 N_TAIL = 6
 
 
-def _bench_replay(name: str, tail_iters: int = N_TAIL):
+def _bench_replay(name: str, tail_iters: int = N_TAIL,
+                  bucketed: bool = False):
     net = core.make_scenario(core.TABLE_II[name])
     sched = core.churn_schedule(f"{name}_churn", net)
     # the host segment driver keeps the committed replay_* rows
     # measuring what they always measured; the fused driver is timed
     # separately below
-    eng = core.ReplayEngine(net, loop_driver="host")
+    eng = core.ReplayEngine(net, loop_driver="host", bucketed=bucketed)
     t0 = time.perf_counter()
     hist = eng.play(sched, tail_iters=tail_iters, cold_baseline=True)
     wall = (time.perf_counter() - t0) * 1e6
@@ -114,7 +121,7 @@ def _bench_replay(name: str, tail_iters: int = N_TAIL):
 
     # the fused segment driver: same schedule, bitwise-identical
     # trajectory, one host sync per inter-event segment
-    eng_f = core.ReplayEngine(net, loop_driver="fused")
+    eng_f = core.ReplayEngine(net, loop_driver="fused", bucketed=bucketed)
     t0 = time.perf_counter()
     eng_f.play(sched, tail_iters=tail_iters)
     wall_f = (time.perf_counter() - t0) * 1e6
@@ -128,10 +135,14 @@ def _bench_replay(name: str, tail_iters: int = N_TAIL):
              f"V={net.V};seg=8;wall_total_us={wall_f:.0f}")
 
 
-def run(full: bool = False, names=None):
-    names = names or (NAMES + ("grid_1024",) if full else NAMES)
+def run(full: bool = False, names=None, topo: str = "sw"):
+    if names is None:
+        if topo == "ba":
+            names = NAMES_BA
+        else:
+            names = NAMES + ("grid_1024",) if full else NAMES
     for name in names:
-        _bench_replay(name)
+        _bench_replay(name, bucketed=(topo == "ba"))
 
 
 if __name__ == "__main__":
@@ -141,7 +152,12 @@ if __name__ == "__main__":
                     help="also replay the grid_1024 churn schedule")
     ap.add_argument("--names", default=None,
                     help="comma-separated TABLE_II scenario names")
+    ap.add_argument("--topo", default="sw", choices=("sw", "ba"),
+                    help="scenario family: small-world (sw, the "
+                         "committed rows) or power-law ba_1000 churn "
+                         "through the degree-bucketed engine")
     a = ap.parse_args()
     print("name,us_per_call,derived")
     run(full=a.full,
-        names=tuple(a.names.split(",")) if a.names else None)
+        names=tuple(a.names.split(",")) if a.names else None,
+        topo=a.topo)

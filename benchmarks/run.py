@@ -35,7 +35,12 @@ def main(argv=None) -> int:
     ap.add_argument("--sizes", default=None,
                     help="comma-separated V list for the scale sweep "
                          "(e.g. 20,100 — the quick CI subset); default "
-                         "= the full ladder")
+                         "= the full ladder (per topology)")
+    ap.add_argument("--topo", default="sw",
+                    help="comma-separated scale-sweep scenario families "
+                         "(sw,ba): small-world and/or power-law "
+                         "Barabási–Albert; ba rows carry a _ba suffix "
+                         "and default to the BA ladder up to V=10⁴")
     ap.add_argument("--report", default="dryrun_report.json")
     ap.add_argument("--json", default="BENCH_report.json",
                     help="write every emitted row to this JSON file "
@@ -85,8 +90,10 @@ def main(argv=None) -> int:
                 # trajectory tracks); only the dense/broadcast engines
                 # stay capped at DENSE_V_LIMIT unless --full
                 sizes = (tuple(int(v) for v in args.sizes.split(","))
-                         if args.sizes else scale_sweep.SIZES)
-                scale_sweep.run(full=args.full, sizes=sizes)
+                         if args.sizes else None)
+                for topo in args.topo.split(","):
+                    scale_sweep.run(full=args.full, sizes=sizes,
+                                    topo=topo)
             elif name == "replay":
                 from . import replay_sweep
                 replay_sweep.run(full=args.full)

@@ -32,6 +32,20 @@ one boundary conversion pair across the whole run — `core.run`
 converts dense φ⁰ once and iterates natively either way — so expect
 the layout win in the step rows, not the run rows.
 
+``scale_bucketed_flows/step_V<V>`` rows time the degree-bucketed edge
+tiles (network.build_buckets: per-bucket [Vb, Db] tiles, ΣVb·Db ≈ |E|
+lanes instead of the padded V·Dmax) on the native layout;
+``scale_bucketed_speedup_V<V>`` is the padded/bucketed per-step ratio
+and ``scale_wasted_lanes_V<V>`` the padded−bucketed lane count the
+tiles reclaim (padded/bucketed/ratio in the derived column).
+
+``--topo ba`` switches the scenario family to power-law
+Barabási–Albert graphs (hub degree O(√V) — the padded tile's worst
+case) and suffixes every row name with ``_ba``; sizes then default to
+``BA_SIZES`` up to the V = 10⁴ scaling target, where only the native +
+bucketed rows run (the dense φ⁰ and the driver-run rows are skipped
+above ``BA_RUN_LIMIT``).
+
 The dense and broadcast engines are skipped above ``DENSE_V_LIMIT`` by
 default — measured on CPU at V=500 the dense step takes 22.6 s vs 86 ms
 sparse (262×), so timing them at every size is the slow way to learn
@@ -50,13 +64,22 @@ from repro.kernels import ops as kernel_ops
 from .common import emit, time_call
 
 SIZES = (20, 100, 500, 1000)
+BA_SIZES = (20, 100, 1000, 10000)
 N_ITERS = 10
+# BA driver-run rows stop here: a 10-iteration host-loop run at
+# V = 10⁴ on one CPU core is minutes of wall-clock for one row
+BA_RUN_LIMIT = 1000
 
 
-def _scenario(V: int) -> core.CECNetwork:
-    spec = ScenarioSpec("small_world", V=V, S=min(32, V), R=5, M=5,
-                        link="queue", comp="queue", d_mean=25, s_mean=25,
-                        seed=0)
+def _scenario(V: int, topo: str = "sw") -> core.CECNetwork:
+    if topo == "ba":
+        spec = ScenarioSpec("barabasi_albert", V=V, S=min(16, V), R=5,
+                            M=5, link="queue", comp="queue", d_mean=30,
+                            s_mean=30, seed=0)
+    else:
+        spec = ScenarioSpec("small_world", V=V, S=min(32, V), R=5, M=5,
+                            link="queue", comp="queue", d_mean=25,
+                            s_mean=25, seed=0)
     return core.make_scenario(spec)
 
 
@@ -123,7 +146,8 @@ def _time_run(net, phi0, method, engine_impl, name, driver=None,
     return best / n_iters
 
 
-def _bench_rounds(net, phi0, nbrs, impl: str, n_timed: int = 5):
+def _bench_rounds(net, phi0, nbrs, impl: str, n_timed: int = 5,
+                  suf: str = ""):
     """One message-passing round (max_rounds=1) through each backend —
     the per-round dispatch cost the fused kernel amortizes away."""
     phi_sp = core.gather_edges(phi0.result, nbrs)
@@ -135,55 +159,118 @@ def _bench_rounds(net, phi0, nbrs, impl: str, n_timed: int = 5):
 
     f = jax.jit(one_round)
     us = time_call(lambda: jax.block_until_ready(f(phi_sp)), n=n_timed)
-    emit(f"scale_rounds_{impl}_V{net.V}", us, f"Dmax={nbrs.Dmax}",
+    emit(f"scale_rounds_{impl}{suf}_V{net.V}", us, f"Dmax={nbrs.Dmax}",
          engine_impl=impl)
 
 
-def run(full: bool = False, sizes=SIZES):
+def _bench_bucketed(net, phi0_sp, nbrs, buckets, suf: str,
+                    us_padded_step=None, n_timed: int = 3,
+                    with_step: bool = True):
+    """Degree-bucketed engine rows: per-call flows/step time over the
+    [Vb, Db] bucket tiles (bitwise the padded solve — these rows measure
+    pure tile-efficiency) plus the wasted-lane accounting the buckets
+    reclaim.  scale_bucketed_speedup is padded/bucketed per-step (per-
+    flows-solve when the step row is skipped at the largest BA sizes)."""
+    V = net.V
+    lanes_padded = V * int(nbrs.out_nbr.shape[1])
+    lanes = int(buckets.out.lanes)
+    emit(f"scale_wasted_lanes{suf}_V{V}", float(lanes_padded - lanes),
+         f"padded={lanes_padded};bucketed={lanes};"
+         f"ratio={lanes_padded / max(lanes, 1):.1f}")
+
+    kw = {"nbrs": nbrs, "engine_impl": "ref", "buckets": buckets}
+    flows = jax.jit(
+        lambda p: core.compute_flows(net, p, "sparse", **kw).F)
+    us_fl = time_call(lambda: jax.block_until_ready(flows(phi0_sp)),
+                      n=n_timed)
+    emit(f"scale_bucketed_flows{suf}_V{V}", us_fl,
+         f"lanes={lanes}", engine_impl="ref")
+
+    us_st = None
+    if with_step:
+        consts = make_consts(net, core.total_cost(net, phi0_sp, "sparse",
+                                                  **kw))
+
+        def step():
+            p, aux = sgp_step(net, phi0_sp, consts, method="sparse", **kw)
+            jax.block_until_ready(p.data)
+
+        us_st = time_call(step, n=n_timed)
+        emit(f"scale_bucketed_step{suf}_V{V}", us_st, "",
+             engine_impl="ref")
+    if us_padded_step is not None:
+        num = us_padded_step
+        den = us_st if us_st is not None else us_fl
+        emit(f"scale_bucketed_speedup{suf}_V{V}",
+             num / max(den, 1e-9), "padded_us/bucketed_us_per_step")
+    return us_fl, us_st
+
+
+def run(full: bool = False, sizes=None, topo: str = "sw"):
+    if sizes is None:
+        sizes = BA_SIZES if topo == "ba" else SIZES
+    suf = "" if topo == "sw" else f"_{topo}"
     for V in sizes:
-        net = _scenario(V)
-        phi0 = core.spt_phi(net)
+        net = _scenario(V, topo)
         nbrs = core.build_neighbors(net.adj)
+        buckets = core.build_buckets(net.adj)
+        big_ba = topo == "ba" and V > BA_RUN_LIMIT
+        if net.V > DENSE_V_LIMIT:
+            phi0 = None          # never materialize dense [S, V, V+1]
+            phi0_sp = core.spt_phi_sparse(net, nbrs)
+        else:
+            phi0 = core.spt_phi(net)
+            phi0_sp = core.phi_to_sparse(phi0, nbrs)
         ref_us = {}
         for method in ("dense", "broadcast", "sparse"):
-            if method != "sparse" and V > DENSE_V_LIMIT and not full:
-                emit(f"scale_step_{method}_V{V}", 0.0,
+            if method != "sparse" and (phi0 is None
+                                       or (V > DENSE_V_LIMIT and not full)):
+                emit(f"scale_step_{method}{suf}_V{V}", 0.0,
                      f"skipped_{method}_infeasible")
                 continue
             if method == "sparse":
                 # the jnp path and the fused kernel, side by side; the
-                # run-trajectory row only for the backend default
-                for impl in ("ref", _kernel_impl()):
-                    us, _ = _bench_method(net, phi0, nbrs, method,
-                                          engine_impl=impl,
-                                          with_run=(impl == "ref"))
-                    ref_us.setdefault(method, us)
-                    ref_us[f"sparse_{impl}"] = us
-                    _bench_rounds(net, phi0, nbrs, impl)
+                # run-trajectory row only for the backend default.  The
+                # padded gather-boundary rows need a dense φ⁰; at the
+                # BA scaling sizes only the native rows exist
+                if phi0 is not None:
+                    for impl in ("ref", _kernel_impl()):
+                        us, _ = _bench_method(net, phi0, nbrs, method,
+                                              engine_impl=impl,
+                                              with_run=(impl == "ref"
+                                                        and not big_ba),
+                                              row=f"sparse{suf}")
+                        ref_us.setdefault(method, us)
+                        ref_us[f"sparse_{impl}"] = us
+                        _bench_rounds(net, phi0, nbrs, impl, suf=suf)
                 # the edge-slot PhiSparse layout end-to-end: same engine
                 # minus the per-step gather + [S, V, V+1] scatter
-                phi0_sp = core.phi_to_sparse(phi0, nbrs)
                 us_nat_st, us_nat_run = _bench_method(
                     net, phi0_sp, nbrs, method, engine_impl="ref",
-                    row="sparse_native")
+                    row=f"sparse_native{suf}", with_run=not big_ba)
                 ref_us["sparse_native"] = us_nat_st
-                # the fused pipelined driver on the same native layout:
-                # zero per-iteration host syncs, one device_get per run
-                # (bitwise the host-driver trajectory)
-                us_fused = _time_run(net, phi0_sp, "sparse", "ref",
-                                     f"scale_fusedrun_V{V}",
-                                     driver="fused")
-                emit(f"scale_fusedrun_speedup_V{V}",
-                     us_nat_run / max(us_fused, 1e-9),
-                     "hostloop_us/fused_us_per_iter")
+                # the degree-bucketed tiles on the same native layout
+                _bench_bucketed(net, phi0_sp, nbrs, buckets, suf,
+                                us_padded_step=us_nat_st)
+                if not big_ba:
+                    # the fused pipelined driver on the native layout:
+                    # zero per-iteration host syncs, one device_get per
+                    # run (bitwise the host-driver trajectory)
+                    us_fused = _time_run(net, phi0_sp, "sparse", "ref",
+                                         f"scale_fusedrun{suf}_V{V}",
+                                         driver="fused")
+                    emit(f"scale_fusedrun_speedup{suf}_V{V}",
+                         us_nat_run / max(us_fused, 1e-9),
+                         "hostloop_us/fused_us_per_iter")
             else:
-                ref_us[method], _ = _bench_method(net, phi0, nbrs, method)
+                ref_us[method], _ = _bench_method(net, phi0, nbrs, method,
+                                                  row=f"{method}{suf}")
         if "dense" in ref_us and "sparse" in ref_us:
-            emit(f"scale_speedup_V{V}",
+            emit(f"scale_speedup{suf}_V{V}",
                  ref_us["dense"] / max(ref_us["sparse"], 1e-9),
                  "dense_us/sparse_us_per_step")
         if "sparse" in ref_us and "sparse_native" in ref_us:
-            emit(f"scale_native_speedup_V{V}",
+            emit(f"scale_native_speedup{suf}_V{V}",
                  ref_us["sparse"] / max(ref_us["sparse_native"], 1e-9),
                  "sparse_us/native_us_per_step")
 
@@ -195,7 +282,11 @@ if __name__ == "__main__":
                     help="run the dense engine even at V=1000")
     ap.add_argument("--sizes", default=None,
                     help="comma-separated V list, e.g. 20,100")
+    ap.add_argument("--topo", default="sw", choices=("sw", "ba"),
+                    help="scenario family: small-world (sw, the "
+                         "committed default) or power-law "
+                         "Barabási–Albert (ba)")
     a = ap.parse_args()
-    sizes = tuple(int(v) for v in a.sizes.split(",")) if a.sizes else SIZES
+    sizes = tuple(int(v) for v in a.sizes.split(",")) if a.sizes else None
     print("name,us_per_call,derived")
-    run(full=a.full, sizes=sizes)
+    run(full=a.full, sizes=sizes, topo=a.topo)

@@ -6,13 +6,26 @@ cost-recovery printout per event.  The warm column is the replay
 engine; the cold column re-solves from the SPT φ⁰ after every repair
 (what you'd do without the engine).
 
-    PYTHONPATH=src python examples/replay_churn.py
+    PYTHONPATH=src python examples/replay_churn.py [--topo ba]
+
+``--topo ba`` replays the churn on the power-law ba_1000 row through
+the degree-bucketed engine (per-bucket [Vb, Db] edge tiles instead of
+the one global [V, Dmax] tile — same trajectory, bitwise); the default
+is the paper's fog topology.
 """
+import argparse
+
 import numpy as np
 
 from repro import core
 
-net = core.make_scenario(core.TABLE_II["fog"])
+ap = argparse.ArgumentParser()
+ap.add_argument("--topo", default="fog", choices=("fog", "ba"),
+                help="churn substrate: the paper's fog topology, or the "
+                     "power-law ba_1000 row via the bucketed engine")
+args = ap.parse_args()
+scenario = "ba_1000" if args.topo == "ba" else "fog"
+net = core.make_scenario(core.TABLE_II[scenario])
 hub = core.churn_hub(net)          # busiest non-destination node
 adj = np.asarray(net.adj)
 # a busy link that does NOT touch the hub (cut while the hub is down)
@@ -26,14 +39,15 @@ schedule = core.ChurnSchedule((
     (12, core.LinkCut(u, v)),           # ...and a busy link goes with it
     (16, core.NodeRecover(hub)),        # the node comes back
     (20, core.RateScale(0.7)),          # demand eases off
-), name="fog_5_events")
+), name=f"{scenario}_5_events")
 
-print(f"== replaying {schedule.n_events} events on fog "
+print(f"== replaying {schedule.n_events} events on {scenario} "
       f"(V={net.V}, hub={hub}) ==")
 # loop_driver="fused": each warm inter-event segment runs as one async
 # on-device pipeline with a single host sync at its end — bitwise the
 # python host loop, minus every per-iteration device round-trip
-engine = core.ReplayEngine(net, loop_driver="fused")
+engine = core.ReplayEngine(net, loop_driver="fused",
+                           bucketed=(args.topo == "ba"))
 hist = engine.play(schedule, tail_iters=8, cold_baseline=True)
 
 print(f"{'event':<22}{'t':>4}{'before':>10}{'shock':>10}"

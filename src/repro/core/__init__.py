@@ -11,8 +11,10 @@ Public API:
   ReplayEngine, check_invariants                        (streaming replay)
 """
 from .costs import Cost, CostFamily, FAMILIES, LINEAR, QUEUE, SAT
-from .network import (CECNetwork, Flows, FlowsCarry, Neighbors, Phi,
-                      PhiSparse, as_dense_phi, build_neighbors,
+from .network import (CECNetwork, EdgeBuckets, Flows, FlowsCarry,
+                      NeighborBuckets, Neighbors, Phi,
+                      PhiSparse, as_dense_phi, build_buckets,
+                      build_neighbors,
                       compute_flows, cost_of_flows, flows_carry_and_cost,
                       gather_edges, is_loop_free, mask_slots, offload_phi,
                       phi_to_sparse, refeasibilize, refeasibilize_sparse,
@@ -27,8 +29,10 @@ from .optimality import (flow_domain_optimum, marginals_vs_autodiff,
 from .scenarios import (TABLE_II, ScenarioSpec, churn_hub, churn_schedule,
                         enforce_feasibility, fail_node, hub_node,
                         make_scenario)
-from .distributed import (DistributedRunState, init_distributed_state,
-                          run_distributed, run_distributed_chunk, task_mesh)
+from .distributed import (DistributedRunState, NodePartition,
+                          build_node_partition, init_distributed_state,
+                          node_flows_carry_and_cost, run_distributed,
+                          run_distributed_chunk, task_mesh, task_node_mesh)
 from .events import (ChurnSchedule, ChurnState, DestRedraw, LinkCut,
                      LinkRestore, NodeFail, NodeRecover, RateScale,
                      SourceRedraw, event_kind, random_schedule)
@@ -38,8 +42,10 @@ from . import moe_bridge, topologies
 
 __all__ = [
     "Cost", "CostFamily", "FAMILIES", "LINEAR", "QUEUE", "SAT",
-    "CECNetwork", "Flows", "FlowsCarry", "Neighbors", "Phi", "PhiSparse",
-    "as_dense_phi", "build_neighbors", "compute_flows", "cost_of_flows",
+    "CECNetwork", "EdgeBuckets", "Flows", "FlowsCarry", "NeighborBuckets",
+    "Neighbors", "Phi", "PhiSparse",
+    "as_dense_phi", "build_buckets", "build_neighbors", "compute_flows",
+    "cost_of_flows",
     "flows_carry_and_cost", "gather_edges",
     "is_loop_free", "mask_slots", "offload_phi", "phi_to_sparse",
     "refeasibilize", "refeasibilize_sparse", "scatter_edges",
@@ -53,8 +59,10 @@ __all__ = [
     "TABLE_II", "ScenarioSpec", "churn_hub", "churn_schedule",
     "enforce_feasibility", "fail_node", "hub_node", "make_scenario",
     "topologies",
-    "DistributedRunState", "init_distributed_state", "run_distributed",
-    "run_distributed_chunk", "task_mesh",
+    "DistributedRunState", "NodePartition", "build_node_partition",
+    "init_distributed_state", "node_flows_carry_and_cost",
+    "run_distributed", "run_distributed_chunk", "task_mesh",
+    "task_node_mesh",
     "ChurnSchedule", "ChurnState", "DestRedraw", "LinkCut", "LinkRestore",
     "NodeFail", "NodeRecover", "RateScale", "SourceRedraw", "event_kind",
     "random_schedule",

@@ -27,13 +27,16 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .network import (CECNetwork, FlowsCarry, Neighbors, Phi, PhiSparse,
-                      build_neighbors, flows_carry_and_cost_jit,
+                      _phi_edge_views, build_neighbors,
+                      flows_carry_and_cost_jit, gather_edges,
                       phi_to_sparse, sparse_to_phi)
 from .sgp import (SGPConsts, _accept_update, _fold_fused_histories,
                   _sgp_step_flows_impl, _sgp_step_impl, _tol_converged,
                   accept_step, make_consts)
+from ..kernels.ref import fold_reduce
 
 AXIS = "tasks"
+NODE_AXIS = "nodes"
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -106,11 +109,20 @@ def _phi_spec(method: str):
             else Phi(P(AXIS), P(AXIS)))
 
 
+def _buckets_spec(buckets):
+    """Replicated in_spec for a `NeighborBuckets` pytree (every device
+    holds the full degree-bucket tiles, exactly like the Neighbors
+    index tiles); None passes through as the empty pytree."""
+    return (jax.tree.map(lambda _: P(), buckets)
+            if buckets is not None else None)
+
+
 def make_distributed_step(mesh: Mesh, variant: str = "sgp",
                           scaling: str = "adaptive", kappa: float = 0.0,
                           method: str = "dense",
                           nbrs: Optional[Neighbors] = None,
-                          engine_impl: Optional[str] = None):
+                          engine_impl: Optional[str] = None,
+                          buckets=None):
     """Build the jitted shard_map SGP step for a 1-D task mesh.
 
     method="sparse" shard_maps the neighbor-list engine over the task
@@ -135,32 +147,33 @@ def make_distributed_step(mesh: Mesh, variant: str = "sgp",
     nbrs_spec = (Neighbors(P(), P(), P(), P(), P())
                  if nbrs is not None else None)
 
-    def step(net, phi, consts, sigma, nbrs):
+    def step(net, phi, consts, sigma, nbrs, buckets):
         new_phi, aux = _sgp_step_impl(
             net, phi, consts, variant=variant, scaling=scaling,
             sigma=sigma, kappa=kappa, method=method, psum_axis=AXIS,
-            engine_impl=engine_impl, nbrs=nbrs)
+            engine_impl=engine_impl, nbrs=nbrs, buckets=buckets)
         return new_phi, aux["cost"]
 
     sharded = _shard_map(
         step, mesh=mesh,
         in_specs=(_TASK_SHARDED_NET, _phi_spec(method), _CONSTS_SPEC, P(),
-                  nbrs_spec),
+                  nbrs_spec, _buckets_spec(buckets)),
         out_specs=(_phi_spec(method), P()))
     jitted = jax.jit(sharded)
     # keep the public step signature (net, phi, consts, sigma)
-    return partial(_call_with_nbrs, jitted, nbrs)
+    return partial(_call_with_nbrs, jitted, nbrs, buckets)
 
 
-def _call_with_nbrs(jitted, nbrs, net, phi, consts, sigma):
-    return jitted(net, phi, consts, sigma, nbrs)
+def _call_with_nbrs(jitted, nbrs, buckets, net, phi, consts, sigma):
+    return jitted(net, phi, consts, sigma, nbrs, buckets)
 
 
 def make_distributed_step_flows(mesh: Mesh, variant: str = "sgp",
                                 scaling: str = "adaptive",
                                 kappa: float = 0.0, method: str = "dense",
                                 nbrs: Optional[Neighbors] = None,
-                                engine_impl: Optional[str] = None):
+                                engine_impl: Optional[str] = None,
+                                buckets=None):
     """The drivers' shard_mapped per-iteration primitive:
     step(net, phi, fl, consts, sigma) -> (phi_new, fl_new, cost_new).
 
@@ -180,23 +193,24 @@ def make_distributed_step_flows(mesh: Mesh, variant: str = "sgp",
     nbrs_spec = (Neighbors(P(), P(), P(), P(), P())
                  if nbrs is not None else None)
 
-    def step(net, phi, fl, consts, sigma, nbrs):
+    def step(net, phi, fl, consts, sigma, nbrs, buckets):
         return _sgp_step_flows_impl(
             net, phi, fl, consts, variant=variant, scaling=scaling,
             sigma=sigma, kappa=kappa, method=method, psum_axis=AXIS,
-            engine_impl=engine_impl, nbrs=nbrs)
+            engine_impl=engine_impl, nbrs=nbrs, buckets=buckets)
 
     sharded = _shard_map(
         step, mesh=mesh,
         in_specs=(_TASK_SHARDED_NET, _phi_spec(method), _CARRY_SPEC,
-                  _CONSTS_SPEC, P(), nbrs_spec),
+                  _CONSTS_SPEC, P(), nbrs_spec, _buckets_spec(buckets)),
         out_specs=(_phi_spec(method), _CARRY_SPEC, P()))
     jitted = jax.jit(sharded)
-    return partial(_call_with_nbrs_flows, jitted, nbrs)
+    return partial(_call_with_nbrs_flows, jitted, nbrs, buckets)
 
 
-def _call_with_nbrs_flows(jitted, nbrs, net, phi, fl, consts, sigma):
-    return jitted(net, phi, fl, consts, sigma, nbrs)
+def _call_with_nbrs_flows(jitted, nbrs, buckets, net, phi, fl, consts,
+                          sigma):
+    return jitted(net, phi, fl, consts, sigma, nbrs, buckets)
 
 
 @dataclasses.dataclass
@@ -231,6 +245,7 @@ class DistributedRunState:
     it: int = 0                      # iterations EXECUTED (incl. rejected)
     stopped: bool = False
     flows: Optional[FlowsCarry] = None   # flows of `phi` (device carry)
+    buckets: object = None           # NeighborBuckets (bucketed sparse mode)
 
 
 def init_distributed_state(net: CECNetwork, phi0,
@@ -238,14 +253,21 @@ def init_distributed_state(net: CECNetwork, phi0,
                            variant: str = "sgp", scaling: str = "adaptive",
                            kappa: float = 0.0, min_scale: float = 0.05,
                            method: str = "dense",
-                           engine_impl: Optional[str] = None
+                           engine_impl: Optional[str] = None,
+                           bucketed: bool = False
                            ) -> DistributedRunState:
     """Pad, convert at the boundary, build the shard_map step and
     evaluate φ⁰'s flows + T⁰ (one solve, both carried) — exactly
-    `run_distributed`'s prologue."""
+    `run_distributed`'s prologue.  bucketed=True (sparse method only)
+    replicates the degree-bucketed tiles on every device and runs each
+    shard's fixed-point recursions over them (bitwise the padded
+    shard_map trajectory, ΣVb·Db per-round work per shard)."""
+    from .network import build_buckets
     mesh = mesh or task_mesh()
     n_dev = mesh.devices.size
     nbrs = build_neighbors(net.adj) if method == "sparse" else None
+    buckets = (build_buckets(net.adj)
+               if bucketed and method == "sparse" else None)
     sparse_in = isinstance(phi0, PhiSparse)
     if sparse_in and method != "sparse":
         # same contract as core.run / compute_flows: the dense engines
@@ -261,15 +283,17 @@ def init_distributed_state(net: CECNetwork, phi0,
     step = make_distributed_step_flows(mesh, variant=variant,
                                        scaling=scaling, kappa=kappa,
                                        method=method, nbrs=nbrs,
-                                       engine_impl=engine_impl)
+                                       engine_impl=engine_impl,
+                                       buckets=buckets)
     fl_p, T0 = flows_carry_and_cost_jit(net_p, phi_p, method, nbrs=nbrs,
-                                        engine_impl=engine_impl)
+                                        engine_impl=engine_impl,
+                                        buckets=buckets)
     consts = make_consts(net_p, T0, min_scale)
     return DistributedRunState(
         phi=phi_p, consts=consts, nbrs=nbrs, net_p=net_p, step=step,
         mesh=mesh, method=method, scaling=scaling, variant=variant,
         engine_impl=engine_impl, S=S, costs=[float(T0)],
-        min_scale=min_scale, flows=fl_p)
+        min_scale=min_scale, flows=fl_p, buckets=buckets)
 
 
 def rebaseline_distributed_state(state: DistributedRunState,
@@ -285,7 +309,8 @@ def rebaseline_distributed_state(state: DistributedRunState,
     net_p, phi_p, S = pad_tasks(net, phi_sp, state.mesh.devices.size)
     fl_p, T0 = flows_carry_and_cost_jit(net_p, phi_p, state.method,
                                         nbrs=state.nbrs,
-                                        engine_impl=state.engine_impl)
+                                        engine_impl=state.engine_impl,
+                                        buckets=state.buckets)
     state.net_p, state.phi, state.S = net_p, phi_p, S
     state.flows = fl_p
     state.consts = make_consts(net_p, T0, state.min_scale)
@@ -321,7 +346,8 @@ def run_distributed_chunk(state: DistributedRunState, n_iters: int,
     if fl is None:
         fl, _ = flows_carry_and_cost_jit(state.net_p, state.phi,
                                          state.method, nbrs=state.nbrs,
-                                         engine_impl=state.engine_impl)
+                                         engine_impl=state.engine_impl,
+                                         buckets=state.buckets)
     if driver == "fused":
         return _run_distributed_chunk_fused(state, fl, n_iters, tol)
     phi, costs = state.phi, state.costs
@@ -394,7 +420,7 @@ def run_distributed(net: CECNetwork, phi0, n_iters: int = 200,
                     scaling: str = "adaptive", kappa: float = 0.0,
                     min_scale: float = 0.05, method: str = "dense",
                     tol: float = 0.0, engine_impl: Optional[str] = None,
-                    driver: Optional[str] = None):
+                    driver: Optional[str] = None, bucketed: bool = False):
     """Driver: distributed SGP with the same safeguard as `sgp.run`.
 
     method="sparse" runs the neighbor-list engine on every shard (the
@@ -419,7 +445,8 @@ def run_distributed(net: CECNetwork, phi0, n_iters: int = 200,
     state = init_distributed_state(net, phi0, mesh=mesh, variant=variant,
                                    scaling=scaling, kappa=kappa,
                                    min_scale=min_scale, method=method,
-                                   engine_impl=engine_impl)
+                                   engine_impl=engine_impl,
+                                   bucketed=bucketed)
     state = run_distributed_chunk(state, n_iters, tol=tol, driver=driver)
     phi = state.phi
     if method == "sparse" and not sparse_in:
@@ -427,3 +454,243 @@ def run_distributed(net: CECNetwork, phi0, n_iters: int = 200,
     phi_out = unpad_phi(state)
     return phi_out, {"costs": state.costs, "final_cost": state.costs[-1],
                      "n_rejected": state.n_rejected}
+
+
+# ----------------------------------------------------------- node sharding
+def task_node_mesh(n_tasks: int, n_nodes: int) -> Mesh:
+    """A 2-D ("tasks", "nodes") device mesh: tasks stay the outer SPMD
+    axis (they are embarrassingly parallel), nodes the inner one (the
+    recursions couple across it, via the halo exchange below)."""
+    devs = np.asarray(jax.devices()[: n_tasks * n_nodes])
+    return Mesh(devs.reshape(n_tasks, n_nodes), (AXIS, NODE_AXIS))
+
+
+@dataclasses.dataclass(frozen=True)
+class NodePartition:
+    """Concrete (numpy, built outside jit) halo plan for sharding the
+    NODE axis of the edge-slot recursions over `n` devices.
+
+    Nodes are split into `n` contiguous blocks of `Vl = Vp / n` rows
+    (V zero-padded to Vp: padded rows have empty neighbor lists and
+    never inject, so they sit at the fixed point from round 0).  A row
+    is a BOUNDARY row of its shard if any OTHER shard references it
+    through its in- or out-neighbor lists; only those rows travel in
+    the per-round `all_gather` — [.., Bmax] per shard instead of the
+    full [.., Vl] state, which on a power-law graph cut into contiguous
+    blocks is a small fraction of the state.
+
+    The per-shard tables (leading axis `n`, sharded over NODE_AXIS)
+    remap every neighbor index into the shard-local CONCAT space
+    [x_local (Vl) ; halo (n·Bmax)], where the halo block is the
+    NODE_AXIS `all_gather(tiled=True)` of every shard's boundary rows
+    in device order — so one gather per round serves every cross-shard
+    read, in both edge directions.
+    """
+    n: int                  # node shards
+    V: int                  # original node count
+    Vp: int                 # padded node count (n * Vl)
+    Bmax: int               # max boundary rows per shard
+    bnd: np.ndarray         # [n, Bmax] shard-LOCAL boundary row indices
+    in_remap: np.ndarray    # [n, Vl, Din]  in_nbr -> concat space
+    in_slot: np.ndarray     # [n, Vl, Din]  source-row slot (unchanged)
+    in_mask: np.ndarray     # [n, Vl, Din]
+    out_remap: np.ndarray   # [n, Vl, Dout] out_nbr -> concat space
+    out_mask: np.ndarray    # [n, Vl, Dout]
+
+    @property
+    def Vl(self) -> int:
+        return self.Vp // self.n
+
+
+def build_node_partition(nbrs: Neighbors, n_shards: int) -> NodePartition:
+    """Build the contiguous-block halo plan from the padded neighbor
+    lists (pure numpy — the plan is adjacency-derived and jit-static)."""
+    V = nbrs.V
+    in_nbr = np.asarray(nbrs.in_nbr)
+    in_slot = np.asarray(nbrs.in_slot)
+    in_mask = np.asarray(nbrs.in_mask)
+    out_nbr = np.asarray(nbrs.out_nbr)
+    out_mask = np.asarray(nbrs.out_mask)
+    Vl = -(-V // n_shards)
+    Vp = Vl * n_shards
+
+    def pad_rows(x, fill):
+        return np.pad(x, [(0, Vp - V)] + [(0, 0)] * (x.ndim - 1),
+                      constant_values=fill)
+
+    in_nbr = pad_rows(in_nbr, 0)
+    in_slot = pad_rows(in_slot, 0)
+    in_mask = pad_rows(in_mask, False)
+    out_nbr = pad_rows(out_nbr, 0)
+    out_mask = pad_rows(out_mask, False)
+    owner = np.arange(Vp) // Vl
+
+    # boundary rows: referenced (through either direction's lists) by a
+    # row another shard owns
+    boundary = [set() for _ in range(n_shards)]
+    for nbr, mask in ((in_nbr, in_mask), (out_nbr, out_mask)):
+        src = np.repeat(np.arange(Vp), nbr.shape[1]).reshape(nbr.shape)
+        cross = mask & (owner[src] != owner[nbr])
+        for u in np.unique(nbr[cross]):
+            boundary[owner[u]].add(int(u))
+    bnd_lists = [sorted(b) for b in boundary]
+    Bmax = max((len(b) for b in bnd_lists), default=0)
+    Bmax = max(Bmax, 1)              # keep the all_gather shape nonzero
+    bnd = np.zeros((n_shards, Bmax), np.int32)
+    pos = np.zeros(Vp, np.int64)     # boundary position of each row
+    for s, rows in enumerate(bnd_lists):
+        for p, u in enumerate(rows):
+            bnd[s, p] = u - s * Vl   # shard-local
+            pos[u] = p
+
+    def remap(nbr, mask):
+        # local reads -> [0, Vl); remote -> Vl + owner·Bmax + pos
+        local = nbr - owner[:, None] * Vl if nbr.ndim == 2 else None
+        src_owner = owner[:, None]
+        tgt_owner = owner[nbr]
+        r = np.where(tgt_owner == src_owner, nbr - tgt_owner * Vl,
+                     Vl + tgt_owner * Bmax + pos[nbr])
+        r = np.where(mask, r, 0).astype(np.int32)
+        return r.reshape(n_shards, Vl, nbr.shape[1])
+
+    shard3 = lambda x: x.reshape(n_shards, Vl, x.shape[1])
+    return NodePartition(
+        n=n_shards, V=V, Vp=Vp, Bmax=Bmax, bnd=bnd,
+        in_remap=remap(in_nbr, in_mask),
+        in_slot=shard3(in_slot).astype(np.int32),
+        in_mask=shard3(in_mask),
+        out_remap=remap(out_nbr, out_mask),
+        out_mask=shard3(out_mask))
+
+
+def _halo_fixed_point(w_loc, inject, remap, bnd, max_rounds: int):
+    """Shard-local body of the node-sharded linear fixed point
+    x = inject + reduce_e w·x[nbr]: per round, `all_gather` ONLY the
+    boundary rows over NODE_AXIS, gather through the concat-space remap
+    and fold-reduce each local row.
+
+    Every local row folds the same width with the same weights and the
+    same (exact) neighbor states as the single-device engine, so the
+    per-round iterates — and the fixed point — are BITWISE the unsharded
+    solve's rows.  The stop flag is psum'ed over NODE_AXIS: the coupled
+    recursion must keep every node shard stepping until the GLOBAL state
+    settles (a shard-local early exit would freeze a shard whose inputs
+    are still changing)."""
+    def step(x):
+        xb = x[..., bnd]                                  # [.., Bmax]
+        halo = jax.lax.all_gather(xb, NODE_AXIS, axis=x.ndim - 1,
+                                  tiled=True)             # [.., n*Bmax]
+        xc = jnp.concatenate([x, halo], axis=-1)
+        return inject + fold_reduce(w_loc * xc[..., remap], "sum")
+
+    def changed(a, b):
+        flag = jnp.any(a != b).astype(jnp.int32)
+        return jax.lax.psum(flag, NODE_AXIS) > 0
+
+    x1 = step(inject)
+
+    def cond(carry):
+        k, _, _, go = carry
+        return (k < max_rounds) & go
+
+    def body(carry):
+        k, x, _, _ = carry
+        xn = step(x)
+        return k + 1, xn, x, changed(xn, x)
+
+    _, x, _, _ = jax.lax.while_loop(
+        cond, body,
+        (jnp.asarray(1, jnp.int32), x1, inject, changed(x1, inject)))
+    return x
+
+
+def node_flows_carry_and_cost(net: CECNetwork, phi_sp: PhiSparse,
+                              nbrs: Neighbors, mesh: Mesh,
+                              part: Optional[NodePartition] = None):
+    """`flows_carry_and_cost(method="sparse")` over a 2-D
+    (tasks × nodes) mesh — the paper's "measurement" phase with BOTH
+    axes sharded.
+
+    Tasks shard exactly as in the 1-D step (independent recursions, one
+    F/G psum); the NODE axis of every [.., V(, Dmax)] array is cut into
+    contiguous blocks, and each round of the two traffic solves moves
+    only the boundary rows (`NodePartition`) over NODE_AXIS.  The
+    in-edge weight view — whose source rows can live on other shards —
+    is built by ONE boundary-row gather of φ's [.., Bmax, Dmax] tiles
+    per solve, then the rounds exchange [.., Bmax] state rows only.
+
+    Returns (FlowsCarry, cost) with F/G unpadded to [V, Dmax]/[V] and
+    psum'ed over tasks (replicated, like the 1-D step's carry).
+    t_data/t_result are BITWISE the single-device sparse solve (halo
+    reads are exact copies; fold_reduce pins every row's reduction
+    order); F and the cost differ only in cross-shard summation order
+    (~1 ulp).
+    """
+    n_nodes = mesh.shape[NODE_AXIS]
+    if part is None:
+        part = build_node_partition(nbrs, n_nodes)
+    if part.n != n_nodes:
+        raise ValueError(f"partition built for {part.n} node shards, "
+                         f"mesh has {n_nodes}")
+    Vp, V = part.Vp, part.V
+
+    def pad_nodes(x, axis, fill=0.0):
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, Vp - V)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    phi_d_sp, phi_loc, phi_r_sp = _phi_edge_views(phi_sp, nbrs)
+    phi_d_sp = pad_nodes(phi_d_sp, 1)
+    phi_r_sp = pad_nodes(phi_r_sp, 1)
+    phi_loc = pad_nodes(phi_loc, 1)
+    r = pad_nodes(net.r, 1)
+    w = pad_nodes(net.w, 1)
+    link_sp = pad_nodes(gather_edges(net.link_cost.params, nbrs), 0)
+    # padded rows: unit capacity, zero workload -> exactly zero cost
+    # (zero capacity would evaluate the queue cost at 0/0)
+    comp_params = pad_nodes(net.comp_cost.params, 0, fill=1.0)
+    link_fam = net.link_cost.family
+    comp_fam = net.comp_cost.family
+    max_rounds = nbrs.V
+
+    def body(phi_d, phi_loc, phi_r, r, a, w, link_p, comp_p,
+             bnd, in_remap, in_slot, in_mask, out_remap, out_mask):
+        # per-shard plan tables arrive with a leading length-1 axis
+        bnd, in_remap, in_slot, in_mask, out_remap, out_mask = (
+            t[0] for t in (bnd, in_remap, in_slot, in_mask, out_remap,
+                           out_mask))
+        # in-edge weight view: one boundary-row gather of φ's tiles
+        def in_view(phi_e):
+            pb = phi_e[:, bnd, :]                  # [Sl, Bmax, Dmax]
+            halo = jax.lax.all_gather(pb, NODE_AXIS, axis=1, tiled=True)
+            pc = jnp.concatenate([phi_e, halo], axis=1)
+            wv = pc[:, in_remap, in_slot]          # [Sl, Vl, Din]
+            return jnp.where(in_mask[None], wv, 0.0)
+
+        t_data = _halo_fixed_point(in_view(phi_d), r, in_remap, bnd,
+                                   max_rounds)
+        g = t_data * phi_loc
+        t_result = _halo_fixed_point(in_view(phi_r), a[:, None] * g,
+                                     in_remap, bnd, max_rounds)
+        F = jnp.sum(t_data[..., None] * phi_d
+                    + t_result[..., None] * phi_r, axis=0)
+        F = jax.lax.psum(F, AXIS)                  # [Vl, Dmax]
+        G = jax.lax.psum(jnp.sum(w * g, axis=0), AXIS)
+        from .costs import Cost
+        link = jnp.where(out_mask, Cost(link_fam, link_p).value(F), 0.0)
+        cost = jnp.sum(link) + jnp.sum(Cost(comp_fam, comp_p).value(G))
+        cost = jax.lax.psum(cost, NODE_AXIS)
+        return FlowsCarry(t_data, t_result, F, G), cost
+
+    AN, N = P(AXIS, NODE_AXIS), P(NODE_AXIS)
+    sharded = _shard_map(
+        body, mesh=mesh,
+        in_specs=(AN, AN, AN, AN, P(AXIS), AN, N, N,
+                  N, N, N, N, N, N),
+        out_specs=(FlowsCarry(t_data=AN, t_result=AN, F=N, G=N), P()))
+    carry, cost = jax.jit(sharded)(
+        phi_d_sp, phi_loc, phi_r_sp, r, net.a, w, link_sp, comp_params,
+        part.bnd, part.in_remap, part.in_slot, part.in_mask,
+        part.out_remap, part.out_mask)
+    return FlowsCarry(carry.t_data[:, :V], carry.t_result[:, :V],
+                      carry.F[:V], carry.G[:V]), cost

@@ -66,21 +66,25 @@ def compute_marginals(net: CECNetwork, phi, fl: Flows,
                       method: str = "dense",
                       nbrs: Neighbors | None = None,
                       engine_impl: str | None = None,
-                      slot_F: bool = False) -> Marginals:
+                      slot_F: bool = False, buckets=None) -> Marginals:
     """`phi` is a dense `Phi`, or (method="sparse" only) an edge-slot
     `PhiSparse` consumed in place — no gather, no dense intermediate.
 
     slot_F=True (sparse drivers) declares that `fl.F` is already the
     [V, Dmax] edge-slot link flow (a driver `FlowsCarry`): D' is then
     evaluated directly on the slots — bitwise the dense evaluation per
-    real slot, at ~Dmax/V of the work."""
+    real slot, at ~Dmax/V of the work.
+
+    `buckets` (a network.NeighborBuckets, sparse method only) runs the
+    two downstream solves over degree-bucketed tiles — bitwise the
+    padded solves at ΣVb·Db per-round work."""
     if isinstance(phi, PhiSparse) and method != "sparse":
         raise ValueError("PhiSparse requires method='sparse'")
     if method == "sparse":
         return _compute_marginals_sparse(
             net, phi, fl,
             nbrs if nbrs is not None else build_neighbors(net.adj),
-            engine_impl, slot_F=slot_F)
+            engine_impl, slot_F=slot_F, buckets=buckets)
     adjf = net.adj.astype(phi.data.dtype)
     Dp = jnp.where(net.adj, net.link_cost.d1(fl.F), 0.0)
     Cp = net.comp_cost.d1(fl.G)
@@ -110,7 +114,8 @@ def compute_marginals(net: CECNetwork, phi, fl: Flows,
 def _compute_marginals_sparse(net: CECNetwork, phi, fl: Flows,
                               nbrs: Neighbors,
                               impl: str | None = None,
-                              slot_F: bool = False) -> Marginals:
+                              slot_F: bool = False,
+                              buckets=None) -> Marginals:
     """Eq. 9-13 as out-edge message passing in [S, V, Dmax] layout."""
     if slot_F:   # fl.F already lives on the slots; padding masked to 0
         Dp_sp = mask_slots(link_cost_sparse(net, nbrs).d1(fl.F), nbrs)
@@ -122,12 +127,14 @@ def _compute_marginals_sparse(net: CECNetwork, phi, fl: Flows,
 
     # Stage 1 (paper broadcast stage 1): result marginals, from destination.
     b_r = jnp.sum(phi_r_sp * Dp_sp[None], axis=-1)
-    rho_result = solve_downstream_sparse(phi_r_sp, b_r, nbrs, impl)
+    rho_result = solve_downstream_sparse(phi_r_sp, b_r, nbrs, impl,
+                                         buckets=buckets)
 
     # Stage 2: data marginals (needs ρ⁺ first, exactly as in the paper).
     delta_local = net.w * Cp[None] + net.a[:, None] * rho_result  # [S, V]
     b_d = jnp.sum(phi_d_sp * Dp_sp[None], axis=-1) + phi_loc * delta_local
-    rho_data = solve_downstream_sparse(phi_d_sp, b_d, nbrs, impl)
+    rho_data = solve_downstream_sparse(phi_d_sp, b_d, nbrs, impl,
+                                       buckets=buckets)
 
     # δ terms (Eq. 13) on edge slots; padded slots pinned to BIG.
     ninf = jnp.where(nbrs.out_mask, 0.0, BIG)

@@ -61,6 +61,10 @@ with three interchangeable engines (`method=`):
                the fixed point is reached — O(S·V·Dmax·diam) total.
                This is the engine that scales to V ~ 10³⁺ arbitrary
                topologies, exactly because Algorithm 1 is distributed.
+               With `buckets=` (a `NeighborBuckets` from
+               `build_buckets`) the recursions run over DEGREE-BUCKETED
+               tiles instead — O(S·E·diam), see below — which is what
+               takes power-law topologies to V ~ 10⁴⁺.
 
 The sparse rounds themselves dispatch through
 `kernels.ops.edge_rounds(..., impl=engine_impl)`:
@@ -83,10 +87,33 @@ names the edge i -> j; padded slots point at node 0 and are masked.
 `x_sp[s, i, e]` then stores the per-edge quantity (φ_ij, δ_ij, f_ij…).
 `Neighbors` must be precomputed from a *concrete* adjacency (numpy,
 outside jit) via `build_neighbors` and threaded through `nbrs=`.
+
+BUCKETED edge-slot layout (`NeighborBuckets` via `build_buckets`): the
+[V, Dmax] tiling pads every node to the GLOBAL max degree, so on
+power-law / hub-and-spoke graphs (one hub of degree ~√V·m, a long tail
+of degree ~m) nearly every lane is padding — the padded engine's
+per-round work V·Dmax can exceed the edge count |E| by 50×.  The
+bucketed layout groups nodes into power-of-two degree classes, each a
+CSR-style [Vb, Db] tile (node list `nodes`, state-gather `nbr`, weight
+-gather `wsrc`/`wslot`, `mask`), so per-round work is ΣVb·Db < 2·|E|
+regardless of the degree distribution.  φ itself (PhiSparse) and every
+other slot array KEEP the [S, V, Dmax] layout — buckets are a VIEW
+used inside the fixed-point recursions (the tiles gather the lanes
+they own), not a second φ layout, so projections, drivers, replay and
+the conversion contract above are untouched.  Bitwise identity with
+the padded engine is guaranteed by construction: a bucket row reads
+exactly the lanes the padded row holds (out-edges pack ascending at
+slots 0..deg-1), and `kernels.ref.fold_reduce` fixes a tile-width-
+stable reduction order shared by both engines, so flows, marginals,
+blocked sets and whole SGP trajectories agree bit-for-bit (locked by
+tests/test_bucketed.py on every Table II row).  Like `Neighbors`,
+buckets come from a *concrete* adjacency (`build_buckets`, LRU-
+memoized) and thread through `buckets=` as a jit-dynamic pytree.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import Tuple
 
@@ -179,24 +206,46 @@ class Neighbors:
 
 # build_neighbors is O(V·deg) python; callers that omit `nbrs=` (one-off
 # total_cost / compute_flows calls) would re-pad the same adjacency every
-# call, so results are memoized on the adjacency bytes (bounded LRU).
-_NBR_CACHE: dict = {}
+# call, so results are memoized on the adjacency bytes.  The cache is a
+# bounded TRUE LRU (hits refresh recency): long churn-replay streams
+# alternate between a handful of live adjacencies (cut -> restore ->
+# cut...) far more than _NBR_CACHE_MAX distinct ones, so the working set
+# stays resident instead of being evicted in insertion (FIFO) order.
+_NBR_CACHE: OrderedDict = OrderedDict()
 _NBR_CACHE_MAX = 32
+
+
+def _adj_key(A: np.ndarray):
+    return (A.shape[0], A.tobytes())
+
+
+def _lru_get(cache: OrderedDict, key):
+    hit = cache.get(key)
+    if hit is not None:
+        cache.move_to_end(key)
+    return hit
+
+
+def _lru_put(cache: OrderedDict, key, value):
+    cache[key] = value
+    while len(cache) > _NBR_CACHE_MAX:
+        cache.popitem(last=False)
 
 
 def build_neighbors(adj) -> Neighbors:
     """Precompute `Neighbors` from a concrete [V, V] bool adjacency.
 
-    Memoized per adjacency: repeat calls on the same (or an equal)
-    matrix return the cached padded lists instead of re-building them.
+    Memoized per adjacency (bounded LRU on the adjacency bytes): repeat
+    calls on the same (or an equal) matrix return the cached padded
+    lists instead of re-building them.
     """
     if isinstance(adj, jax.core.Tracer):
         raise ValueError(
             "build_neighbors needs a concrete adjacency; precompute it "
             "outside jit and pass it through the `nbrs=` argument")
     A = np.asarray(adj, dtype=bool)
-    key = (A.shape[0], A.tobytes())
-    cached = _NBR_CACHE.get(key)
+    key = _adj_key(A)
+    cached = _lru_get(_NBR_CACHE, key)
     if cached is not None:
         return cached
     V = A.shape[0]
@@ -221,10 +270,151 @@ def build_neighbors(adj) -> Neighbors:
     nbrs = Neighbors(jnp.asarray(out_nbr), jnp.asarray(out_mask),
                      jnp.asarray(in_nbr), jnp.asarray(in_slot),
                      jnp.asarray(in_mask))
-    if len(_NBR_CACHE) >= _NBR_CACHE_MAX:
-        _NBR_CACHE.pop(next(iter(_NBR_CACHE)))
-    _NBR_CACHE[key] = nbrs
+    _lru_put(_NBR_CACHE, key, nbrs)
     return nbrs
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeBuckets:
+    """Degree-bucketed CSR-style tiles of ONE edge direction.
+
+    Nodes are grouped by power-of-two degree class; bucket k holds the
+    (ascending-id) nodes whose degree rounds up to width Db_k, as a
+    [Vb_k, Db_k] tile — so per-round message-passing work is
+    ΣVb·Db ≈ |E| lanes instead of the padded engine's V·Dmax.  All
+    tuples have one entry per bucket:
+
+      nodes [Vb]       node ids, in concat order (ascending within
+                       each bucket, buckets by ascending width)
+      nbr   [Vb, Db]   state-gather index: x[.., nbr] reads the edge's
+                       other endpoint (out: the head j; in: the tail i)
+      wsrc  [Vb, Db]   weight-gather row into the [.., V, Dmax]
+                       out-edge-slot weight array (out: the node
+                       itself; in: the SENDER node)
+      wslot [Vb, Db]   weight-gather lane (out: the slot e itself; in:
+                       the edge's slot in the sender's out-list)
+      mask  [Vb, Db]   slot is a real edge (padding inert, as always)
+      inv   [V]        position of node v in concat(nodes): un-permutes
+                       the concatenated per-bucket results back to node
+                       order
+
+    Top-bucket widths are clamped to the tile width Dmax (a hub whose
+    degree rounds up past Dmax can't read lanes that don't exist);
+    `kernels.ref.fold_reduce` keeps row reductions bitwise identical
+    across tile widths regardless.
+    """
+    nodes: tuple
+    nbr: tuple
+    wsrc: tuple
+    wslot: tuple
+    mask: tuple
+    inv: jnp.ndarray
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.nbr)
+
+    @property
+    def V(self) -> int:
+        return self.inv.shape[0]
+
+    @property
+    def lanes(self) -> int:
+        """ΣVb·Db — the per-round gather/reduce work of one pass."""
+        return sum(int(t.shape[0]) * int(t.shape[1]) for t in self.nbr)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NeighborBuckets:
+    """Both edge directions of `EdgeBuckets` for one adjacency.
+
+    `out` drives the downstream/marginal recursions (ρ = b + Φ ρ) and
+    the taint/path-length closures; `inn` drives the traffic solves
+    (t = r + Φᵀ t), bucketed by IN-degree with the (in_nbr, in_slot)
+    weight view folded into its wsrc/wslot tiles.  A separate
+    side-structure (not new `Neighbors` fields) so existing positional
+    `Neighbors` pytree specs — e.g. the distributed shard_map in_specs
+    — keep working unchanged; thread it through the engines' optional
+    `buckets=` argument (built once per concrete adjacency via
+    `build_buckets`, LRU-memoized like `build_neighbors`).
+    """
+    out: EdgeBuckets
+    inn: EdgeBuckets
+
+    @property
+    def V(self) -> int:
+        return self.out.V
+
+
+_BUCKET_CACHE: OrderedDict = OrderedDict()
+
+
+def _pow2_widths(deg: np.ndarray, cap: int) -> np.ndarray:
+    """Per-node bucket width: smallest power of two >= degree (>=1),
+    clamped to the tile width `cap`."""
+    d = np.maximum(deg.astype(np.int64), 1)
+    w = 2 ** np.ceil(np.log2(d)).astype(np.int64)   # exact: d < 2**52
+    return np.minimum(w, cap)
+
+
+def _bucket_direction(deg, nbr_rows, slot_rows, mask_rows,
+                      out_direction: bool) -> EdgeBuckets:
+    V, D = nbr_rows.shape
+    widths = _pow2_widths(deg, D)
+    nodes_t, nbr_t, wsrc_t, wslot_t, mask_t, perm = [], [], [], [], [], []
+    for Db in sorted(set(widths.tolist())):
+        nodes = np.nonzero(widths == Db)[0].astype(np.int32)
+        perm.append(nodes)
+        nbr_b = np.ascontiguousarray(nbr_rows[nodes, :Db], np.int32)
+        mask_b = np.ascontiguousarray(mask_rows[nodes, :Db])
+        if out_direction:
+            wsrc_b = np.broadcast_to(nodes[:, None], nbr_b.shape)
+            wslot_b = np.broadcast_to(
+                np.arange(Db, dtype=np.int32)[None], nbr_b.shape)
+        else:
+            wsrc_b = nbr_b                       # sender rows
+            wslot_b = slot_rows[nodes, :Db]      # slot in sender's list
+        nodes_t.append(jnp.asarray(nodes))
+        nbr_t.append(jnp.asarray(nbr_b))
+        wsrc_t.append(jnp.asarray(np.ascontiguousarray(wsrc_b, np.int32)))
+        wslot_t.append(jnp.asarray(np.ascontiguousarray(wslot_b, np.int32)))
+        mask_t.append(jnp.asarray(mask_b))
+    perm = np.concatenate(perm)
+    inv = np.empty(V, np.int32)
+    inv[perm] = np.arange(V, dtype=np.int32)
+    return EdgeBuckets(tuple(nodes_t), tuple(nbr_t), tuple(wsrc_t),
+                       tuple(wslot_t), tuple(mask_t), jnp.asarray(inv))
+
+
+def build_buckets(adj) -> NeighborBuckets:
+    """Degree-bucketed tiles of a concrete adjacency (LRU-memoized).
+
+    Isolated nodes land in the width-1 bucket with their single slot
+    masked; a lone hub (a star center) gets a Vb=1 bucket of its own
+    width class.  The result is a registered pytree, so it threads
+    through jitted steps as a dynamic argument (shapes/bucket count are
+    static per adjacency).
+    """
+    if isinstance(adj, jax.core.Tracer):
+        raise ValueError(
+            "build_buckets needs a concrete adjacency; precompute it "
+            "outside jit and pass it through the `buckets=` argument")
+    A = np.asarray(adj, dtype=bool)
+    key = _adj_key(A)
+    cached = _lru_get(_BUCKET_CACHE, key)
+    if cached is not None:
+        return cached
+    nbrs = build_neighbors(A)
+    out = _bucket_direction(A.sum(axis=1), np.asarray(nbrs.out_nbr), None,
+                            np.asarray(nbrs.out_mask), out_direction=True)
+    inn = _bucket_direction(A.sum(axis=0), np.asarray(nbrs.in_nbr),
+                            np.asarray(nbrs.in_slot),
+                            np.asarray(nbrs.in_mask), out_direction=False)
+    buckets = NeighborBuckets(out=out, inn=inn)
+    _lru_put(_BUCKET_CACHE, key, buckets)
+    return buckets
 
 
 def gather_edges(x: jnp.ndarray, nbrs: Neighbors,
@@ -354,15 +544,24 @@ _solve_fp_broadcast.defvjp(_solve_fp_broadcast_fwd, _solve_fp_broadcast_bwd)
 
 
 def _solve_traffic_sparse(phi_sp: jnp.ndarray, inject: jnp.ndarray,
-                          nbrs: Neighbors,
-                          impl: str | None = None) -> jnp.ndarray:
+                          nbrs: Neighbors, impl: str | None = None,
+                          buckets: "NeighborBuckets | None" = None
+                          ) -> jnp.ndarray:
     """Solve t = inject + Φᵀ t by in-edge message passing.
 
     phi_sp: [S, V, Dmax] out-edge fractions; inject: [S, V].
-    Each round, node j sums φ_{k->j} t_k over its in-edges — the
-    in-edge weight view (one gather of φ at (in_nbr, in_slot)) is built
-    once, then all rounds run in kernels.ops.edge_rounds.
+    Each round, node j sums φ_{k->j} t_k over its in-edges.  Padded
+    path: the in-edge weight view (one gather of φ at (in_nbr,
+    in_slot)) is built once, then all rounds run in
+    kernels.ops.edge_rounds.  Bucketed path (`buckets=`): the in-degree
+    buckets' wsrc/wslot tiles perform that view gather bucket-by-bucket
+    inside the kernel, so the global [S, V, Dmax_in] view is never
+    materialized — bitwise identical either way.
     """
+    if buckets is not None:
+        return kernel_ops.edge_rounds_bucketed(
+            phi_sp, inject, buckets.inn, reduce="sum",
+            max_rounds=nbrs.V, impl=impl)
     phi_in = phi_sp[:, nbrs.in_nbr, nbrs.in_slot]     # [S, V, Dmax_in]
     return kernel_ops.edge_rounds(phi_in, inject, nbrs.in_nbr,
                                   nbrs.in_mask, reduce="sum",
@@ -370,9 +569,14 @@ def _solve_traffic_sparse(phi_sp: jnp.ndarray, inject: jnp.ndarray,
 
 
 def solve_downstream_sparse(phi_sp: jnp.ndarray, b: jnp.ndarray,
-                            nbrs: Neighbors,
-                            impl: str | None = None) -> jnp.ndarray:
+                            nbrs: Neighbors, impl: str | None = None,
+                            buckets: "NeighborBuckets | None" = None
+                            ) -> jnp.ndarray:
     """Solve ρ = b + Φ ρ by out-edge message passing (marginal recursions)."""
+    if buckets is not None:
+        return kernel_ops.edge_rounds_bucketed(
+            phi_sp, b, buckets.out, reduce="sum", max_rounds=nbrs.V,
+            impl=impl)
     return kernel_ops.edge_rounds(phi_sp, b, nbrs.out_nbr, nbrs.out_mask,
                                   reduce="sum", max_rounds=nbrs.V,
                                   impl=impl)
@@ -446,7 +650,8 @@ def cost_of_carry(net: "CECNetwork", carry: FlowsCarry,
 def flows_carry_and_cost(net: "CECNetwork", phi, method: str = "dense",
                          nbrs: Neighbors | None = None,
                          engine_impl: str | None = None,
-                         psum_axis: str | None = None):
+                         psum_axis: str | None = None,
+                         buckets: NeighborBuckets | None = None):
     """(FlowsCarry, total cost) of one iterate — the drivers' flow
     evaluation, run exactly once per iterate (when it is the candidate,
     or at the boundary for φ⁰).
@@ -465,10 +670,11 @@ def flows_carry_and_cost(net: "CECNetwork", phi, method: str = "dense",
         return flows_carry(fl), cost_of_flows(net, fl)
     nbrs = nbrs if nbrs is not None else build_neighbors(net.adj)
     phi_d_sp, phi_loc, phi_r_sp = _phi_edge_views(phi, nbrs)
-    t_data = _solve_traffic_sparse(phi_d_sp, net.r, nbrs, engine_impl)
+    t_data = _solve_traffic_sparse(phi_d_sp, net.r, nbrs, engine_impl,
+                                   buckets)
     g = t_data * phi_loc
     t_result = _solve_traffic_sparse(phi_r_sp, net.a[:, None] * g, nbrs,
-                                     engine_impl)
+                                     engine_impl, buckets)
     f_data = t_data[..., None] * phi_d_sp         # [S, V, Dmax]
     f_result = t_result[..., None] * phi_r_sp
     F_sp = jnp.sum(f_data + f_result, axis=0)     # [V, Dmax] slots
@@ -514,14 +720,17 @@ def _solve_traffic(phi_nbr: jnp.ndarray, inject: jnp.ndarray,
 
 def compute_flows(net: CECNetwork, phi, method: str = "dense",
                   nbrs: Neighbors | None = None,
-                  engine_impl: str | None = None) -> Flows:
+                  engine_impl: str | None = None,
+                  buckets: NeighborBuckets | None = None) -> Flows:
     """Forward pass of the flow model: φ -> all traffic and flows.
 
     `phi` is a dense `Phi` or (with method="sparse") an edge-slot
     `PhiSparse`, which is consumed directly — no gather, no dense
     [S, V, V+1] intermediate.  engine_impl selects the sparse
     message-passing backend (see the module docstring); ignored by the
-    dense/broadcast engines.
+    dense/broadcast engines.  `buckets=` (sparse only) routes the
+    traffic solves over degree-bucketed tiles — bitwise identical,
+    ΣVb·Db per-round work.
     """
     if isinstance(phi, PhiSparse) and method != "sparse":
         raise ValueError(
@@ -531,7 +740,7 @@ def compute_flows(net: CECNetwork, phi, method: str = "dense",
         return _compute_flows_sparse(net, phi,
                                      nbrs if nbrs is not None
                                      else build_neighbors(net.adj),
-                                     engine_impl)
+                                     engine_impl, buckets)
     adjf = net.adj.astype(phi.data.dtype)
     phi_d_nbr = phi.data[..., :-1] * adjf[None]   # mask non-edges
     phi_loc = phi.data[..., -1]                   # [S, V]
@@ -563,14 +772,15 @@ def _phi_edge_views(phi, nbrs: Neighbors):
 
 
 def _compute_flows_sparse(net: CECNetwork, phi, nbrs: Neighbors,
-                          impl: str | None = None) -> Flows:
+                          impl: str | None = None,
+                          buckets: NeighborBuckets | None = None) -> Flows:
     """Sparse flow engine: all edge quantities in [S, V, Dmax] layout."""
     phi_d_sp, phi_loc, phi_r_sp = _phi_edge_views(phi, nbrs)
 
-    t_data = _solve_traffic_sparse(phi_d_sp, net.r, nbrs, impl)
+    t_data = _solve_traffic_sparse(phi_d_sp, net.r, nbrs, impl, buckets)
     g = t_data * phi_loc
     t_result = _solve_traffic_sparse(phi_r_sp, net.a[:, None] * g, nbrs,
-                                     impl)
+                                     impl, buckets)
 
     f_data = t_data[..., None] * phi_d_sp         # [S, V, Dmax]
     f_result = t_result[..., None] * phi_r_sp
@@ -581,8 +791,10 @@ def _compute_flows_sparse(net: CECNetwork, phi, nbrs: Neighbors,
 
 def total_cost(net: CECNetwork, phi, method: str = "dense",
                nbrs: Neighbors | None = None,
-               engine_impl: str | None = None) -> jnp.ndarray:
-    fl = compute_flows(net, phi, method, nbrs=nbrs, engine_impl=engine_impl)
+               engine_impl: str | None = None,
+               buckets: NeighborBuckets | None = None) -> jnp.ndarray:
+    fl = compute_flows(net, phi, method, nbrs=nbrs, engine_impl=engine_impl,
+                       buckets=buckets)
     return cost_of_flows(net, fl)
 
 
@@ -655,61 +867,105 @@ def shortest_path_tree(adj: np.ndarray, weight: np.ndarray,
 DENSE_V_LIMIT = 200
 
 
-def spt_phi(net: CECNetwork, weight: np.ndarray | None = None) -> Phi:
-    """Feasible loop-free initial strategy φ⁰ (the paper's requirement).
+def _spt_next_hops(net: CECNetwork,
+                   weight: np.ndarray | None = None) -> np.ndarray:
+    """Per-task next hop toward the destination (numpy): [S, V] int,
+    -1 where there is none (the destination itself, unreachable nodes).
 
-    Data: fully local offload (φ⁻_i0 = 1).  Result: forwarded along the
-    shortest-path tree toward each task's destination, with edge weights
-    = marginal link cost at zero flow (propagation-only, no queueing).
+    Small graphs share one Floyd-Warshall; past DENSE_V_LIMIT it's
+    per-unique-destination Dijkstra on the reversed graph (next hop =
+    argmin_j w_ij + dist(j, d); the positive weight floor makes dist
+    strictly decrease along chosen edges, so the tree is a DAG).
     """
     adj = np.asarray(net.adj)
     V, S = net.V, net.S
     if weight is None:
         weight = np.asarray(net.link_cost.d1(jnp.zeros((V, V))))
-    data = np.zeros((S, V, V + 1))
-    data[..., -1] = 1.0
-    result = np.zeros((S, V, V))
     dests = np.asarray(net.dest)
+    nx_all = np.full((S, V), -1, np.int64)
+    idx = np.arange(V)
 
     if V > DENSE_V_LIMIT:
-        # large graphs: Dijkstra distance-to-destination, next hop =
-        # argmin_j w_ij + dist(j, d).  The positive weight floor makes
-        # dist strictly decrease along chosen edges, so the tree is a DAG.
         from scipy.sparse import csr_matrix
         from scipy.sparse.csgraph import dijkstra
         w = np.where(adj, np.maximum(weight, 1e-12), 0.0)
         uniq = np.unique(dests)
         # rows of dijkstra on the reversed graph = distances TO d
         dist_to = dijkstra(csr_matrix(w.T), indices=uniq)       # [U, V]
-        idx = np.arange(V)
         for k, d in enumerate(uniq):
             cand = np.where(adj, w + dist_to[k][None, :], np.inf)
             nx = np.argmin(cand, axis=1)
             ok = (idx != d) & np.isfinite(np.min(cand, axis=1))
+            row = np.where(ok, nx, -1)
             for s in np.nonzero(dests == d)[0]:
-                result[s, ok, nx[ok]] = 1.0
-        return Phi(jnp.asarray(data), jnp.asarray(result))
+                nx_all[s] = row
+        return nx_all
 
     # small graphs: one Floyd-Warshall shared by every task
     _, nxt = _floyd_warshall(adj, weight)
-    idx = np.arange(V)
     for s in range(S):
         d = int(dests[s])
         nx = nxt[:, d]
         ok = (idx != d) & (nx >= 0)
-        result[s, ok, nx[ok]] = 1.0
+        nx_all[s] = np.where(ok, nx, -1)
+    return nx_all
+
+
+def spt_phi(net: CECNetwork, weight: np.ndarray | None = None) -> Phi:
+    """Feasible loop-free initial strategy φ⁰ (the paper's requirement).
+
+    Data: fully local offload (φ⁻_i0 = 1).  Result: forwarded along the
+    shortest-path tree toward each task's destination, with edge weights
+    = marginal link cost at zero flow (propagation-only, no queueing).
+
+    Dense [S, V, V] construction — at scale use `spt_phi_sparse` /
+    `spt_result_slots`, which write the SAME one-hot rows straight into
+    edge slots without ever materializing this layout.
+    """
+    V, S = net.V, net.S
+    nx_all = _spt_next_hops(net, weight)
+    data = np.zeros((S, V, V + 1))
+    data[..., -1] = 1.0
+    result = np.zeros((S, V, V))
+    idx = np.arange(V)
+    for s in range(S):
+        ok = nx_all[s] >= 0
+        result[s, idx[ok], nx_all[s][ok]] = 1.0
     return Phi(jnp.asarray(data), jnp.asarray(result))
+
+
+def spt_result_slots(net: CECNetwork, nbrs: Neighbors,
+                     weight: np.ndarray | None = None) -> jnp.ndarray:
+    """The SPT result rows of `spt_phi`, built NATIVELY in the edge-slot
+    layout: [S, V, Dmax] with 1.0 at the slot of each node's next hop.
+
+    Bitwise identical to `gather_edges(spt_phi(net).result, nbrs)` —
+    the rows are exact {0, 1} one-hots, so writing them straight into
+    slots loses nothing — without the dense [S, V, V] detour (256 GB at
+    S=32, V=10⁴).
+    """
+    nx_all = _spt_next_hops(net, weight)                        # [S, V]
+    out_nbr = np.asarray(nbrs.out_nbr)
+    out_mask = np.asarray(nbrs.out_mask)
+    hit = (out_nbr[None] == nx_all[:, :, None]) \
+        & out_mask[None] & (nx_all[:, :, None] >= 0)            # [S, V, D]
+    return jnp.asarray(hit.astype(np.float64))
 
 
 def spt_phi_sparse(net: CECNetwork, nbrs: Neighbors | None = None,
                    weight: np.ndarray | None = None) -> PhiSparse:
     """`spt_phi` delivered in the edge-slot layout (boundary helper).
 
-    The dense construction is the reference; the conversion is the only
-    [S, V, V+1] materialization and happens once, outside any loop.
+    Built natively slot-by-slot (data slots zero, local column one,
+    result one-hots via `spt_result_slots`) — bitwise identical to
+    `phi_to_sparse(spt_phi(net), nbrs)` with no [S, V, V+1] array
+    anywhere, which is what lets V=10⁴ scenarios initialize at all.
     """
     nbrs = build_neighbors(net.adj) if nbrs is None else nbrs
-    return phi_to_sparse(spt_phi(net, weight), nbrs)
+    S, V, D = net.S, net.V, nbrs.Dmax
+    return PhiSparse(data=jnp.zeros((S, V, D)),
+                     local=jnp.ones((S, V, 1)),
+                     result=spt_result_slots(net, nbrs, weight))
 
 
 def offload_phi(net: CECNetwork, compute_nodes, weight: np.ndarray | None = None
@@ -884,8 +1140,9 @@ def refeasibilize_sparse(net: CECNetwork, phi_sp: PhiSparse,
     UNLESS the empty row locally computes restored exogenous input and
     would silently drop its result flow (see `refeasibilize`).
     `rebuild_tasks` force-rebuilds specific tasks from the SPT (see
-    `refeasibilize`).  All slot-level except the one dense SPT
-    construction at the boundary.
+    `refeasibilize`).  All slot-level including the SPT fallback rows
+    (`spt_result_slots` writes the one-hots natively), so churn replay
+    never materializes a dense [S, V, V] array even at V=10⁴.
     """
     new_nbrs = build_neighbors(net.adj)
     remap, valid = _slot_remap(nbrs, new_nbrs)
@@ -918,7 +1175,7 @@ def refeasibilize_sparse(net: CECNetwork, phi_sp: PhiSparse,
     broken = jnp.any(damaged, axis=-1)                     # [S]
     if rebuild_tasks is not None:
         broken = broken | rebuild_tasks
-    spt_sp = gather_edges(spt_phi(net).result, new_nbrs)
+    spt_sp = spt_result_slots(net, new_nbrs)
     result = result / jnp.maximum(rsum[..., None], 1e-30)
     result = jnp.where(rsum[..., None] > 1e-12, result, 0.0)
     result = jnp.where(broken[:, None, None], spt_sp, result)

@@ -34,9 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .events import ChurnSchedule, ChurnState, DestRedraw
-from .network import (CECNetwork, Neighbors, PhiSparse, build_neighbors,
-                      is_loop_free, refeasibilize_sparse, sparse_to_phi,
-                      spt_phi_sparse)
+from .network import (CECNetwork, Neighbors, PhiSparse, build_buckets,
+                      build_neighbors, is_loop_free, refeasibilize_sparse,
+                      sparse_to_phi, spt_phi_sparse)
 from .sgp import init_run_state, run_chunk
 from . import distributed as dist
 
@@ -160,12 +160,20 @@ class ReplayEngine:
                  driver: str = "run", engine_impl: Optional[str] = None,
                  min_scale: float = 0.05, mesh=None,
                  run_opts: Optional[dict] = None,
-                 loop_driver: Optional[str] = None):
+                 loop_driver: Optional[str] = None,
+                 bucketed: bool = False):
         if driver not in ("run", "distributed"):
             raise ValueError(f"unknown replay driver {driver!r}")
+        if bucketed and driver != "run":
+            raise ValueError("bucketed replay needs driver='run' (the "
+                             "distributed step shards the padded tile)")
         self.churn = ChurnState(net)
         self.net = net
         self.nbrs = build_neighbors(net.adj)
+        # degree-bucketed mode: rebuilt beside nbrs on every topology
+        # event (bucket membership is adjacency-derived, like the tiles)
+        self.bucketed = bucketed
+        self.buckets = build_buckets(net.adj) if bucketed else None
         self.driver = driver
         self.engine_impl = engine_impl
         self.min_scale = min_scale
@@ -195,7 +203,8 @@ class ReplayEngine:
             self.state: object = init_run_state(
                 self.net, phi_sp, min_scale=self.min_scale,
                 method="sparse", engine_impl=self.engine_impl,
-                nbrs=self.nbrs)
+                nbrs=self.nbrs, bucketed=self.bucketed,
+                buckets=self.buckets)
         else:
             self.state = dist.init_distributed_state(
                 self.net, phi_sp, mesh=self.mesh, method="sparse",
@@ -266,6 +275,8 @@ class ReplayEngine:
                 rebuild = jnp.asarray(rebuild)
             phi, self.nbrs = refeasibilize_sparse(net_new, phi, self.nbrs,
                                                   rebuild_tasks=rebuild)
+            if self.bucketed:
+                self.buckets = build_buckets(net_new.adj)
         self.net = net_new
         self.cost_log.extend(self.state.costs)
         if self.driver == "distributed" and kind != "topology":
@@ -331,7 +342,8 @@ class ReplayEngine:
         cold0 = spt_phi_sparse(self.net, self.nbrs)
         cold = init_run_state(self.net, cold0, min_scale=self.min_scale,
                               method="sparse", engine_impl=self.engine_impl,
-                              nbrs=self.nbrs)
+                              nbrs=self.nbrs, bucketed=self.bucketed,
+                              buckets=self.buckets)
         # the probe must stay invisible: no user callback firing, no
         # tol early-exit shortening its budget vs the warm segment
         probe_opts = {k: v for k, v in self.run_opts.items()

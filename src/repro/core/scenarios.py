@@ -19,7 +19,8 @@ import numpy as np
 from . import topologies
 from .costs import Cost, SAT
 from .network import (DENSE_V_LIMIT, CECNetwork, Phi, build_neighbors,
-                      compute_flows, phi_to_sparse, spt_phi)
+                      compute_flows, phi_to_sparse, spt_phi,
+                      spt_phi_sparse)
 
 
 @dataclasses.dataclass
@@ -54,6 +55,13 @@ TABLE_II = {
     # impractical.  Same sampling recipe, wider graphs, fewer sources.
     "sw_1000": ScenarioSpec("small_world", 1000, 64, 10, 5, "queue", "queue", 30, 30),
     "grid_1024": ScenarioSpec("grid", 1024, 64, 10, 5, "queue", "queue", 30, 30),
+    # Power-law rows: Barabási–Albert graphs whose degree spread (most
+    # nodes at m=2..4, hubs at O(√V)) is the worst case for the global
+    # [V, Dmax] padded tile and the home turf of the degree-bucketed
+    # engine (see network.build_buckets).  ba_10000 is the V = 10⁴
+    # scaling target.
+    "ba_1000": ScenarioSpec("barabasi_albert", 1000, 64, 10, 5, "queue", "queue", 30, 30),
+    "ba_10000": ScenarioSpec("barabasi_albert", 10000, 16, 5, 5, "queue", "queue", 30, 30),
 }
 
 
@@ -65,6 +73,8 @@ def _mk_adj(spec: ScenarioSpec) -> np.ndarray:
         V = spec.V or 100
         # keep the Table II SW-100 edge counts; scale them linearly with V
         return gen(V=V, n_short=V, n_long=int(1.2 * V), seed=spec.seed)
+    if spec.topology == "barabasi_albert":
+        return gen(V=spec.V or 1000, m=2, seed=spec.seed)
     if spec.topology == "grid":
         side = int(round((spec.V or 1024) ** 0.5))
         if side * side != (spec.V or 1024):
@@ -123,15 +133,19 @@ def make_scenario(spec: ScenarioSpec, rate_scale: float = 1.0,
 def enforce_feasibility(net: CECNetwork, margin: float = 0.75,
                         phi0: Phi | None = None) -> CECNetwork:
     """Scale queue capacities so φ⁰ keeps flows below margin*SAT*capacity."""
-    if phi0 is None:
-        phi0 = spt_phi(net)
     if net.V > DENSE_V_LIMIT:
-        # large graphs: evaluate φ⁰ through the edge-slot layout (the
-        # dense φ⁰ exists only here, at the construction boundary)
+        # large graphs: build φ⁰ and evaluate it NATIVELY in the
+        # edge-slot layout — no [S, V, V+1] array exists at any point
+        # (at V = 10⁴ the dense φ⁰ alone would be tens of GB)
         nbrs = build_neighbors(net.adj)
-        fl = compute_flows(net, phi_to_sparse(phi0, nbrs), "sparse",
-                           nbrs=nbrs)
+        if phi0 is None:
+            phi0_sp = spt_phi_sparse(net, nbrs)
+        else:
+            phi0_sp = phi_to_sparse(phi0, nbrs)
+        fl = compute_flows(net, phi0_sp, "sparse", nbrs=nbrs)
     else:
+        if phi0 is None:
+            phi0 = spt_phi(net)
         fl = compute_flows(net, phi0)
     limit = margin * SAT
     if net.link_cost.family == "queue":

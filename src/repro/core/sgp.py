@@ -37,7 +37,8 @@ import numpy as np
 from .costs import Cost
 from .marginals import BIG, Marginals, compute_marginals
 from .network import (CECNetwork, Flows, FlowsCarry, Neighbors, Phi,
-                      PhiSparse, _phi_edge_views, build_neighbors,
+                      PhiSparse, _phi_edge_views, build_buckets,
+                      build_neighbors,
                       compute_flows, cost_of_flows, flows_carry_and_cost,
                       flows_carry_and_cost_jit, gather_edges,
                       link_cost_sparse, mask_slots, phi_to_sparse,
@@ -254,25 +255,37 @@ def _project(phi_rows: jnp.ndarray, delta: jnp.ndarray, M: jnp.ndarray,
 
 # ------------------------------------------------- sparse (neighbor-list) ops
 def _taint_sparse(sup: jnp.ndarray, rho: jnp.ndarray, nbrs: Neighbors,
-                  impl: Optional[str] = None) -> jnp.ndarray:
+                  impl: Optional[str] = None, buckets=None) -> jnp.ndarray:
     """_taint in edge-slot layout: sup [S, V, Dmax], gather-based rounds.
 
     The boolean-or closure runs through the shared edge_rounds kernel
-    with a {0, 1} float encoding and a max reduce."""
+    with a {0, 1} float encoding and a max reduce.  `buckets` (a
+    network.NeighborBuckets) runs it over degree-bucketed tiles —
+    bitwise identical, ΣVb·Db per-round work."""
     improper = sup & (rho[:, nbrs.out_nbr] >= rho[:, :, None])
     has_improper = jnp.any(improper, axis=-1)
-    t = kernel_ops.edge_rounds(
-        sup.astype(jnp.float32), has_improper.astype(jnp.float32),
-        nbrs.out_nbr, nbrs.out_mask, reduce="max", max_rounds=nbrs.V,
-        impl=impl)
+    if buckets is not None:
+        t = kernel_ops.edge_rounds_bucketed(
+            sup.astype(jnp.float32), has_improper.astype(jnp.float32),
+            buckets.out, reduce="max", max_rounds=nbrs.V, impl=impl)
+    else:
+        t = kernel_ops.edge_rounds(
+            sup.astype(jnp.float32), has_improper.astype(jnp.float32),
+            nbrs.out_nbr, nbrs.out_mask, reduce="max", max_rounds=nbrs.V,
+            impl=impl)
     return t > 0.5
 
 
 def _max_path_len_sparse(sup: jnp.ndarray, nbrs: Neighbors,
-                         impl: Optional[str] = None) -> jnp.ndarray:
+                         impl: Optional[str] = None,
+                         buckets=None) -> jnp.ndarray:
     """_max_path_len in edge-slot layout: a max reduce over 1 + h[nbr]
     (shift=1) with zero inject reproduces the longest-path recursion."""
     h0 = jnp.zeros(sup.shape[:2], dtype=jnp.float32)
+    if buckets is not None:
+        return kernel_ops.edge_rounds_bucketed(
+            sup.astype(jnp.float32), h0, buckets.out, reduce="max",
+            shift=1.0, max_rounds=nbrs.V, impl=impl)
     return kernel_ops.edge_rounds(
         sup.astype(jnp.float32), h0, nbrs.out_nbr, nbrs.out_mask,
         reduce="max", shift=1.0, max_rounds=nbrs.V, impl=impl)
@@ -280,7 +293,8 @@ def _max_path_len_sparse(sup: jnp.ndarray, nbrs: Neighbors,
 
 def _taint_pair_sparse(sup_a: jnp.ndarray, rho_a: jnp.ndarray,
                        sup_b: jnp.ndarray, rho_b: jnp.ndarray,
-                       nbrs: Neighbors, impl: Optional[str] = None):
+                       nbrs: Neighbors, impl: Optional[str] = None,
+                       buckets=None):
     """Both taint recursions (data + result) in ONE batched launch.
 
     The two `_taint_sparse` problems share the neighbor tiles, so they
@@ -303,12 +317,13 @@ def _taint_pair_sparse(sup_a: jnp.ndarray, rho_a: jnp.ndarray,
         [(sup_a.astype(dt), has_improper(sup_a, rho_a).astype(dt)),
          (sup_b.astype(dt), has_improper(sup_b, rho_b).astype(dt))],
         nbrs.out_nbr, nbrs.out_mask, reduce="max", max_rounds=nbrs.V,
-        impl=impl)
+        impl=impl, buckets=buckets.out if buckets is not None else None)
     return t_a > 0.5, t_b > 0.5
 
 
 def _max_path_len_pair_sparse(sup_a: jnp.ndarray, sup_b: jnp.ndarray,
-                              nbrs: Neighbors, impl: Optional[str] = None):
+                              nbrs: Neighbors, impl: Optional[str] = None,
+                              buckets=None):
     """Both longest-path recursions (result + data) in ONE batched
     launch — the `_taint_pair_sparse` trick applied to
     `_max_path_len_sparse` (same bitwise-equivalence argument)."""
@@ -316,22 +331,26 @@ def _max_path_len_pair_sparse(sup_a: jnp.ndarray, sup_b: jnp.ndarray,
     return kernel_ops.edge_rounds_stacked(
         [(sup_a.astype(jnp.float32), h0), (sup_b.astype(jnp.float32), h0)],
         nbrs.out_nbr, nbrs.out_mask, reduce="max", shift=1.0,
-        max_rounds=nbrs.V, impl=impl)
+        max_rounds=nbrs.V, impl=impl,
+        buckets=buckets.out if buckets is not None else None)
 
 
 def blocked_sets_sparse(net: CECNetwork, phi, mg: Marginals,
-                        nbrs: Neighbors, engine_impl: Optional[str] = None):
+                        nbrs: Neighbors, engine_impl: Optional[str] = None,
+                        buckets=None):
     """`blocked_sets` over edge slots: permitted masks [S, V, Dmax(+1)].
 
     `phi` may be a dense `Phi` (gathered onto the slots) or an edge-slot
-    `PhiSparse` (supports read off the slots in place)."""
+    `PhiSparse` (supports read off the slots in place).  `buckets` (a
+    network.NeighborBuckets) runs the taint closures over degree-
+    bucketed tiles — bitwise identical at ΣVb·Db per-round work."""
     phi_d_sp, _, phi_r_sp = _phi_edge_views(phi, nbrs)
     sup_d = phi_d_sp > SUPPORT_TOL
     sup_r = phi_r_sp > SUPPORT_TOL
 
     taint_d, taint_r = _taint_pair_sparse(sup_d, mg.rho_data,
                                           sup_r, mg.rho_result,
-                                          nbrs, engine_impl)
+                                          nbrs, engine_impl, buckets=buckets)
 
     def permitted(sup, rho, taint):
         uphill = rho[:, nbrs.out_nbr] >= rho[:, :, None]
@@ -363,7 +382,7 @@ def _sgp_propose_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
                       proj_impl: Optional[str] = None,
                       engine_impl: Optional[str] = None,
                       nbrs: Optional[Neighbors] = None,
-                      slot_F: bool = False):
+                      slot_F: bool = False, buckets=None):
     """The projection half of one Algorithm-1 iteration: given the
     CURRENT iterate φ and its (already measured, psum'ed if distributed)
     flows `fl`, compute marginals, blocked sets, the Eq. 16 scaling and
@@ -384,7 +403,8 @@ def _sgp_propose_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
         raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
                          "precomputed outside jit")
     mg = compute_marginals(net, phi, fl, method, nbrs=nbrs,
-                           engine_impl=engine_impl, slot_F=slot_F)
+                           engine_impl=engine_impl, slot_F=slot_F,
+                           buckets=buckets)
 
     S, V = net.S, net.V
     is_dest = jnp.arange(V)[None] == net.dest[:, None]
@@ -405,7 +425,8 @@ def _sgp_propose_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
     if use_blocking:
         if sparse:
             perm_d, perm_r = blocked_sets_sparse(net, phi, mg, nbrs,
-                                                 engine_impl)
+                                                 engine_impl,
+                                                 buckets=buckets)
         else:
             perm_d, perm_r = blocked_sets(net, phi, mg)
     else:
@@ -458,8 +479,9 @@ def _sgp_propose_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
             # recursions ride one stacked launch, bitwise = the
             # unstacked pair).
             if sparse:
-                h_r, h_d = _max_path_len_pair_sparse(sup_r, sup_d, nbrs,
-                                                     engine_impl)  # [S, V]
+                h_r, h_d = _max_path_len_pair_sparse(
+                    sup_r, sup_d, nbrs, engine_impl,
+                    buckets=buckets)                       # [S, V]
                 hj_r = h_r[:, nbrs.out_nbr]                # h at edge head
                 hj_d = h_d[:, nbrs.out_nbr]
             else:
@@ -543,7 +565,8 @@ def _sgp_step_impl(net: CECNetwork, phi, consts: SGPConsts,
                    psum_axis: Optional[str] = None,
                    proj_impl: Optional[str] = None,
                    engine_impl: Optional[str] = None,
-                   nbrs: Optional[Neighbors] = None):
+                   nbrs: Optional[Neighbors] = None,
+                   buckets=None):
     """One synchronized iteration of Algorithm 1 over every (node, task).
 
     mask_* : [S, V] bool — rows that update this iteration (Theorem 2
@@ -571,6 +594,11 @@ def _sgp_step_impl(net: CECNetwork, phi, consts: SGPConsts,
     nbrs   : precomputed `Neighbors`; required when method="sparse"
              (the whole iteration then runs in [S, V, Dmax] edge-slot
              layout).
+    buckets : optional `network.NeighborBuckets` (sparse method only):
+             every fixed-point recursion of the step then iterates
+             degree-bucketed [Vb, Db] tiles instead of the [V, Dmax]
+             tile — bitwise-identical iterates at ΣVb·Db per-round
+             work (the power-law scaling mode).
 
     φ layout: a dense `Phi` always works; with method="sparse" an
     edge-slot `PhiSparse` is consumed AND produced natively — the step
@@ -578,7 +606,8 @@ def _sgp_step_impl(net: CECNetwork, phi, consts: SGPConsts,
     path instead gathers on entry and scatters back on exit, and is the
     bitwise reference for the native layout).
     """
-    fl = compute_flows(net, phi, method, nbrs=nbrs, engine_impl=engine_impl)
+    fl = compute_flows(net, phi, method, nbrs=nbrs, engine_impl=engine_impl,
+                       buckets=buckets)
     if psum_axis is not None:
         # Distributed mode (shard_map over the task axis): per-task
         # traffic is local; total link flow / workload — the only
@@ -591,7 +620,7 @@ def _sgp_step_impl(net: CECNetwork, phi, consts: SGPConsts,
         allowed_data=allowed_data, allowed_result=allowed_result,
         method=method, use_blocking=use_blocking, scaling=scaling,
         sigma=sigma, kappa=kappa, proj_impl=proj_impl,
-        engine_impl=engine_impl, nbrs=nbrs)
+        engine_impl=engine_impl, nbrs=nbrs, buckets=buckets)
     return new_phi, {"cost": cost_of_flows(net, fl), "flows": fl,
                      "marginals": mg}
 
@@ -619,7 +648,7 @@ def _sgp_step_flows_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
                          proj_impl: Optional[str] = None,
                          engine_impl: Optional[str] = None,
                          nbrs: Optional[Neighbors] = None,
-                         with_aux: bool = False):
+                         buckets=None, with_aux: bool = False):
     """One DRIVER iteration: propose the candidate from the current
     iterate's carried flows, then measure the candidate (flows + cost).
 
@@ -640,11 +669,11 @@ def _sgp_step_flows_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
         allowed_data=allowed_data, allowed_result=allowed_result,
         method=method, use_blocking=use_blocking, scaling=scaling,
         sigma=sigma, kappa=kappa, proj_impl=proj_impl,
-        engine_impl=engine_impl, nbrs=nbrs,
+        engine_impl=engine_impl, nbrs=nbrs, buckets=buckets,
         slot_F=(method == "sparse"))
     carry_new, cost_new = flows_carry_and_cost(
         net, phi_new, method, nbrs=nbrs, engine_impl=engine_impl,
-        psum_axis=psum_axis)
+        psum_axis=psum_axis, buckets=buckets)
     if with_aux:
         return phi_new, carry_new, cost_new, mg
     return phi_new, carry_new, cost_new
@@ -733,28 +762,40 @@ class RunState:
     rng: Optional[jax.Array] = None
     stopped: bool = False            # sigma blow-up / tol early exit
     flows: Optional[FlowsCarry] = None   # flows of `phi` (device carry)
+    buckets: object = None           # NeighborBuckets (bucketed sparse mode)
 
 
 def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
                    method: str = "dense", rng: Optional[jax.Array] = None,
                    engine_impl: Optional[str] = None,
-                   nbrs: Optional[Neighbors] = None) -> RunState:
+                   nbrs: Optional[Neighbors] = None,
+                   bucketed: bool = False, buckets=None) -> RunState:
     """Set up the resumable driver state exactly as `run` would: build
     (or accept) the neighbor lists, convert a dense φ⁰ to slots under
     method="sparse", evaluate φ⁰'s flows + T⁰ (one solve, both carried)
-    and the Eq. 16 constants."""
+    and the Eq. 16 constants.
+
+    bucketed=True (sparse method only) additionally builds (or accepts
+    via `buckets`) the degree-bucketed `NeighborBuckets` tiles and runs
+    EVERY fixed-point recursion of the driver over them — bitwise the
+    padded trajectory at ΣVb·Db per-round work (the power-law scaling
+    mode; see core.network's layout docstring)."""
     if method == "sparse":
         nbrs = build_neighbors(net.adj) if nbrs is None else nbrs
+        if bucketed and buckets is None:
+            buckets = build_buckets(net.adj)
     else:
         nbrs = None
+        buckets = None
     if method == "sparse" and not isinstance(phi0, PhiSparse):
         phi0 = phi_to_sparse(phi0, nbrs)   # boundary: iterate in slots
     fl0, T0 = flows_carry_and_cost_jit(net, phi0, method, nbrs=nbrs,
-                                       engine_impl=engine_impl)
+                                       engine_impl=engine_impl,
+                                       buckets=buckets)
     consts = make_consts(net, T0, min_scale)
     return RunState(phi=phi0, consts=consts, nbrs=nbrs, method=method,
                     costs=[float(T0)], min_scale=min_scale, rng=rng,
-                    flows=fl0)
+                    flows=fl0, buckets=buckets)
 
 
 def _accept_update_impl(phi_new, fl_new, cost_new, phi, fl, sigma, prev,
@@ -816,7 +857,8 @@ def _entry_flows(net: CECNetwork, state: RunState,
         return state.flows
     fl, _ = flows_carry_and_cost_jit(net, state.phi, state.method,
                                      nbrs=state.nbrs,
-                                     engine_impl=engine_impl)
+                                     engine_impl=engine_impl,
+                                     buckets=state.buckets)
     return fl
 
 
@@ -894,7 +936,7 @@ def run_chunk(net: CECNetwork, state: RunState, n_iters: int,
             allowed_data=allowed_data, allowed_result=allowed_result,
             method=method, use_blocking=use_blocking, scaling=scaling,
             sigma=jnp.float32(sigma), kappa=kappa, proj_impl=proj_impl,
-            engine_impl=engine_impl, nbrs=nbrs,
+            engine_impl=engine_impl, nbrs=nbrs, buckets=state.buckets,
             with_aux=callback is not None)
         phi_new, fl_new, cost_new = out[:3]
         new_cost = float(cost_new)   # the host driver's per-iteration sync
@@ -999,7 +1041,8 @@ def _run_chunk_fused(net: CECNetwork, state: RunState, fl, n_iters: int,
             allowed_data=allowed_data, allowed_result=allowed_result,
             method=state.method, use_blocking=use_blocking,
             scaling=scaling, sigma=sigma, kappa=kappa,
-            proj_impl=proj_impl, engine_impl=engine_impl, nbrs=nbrs)
+            proj_impl=proj_impl, engine_impl=engine_impl, nbrs=nbrs,
+            buckets=state.buckets)
         (phi, fl, sigma, prev, n_costs, n_rej, stopped, rng, take,
          live) = _accept_update(phi_new, fl_new, cost_new, phi, fl,
                                 sigma, prev, n_costs, n_rej, stopped,
@@ -1024,7 +1067,7 @@ def run(net: CECNetwork, phi0, n_iters: int = 200,
         refresh_every: int = 20, scaling: str = "adaptive",
         kappa: float = 0.0, proj_impl: Optional[str] = None,
         engine_impl: Optional[str] = None,
-        driver: Optional[str] = None):
+        driver: Optional[str] = None, bucketed: bool = False):
     """Driver around the jitted step.
 
     driver="fused" (the default when no callback is given) runs each
@@ -1037,7 +1080,10 @@ def run(net: CECNetwork, phi0, n_iters: int = 200,
     method="sparse" precomputes the neighbor lists once (numpy, outside
     jit), converts φ⁰ to the edge-slot `PhiSparse` layout at the
     boundary, and iterates NATIVELY in that layout — no [S, V, V+1]
-    array is materialized anywhere in the loop.  The returned φ matches
+    array is materialized anywhere in the loop.  bucketed=True
+    additionally builds degree-bucketed `NeighborBuckets` tiles and
+    runs every fixed-point recursion over them (bitwise the padded
+    trajectory at ΣVb·Db per-round work — the power-law scaling mode).  The returned φ matches
     the input layout: a dense `Phi` in, a dense `Phi` back (one
     conversion after the loop); a `PhiSparse` in, a `PhiSparse` back.
     engine_impl picks the message-passing backend
@@ -1079,7 +1125,8 @@ def run(net: CECNetwork, phi0, n_iters: int = 200,
     """
     dense_in = not isinstance(phi0, PhiSparse)
     state = init_run_state(net, phi0, min_scale=min_scale, method=method,
-                           rng=rng, engine_impl=engine_impl)
+                           rng=rng, engine_impl=engine_impl,
+                           bucketed=bucketed)
     state = run_chunk(net, state, n_iters, variant=variant, beta=beta,
                       allowed_data=allowed_data,
                       allowed_result=allowed_result,

@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .ref import fold_reduce
+
 
 def _kernel(nbr_ref, mask_ref, w_ref, b_ref, out_ref, rounds_ref, *,
             reduce: str, shift: float, max_rounds: int):
@@ -56,8 +58,8 @@ def _kernel(nbr_ref, mask_ref, w_ref, b_ref, out_ref, rounds_ref, *,
         # gather the state at every edge head: [bt, V] -> [bt, V, Dmax]
         msg = w * (jnp.take(x, nbr, axis=1) + shift)
         if reduce == "sum":
-            return b + jnp.sum(msg, axis=-1)
-        return jnp.maximum(b, jnp.max(msg, axis=-1))
+            return b + fold_reduce(msg, "sum")
+        return jnp.maximum(b, fold_reduce(msg, "max"))
 
     def cond(carry):
         k, x, x_prev = carry
@@ -116,6 +118,119 @@ def edge_rounds(w_sp: jnp.ndarray, inject: jnp.ndarray, nbr: jnp.ndarray,
                    jax.ShapeDtypeStruct((nb, 1), jnp.int32)],
         interpret=interpret,
     )(nbr, mask.astype(jnp.int32), w_sp, inject)
+    out = out[:S]
+    if return_rounds:
+        return out, jnp.max(rounds)
+    return out
+
+
+def _bucketed_kernel(*refs, reduce: str, shift: float, max_rounds: int,
+                     n_buckets: int):
+    inv = refs[0][...][0]                               # [V] int32
+    w = refs[1][...].astype(jnp.float32)                # [bt, V, Dmax]
+    b = refs[2][...].astype(jnp.float32)                # [bt, V]
+    out_ref, rounds_ref = refs[3 + 5 * n_buckets], refs[4 + 5 * n_buckets]
+    tiles = []
+    for k in range(n_buckets):
+        nodes_ref, nbr_ref, wsrc_ref, wslot_ref, mask_ref = \
+            refs[3 + 5 * k:8 + 5 * k]
+        nodes = nodes_ref[...][0]                       # [Vb]
+        nbr_b = nbr_ref[...]                            # [Vb, Db]
+        # the bucket's weight tile: same values the padded row holds in
+        # its first Db slots (out recursions) or the (in_nbr, in_slot)
+        # view of the sender rows (in recursions) — gathered ONCE
+        wt = w[:, wsrc_ref[...], wslot_ref[...]]        # [bt, Vb, Db]
+        wt = jnp.where(mask_ref[...] != 0, wt, 0.0)
+        tiles.append((nodes, nbr_b, wt, jnp.take(b, nodes, axis=1)))
+
+    def step(x):
+        ys = []
+        for nodes, nbr_b, wt, bb in tiles:
+            msg = wt * (jnp.take(x, nbr_b, axis=1) + shift)
+            red = fold_reduce(msg, reduce)
+            ys.append(bb + red if reduce == "sum"
+                      else jnp.maximum(bb, red))
+        y = jnp.concatenate(ys, axis=-1)                # bucket order
+        return jnp.take(y, inv, axis=1)                 # node order
+
+    def cond(carry):
+        k, x, x_prev = carry
+        return jnp.logical_and(k < max_rounds, jnp.any(x != x_prev))
+
+    def body(carry):
+        k, x, _ = carry
+        return k + 1, step(x), x
+
+    k, x, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(1, jnp.int32), step(b), b))
+    out_ref[...] = x.astype(out_ref.dtype)
+    rounds_ref[0, 0] = k
+
+
+@functools.partial(
+    jax.jit, static_argnames=("reduce", "shift", "max_rounds",
+                              "block_tasks", "interpret", "return_rounds"))
+def edge_rounds_bucketed(w_sp: jnp.ndarray, inject: jnp.ndarray, buckets,
+                         reduce: str = "sum", shift: float = 0.0,
+                         max_rounds: int | None = None, block_tasks: int = 8,
+                         interpret: bool = False,
+                         return_rounds: bool = False):
+    """`edge_rounds` over degree-bucketed tiles (core.network
+    EdgeBuckets): w_sp [S, V, Dmax] out-edge-slot weights, inject
+    [S, V] -> x [S, V].
+
+    One launch, same grid over task blocks as the padded kernel, but
+    each round iterates the buckets' [Vb, Db] tiles (python-unrolled —
+    bucket count and shapes are static) instead of one [V, Dmax] tile:
+    per-round work is ΣVb·Db ≈ E lanes instead of V·Dmax.  Bitwise
+    identical to the padded kernel per row (`fold_reduce` makes the row
+    reduction width-stable); the while-loop early exit runs on the full
+    re-assembled [bt, V] state, so round counts match exactly.
+    """
+    if reduce not in ("sum", "max"):
+        raise ValueError(f"unknown reduce {reduce!r}")
+    S, V, D = w_sp.shape
+    max_rounds = V if max_rounds is None else max_rounds
+    out_dtype = jnp.promote_types(w_sp.dtype, inject.dtype)
+    bt = max(min(block_tasks, S), 1)
+    Sp = ((S + bt - 1) // bt) * bt
+    if Sp != S:
+        w_sp = jnp.pad(w_sp, ((0, Sp - S), (0, 0), (0, 0)))
+        inject = jnp.pad(inject, ((0, Sp - S), (0, 0)))
+    nb = Sp // bt
+    n_buckets = len(buckets.nbr)
+
+    kernel = functools.partial(_bucketed_kernel, reduce=reduce,
+                               shift=float(shift),
+                               max_rounds=int(max_rounds),
+                               n_buckets=n_buckets)
+    in_specs = [
+        pl.BlockSpec((1, V), lambda i: (0, 0)),         # inv (resident)
+        pl.BlockSpec((bt, V, D), lambda i: (i, 0, 0)),  # weights
+        pl.BlockSpec((bt, V), lambda i: (i, 0)),        # inject
+    ]
+    args = [jnp.reshape(buckets.inv, (1, V)), w_sp, inject]
+    for nodes, nbr_b, wsrc, wslot, mask_b in zip(
+            buckets.nodes, buckets.nbr, buckets.wsrc, buckets.wslot,
+            buckets.mask):
+        Vb, Db = nbr_b.shape
+        in_specs += [pl.BlockSpec((1, Vb), lambda i: (0, 0)),
+                     pl.BlockSpec((Vb, Db), lambda i: (0, 0)),
+                     pl.BlockSpec((Vb, Db), lambda i: (0, 0)),
+                     pl.BlockSpec((Vb, Db), lambda i: (0, 0)),
+                     pl.BlockSpec((Vb, Db), lambda i: (0, 0))]
+        args += [jnp.reshape(nodes, (1, Vb)), nbr_b, wsrc, wslot,
+                 mask_b.astype(jnp.int32)]
+    out, rounds = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((bt, V), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Sp, V), out_dtype),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.int32)],
+        interpret=interpret,
+    )(*args)
     out = out[:S]
     if return_rounds:
         return out, jnp.max(rounds)

@@ -16,6 +16,7 @@ import numpy as np
 from . import ref as _ref
 from .decode_attention import decode_attention as _decode_pallas
 from .edge_rounds import edge_rounds as _rounds_pallas
+from .edge_rounds import edge_rounds_bucketed as _rounds_bucketed_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .moe_gmm import moe_gmm as _gmm_pallas
 from .simplex_project import simplex_project as _proj_pallas
@@ -105,9 +106,42 @@ def edge_rounds(w_sp, inject, nbr, mask, reduce: str = "sum",
                           return_rounds=return_rounds, **kw)
 
 
+def edge_rounds_bucketed(w_sp, inject, buckets, reduce: str = "sum",
+                         shift: float = 0.0,
+                         max_rounds: Optional[int] = None,
+                         impl: Optional[str] = None,
+                         return_rounds: bool = False, **kw):
+    """`edge_rounds` over degree-bucketed tiles (core.network
+    `EdgeBuckets`): same fixed point, ΣVb·Db per-round work instead of
+    V·Dmax, bitwise identical per row (both paths reduce rows through
+    `kernels.ref.fold_reduce`, whose fold order is tile-width-stable).
+
+    w_sp is ALWAYS the [S, V, Dmax] out-edge-slot weight array; the
+    bucket tiles' (wsrc, wslot) indices express both the out-direction
+    (identity rows) and the in-direction ((in_nbr, in_slot) view)
+    weight gathers, so in-edge recursions skip the global
+    [S, V, Dmax_in] weight-view materialization entirely.
+    """
+    if w_sp.shape[-2] != buckets.inv.shape[0]:
+        raise ValueError(
+            f"edge weights {w_sp.shape} are not aligned to the bucket "
+            f"tiles (V={buckets.inv.shape[0]}); slot arrays must share "
+            "the [V, Dmax] trailing layout of the Neighbors the buckets "
+            "were built from")
+    mode = _pick(impl)
+    if mode == "ref":
+        return _ref.edge_rounds_bucketed_ref(
+            w_sp, inject, buckets, reduce=reduce, shift=shift,
+            max_rounds=max_rounds, return_rounds=return_rounds)
+    return _rounds_bucketed_pallas(
+        w_sp, inject, buckets, reduce=reduce, shift=shift,
+        max_rounds=max_rounds, interpret=(mode == "pallas_interpret"),
+        return_rounds=return_rounds, **kw)
+
+
 def edge_rounds_stacked(problems, nbr, mask, reduce: str = "sum",
                         shift: float = 0.0, max_rounds: Optional[int] = None,
-                        impl: Optional[str] = None):
+                        impl: Optional[str] = None, buckets=None):
     """Several independent `edge_rounds` fixed points sharing one
     neighbor tiling, solved in ONE launch.
 
@@ -123,8 +157,13 @@ def edge_rounds_stacked(problems, nbr, mask, reduce: str = "sum",
     """
     w = jnp.concatenate([w for w, _ in problems], axis=0)
     b = jnp.concatenate([inj for _, inj in problems], axis=0)
-    out = edge_rounds(w, b, nbr, mask, reduce=reduce, shift=shift,
-                      max_rounds=max_rounds, impl=impl)
+    if buckets is not None:
+        out = edge_rounds_bucketed(w, b, buckets, reduce=reduce,
+                                   shift=shift, max_rounds=max_rounds,
+                                   impl=impl)
+    else:
+        out = edge_rounds(w, b, nbr, mask, reduce=reduce, shift=shift,
+                          max_rounds=max_rounds, impl=impl)
     splits = np.cumsum([w.shape[0] for w, _ in problems])[:-1]
     return jnp.split(out, splits, axis=0)
 

@@ -55,6 +55,49 @@ def simplex_project_ref(phi, delta, M, permitted, n_iter: int = 60):
     return project_rows(phi, delta, M, permitted, n_iter=n_iter)
 
 
+def fold_reduce(msg: jnp.ndarray, reduce: str = "sum") -> jnp.ndarray:
+    """Canonical slot-axis reduction: butterfly fold-halving over the
+    minor axis, zero-padded up to the next power of two.
+
+    This fixes the reduction ORDER as part of the edge_rounds contract.
+    XLA's built-in row reduce picks a width-dependent strategy (a row
+    summed over 32 lanes and the same row zero-padded to 250 lanes can
+    differ in the last ulp), which would make any re-tiling of the slot
+    axis — degree buckets, node shards — drift bitwise.  The fold
+    pairing is WIDTH-STABLE instead: for any two power-of-two widths
+    P' <= P with the real (unmasked) lanes confined to the first P'
+    slots, folding from P first collapses the exact-zero tail onto the
+    live lanes (s + 0.0 == s bitwise; messages are nonnegative by the
+    edge_rounds contract, so no -0.0 partials exist), reducing to the
+    identical fold over P'.  Hence a [Vb, Db] degree-bucket tile and
+    the global [V, Dmax] padded tile reduce every shared row to the
+    same bits.  reduce="max" folds with jnp.maximum (zero padding is
+    absorbing there for the same nonnegative-message reason).
+
+    The `jnp.abs` is load-bearing, not a cleanup: when the producer
+    multiply (w·(x+shift)) fuses into the fold, LLVM contracts
+    fadd(fmul, ·) pairs into FMAs with shape-dependent operand choices
+    — a [Vb, Db] tile and the [V, Dmax] tile then disagree in the last
+    ulp even though both spell the identical add tree
+    (`optimization_barrier` does NOT stop this; the barrier is erased
+    before codegen).  Messages are nonnegative by the edge_rounds
+    contract, so abs is bit-identity on the values — but at codegen it
+    makes every fold operand an fabs result rather than an fmul, a
+    pattern neither XLA's simplifier nor LLVM's FMA matcher touches,
+    so the adds are evaluated exactly as written.
+    """
+    D = msg.shape[-1]
+    P = 1 if D <= 1 else 1 << (D - 1).bit_length()
+    if P != D:
+        msg = jnp.pad(msg, [(0, 0)] * (msg.ndim - 1) + [(0, P - D)])
+    msg = jnp.abs(msg)
+    while P > 1:
+        P //= 2
+        lo, hi = msg[..., :P], msg[..., P:]
+        msg = lo + hi if reduce == "sum" else jnp.maximum(lo, hi)
+    return msg[..., 0]
+
+
 def edge_rounds_ref(w_sp, inject, nbr, mask, reduce: str = "sum",
                     shift: float = 0.0, max_rounds: int | None = None,
                     return_rounds: bool = False):
@@ -67,7 +110,10 @@ def edge_rounds_ref(w_sp, inject, nbr, mask, reduce: str = "sum",
     the exact fixed point (loop-free supports are nilpotent) or
     `max_rounds` (cyclic-φ guard).  See kernels/edge_rounds.py for the
     semantics of reduce="sum"/"max".  Weights in masked (padding) slots
-    are zeroed up front, so PhiSparse slot arrays feed in as-is.
+    are zeroed up front, so PhiSparse slot arrays feed in as-is.  The
+    per-row reduction goes through `fold_reduce`, so the result is
+    bitwise independent of how the slot axis is tiled (degree-bucketed
+    runs of the same recursion reproduce it exactly).
     """
     from repro.core.network import _fixed_point
     V = nbr.shape[0]
@@ -78,13 +124,63 @@ def edge_rounds_ref(w_sp, inject, nbr, mask, reduce: str = "sum",
 
     if reduce == "sum":
         def step(x):
-            return b + jnp.sum(w * (x[..., nbr] + shift), axis=-1)
+            return b + fold_reduce(w * (x[..., nbr] + shift), "sum")
     elif reduce == "max":
         def step(x):
-            return jnp.maximum(b, jnp.max(w * (x[..., nbr] + shift),
-                                          axis=-1))
+            return jnp.maximum(b, fold_reduce(w * (x[..., nbr] + shift),
+                                              "max"))
     else:
         raise ValueError(f"unknown reduce {reduce!r}")
+
+    x, k = _fixed_point(step, b, max_rounds=max_rounds, with_rounds=True)
+    return (x, k) if return_rounds else x
+
+
+def edge_rounds_bucketed_ref(w_sp, inject, buckets, reduce: str = "sum",
+                             shift: float = 0.0,
+                             max_rounds: int | None = None,
+                             return_rounds: bool = False):
+    """`edge_rounds_ref` over degree-bucketed tiles (core.network
+    EdgeBuckets): per round, each [Vb, Db] bucket gathers and reduces
+    only its own lanes (ΣVb·Db work instead of V·Dmax), the per-bucket
+    results are concatenated and un-permuted back to node order.
+
+    Bitwise identical to the Dmax-padded reference on every row: the
+    per-bucket weight tile `w_sp[.., wsrc, wslot]` reads the same
+    weights the padded row holds in its first Db slots, the gather
+    `x[.., nbr_b]` reads the same states, and `fold_reduce` makes the
+    row reduction independent of the tile width.  The fixed-point round
+    counter runs over the full [.., V] state — one shared early exit,
+    exactly like the padded engine's.
+
+    w_sp [.., V, Dmax] is the SAME out-edge-slot weight array the
+    padded engine takes (for in-edge recursions the per-bucket
+    wsrc/wslot tiles perform the (in_nbr, in_slot) weight view gather
+    bucket-by-bucket, so no global [.., V, Dmax_in] view is ever
+    materialized).
+    """
+    from repro.core.network import _fixed_point
+    V = buckets.inv.shape[0]
+    max_rounds = V if max_rounds is None else max_rounds
+    out_dtype = jnp.promote_types(w_sp.dtype, inject.dtype)
+    b = inject.astype(out_dtype)
+    # per-bucket masked weight tiles, gathered once (all rounds reuse them)
+    tiles = []
+    for wsrc, wslot, mask_b in zip(buckets.wsrc, buckets.wslot,
+                                   buckets.mask):
+        wt = w_sp[..., wsrc, wslot]                      # [.., Vb, Db]
+        tiles.append(jnp.where(mask_b, wt,
+                               jnp.zeros((), wt.dtype)).astype(out_dtype))
+    b_parts = [b[..., nodes] for nodes in buckets.nodes]
+
+    def step(x):
+        ys = []
+        for wt, nbr_b, bb in zip(tiles, buckets.nbr, b_parts):
+            red = fold_reduce(wt * (x[..., nbr_b] + shift), reduce)
+            ys.append(bb + red if reduce == "sum"
+                      else jnp.maximum(bb, red))
+        y = jnp.concatenate(ys, axis=-1)                 # bucket order
+        return y[..., buckets.inv]                       # node order
 
     x, k = _fixed_point(step, b, max_rounds=max_rounds, with_rounds=True)
     return (x, k) if return_rounds else x

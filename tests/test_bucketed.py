@@ -1,0 +1,290 @@
+"""Degree-bucketed tile parity harness (`network.build_buckets`).
+
+The bucketed engine is a pure retiling of the padded [V, Dmax] sparse
+engine — per-bucket [Vb, Db] tiles, ΣVb·Db lanes instead of V·Dmax —
+so everything it computes must be BITWISE the padded result:
+
+* flows, marginals, blocked sets agree bit-for-bit on every Table II
+  row (the small rows in tier-1, SW-100 and the V >= 1000 rows slow);
+* 20-iteration SGP trajectories (`run(..., bucketed=True)`) reproduce
+  the padded φ and cost sequence bitwise under both drivers;
+* the fixed points converge in the SAME number of rounds (a retiling
+  must not change the iteration count, only the per-round work);
+* the Pallas kernel path agrees with the padded Pallas path (both f32,
+  so the comparison is like-for-like).
+
+Plus the tile edge cases — isolated-node buckets (post-failure graphs),
+a star's Vb=1 hub bucket, NaN-poisoned padding lanes per bucket — and
+the bounded-LRU memoization contract of build_buckets/build_neighbors.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.costs import Cost
+from repro.core.network import (_BUCKET_CACHE, _NBR_CACHE, _NBR_CACHE_MAX,
+                                CECNetwork)
+from repro.core.sgp import blocked_sets_sparse
+from repro.kernels import ops
+
+SMALL = ["connected_er", "balanced_tree", "fog", "abilene", "lhc", "geant"]
+BIG = ["sw_linear", "sw_queue", "sw_1000", "grid_1024", "ba_1000"]
+
+_CACHE = {}
+
+
+def _setup(name):
+    if name not in _CACHE:
+        net = core.make_scenario(core.TABLE_II[name])
+        nbrs = core.build_neighbors(net.adj)
+        phi_sp = core.spt_phi_sparse(net, nbrs)
+        _CACHE[name] = (net, phi_sp, nbrs, core.build_buckets(net.adj))
+    return _CACHE[name]
+
+
+def _bitwise_tree(a, b, msg=""):
+    import jax
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# --------------------------------------------------------------- structure
+@pytest.mark.parametrize("name", SMALL)
+def test_bucket_structure(name):
+    """Bucket tiles partition the nodes, widths are powers of two
+    clamped to Dmax, and ΣVb·Db never exceeds twice the edge count
+    plus the isolated-row minimum."""
+    net, _, nbrs, bks = _setup(name)
+    for eb, deg in ((bks.out, np.asarray(net.adj).sum(1)),
+                    (bks.inn, np.asarray(net.adj).sum(0))):
+        nodes = np.concatenate([np.asarray(t) for t in eb.nodes])
+        assert sorted(nodes.tolist()) == list(range(net.V))
+        # inv un-permutes the concat order
+        np.testing.assert_array_equal(nodes[np.asarray(eb.inv)],
+                                      np.arange(net.V))
+        for t_nodes, t_mask in zip(eb.nodes, eb.mask):
+            Db = t_mask.shape[1]
+            assert Db == 1 or Db & (Db - 1) == 0 or Db == nbrs.Dmax \
+                or Db == int(np.asarray(nbrs.in_mask).shape[1])
+            # each row holds exactly its node's degree of real lanes
+            np.testing.assert_array_equal(
+                np.asarray(t_mask).sum(1), deg[np.asarray(t_nodes)])
+        assert eb.lanes <= 2 * max(int(deg.sum()), 1) + net.V
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("name", SMALL)
+def test_flows_marginals_blocked_bitwise(name):
+    """Flows, marginals and blocked sets through the bucket tiles are
+    bitwise the padded-engine results on every small Table II row."""
+    net, sp, nbrs, bks = _setup(name)
+    fl_pad = core.compute_flows(net, sp, "sparse", nbrs=nbrs)
+    fl_bkt = core.compute_flows(net, sp, "sparse", nbrs=nbrs, buckets=bks)
+    _bitwise_tree(fl_pad, fl_bkt, f"flows diverge on {name}")
+
+    mg_pad = core.compute_marginals(net, sp, fl_pad, "sparse", nbrs=nbrs)
+    mg_bkt = core.compute_marginals(net, sp, fl_bkt, "sparse", nbrs=nbrs,
+                                    buckets=bks)
+    _bitwise_tree(mg_pad, mg_bkt, f"marginals diverge on {name}")
+
+    bl_pad = blocked_sets_sparse(net, sp, mg_pad, nbrs)
+    bl_bkt = blocked_sets_sparse(net, sp, mg_bkt, nbrs, buckets=bks)
+    _bitwise_tree(bl_pad, bl_bkt, f"blocked sets diverge on {name}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", BIG)
+def test_flows_bitwise_big(name):
+    net, sp, nbrs, bks = _setup(name)
+    _bitwise_tree(core.compute_flows(net, sp, "sparse", nbrs=nbrs),
+                  core.compute_flows(net, sp, "sparse", nbrs=nbrs,
+                                     buckets=bks),
+                  f"flows diverge on {name}")
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_sgp_trajectory_bitwise(name):
+    """20 SGP iterations with bucketed=True walk bitwise the padded
+    trajectory (φ, per-iteration costs, final cost) under the fused
+    pipelined driver."""
+    net, sp, _, _ = _setup(name)
+    phi_p, h_p = core.run(net, sp, n_iters=20, method="sparse",
+                          driver="fused")
+    phi_b, h_b = core.run(net, sp, n_iters=20, method="sparse",
+                          driver="fused", bucketed=True)
+    _bitwise_tree(phi_p, phi_b, f"trajectory diverges on {name}")
+    np.testing.assert_array_equal(h_p["costs"], h_b["costs"])
+    assert h_p["final_cost"] == h_b["final_cost"]
+
+
+def test_sgp_trajectory_bitwise_host_driver():
+    """The per-iteration host loop (the bitwise reference oracle)
+    agrees too — the bucketed threading is driver-independent."""
+    net, sp, _, _ = _setup("fog")
+    phi_p, h_p = core.run(net, sp, n_iters=20, method="sparse",
+                          driver="host")
+    phi_b, h_b = core.run(net, sp, n_iters=20, method="sparse",
+                          driver="host", bucketed=True)
+    _bitwise_tree(phi_p, phi_b)
+    np.testing.assert_array_equal(h_p["costs"], h_b["costs"])
+
+
+def test_round_count_parity():
+    """The bucketed fixed point converges in exactly as many rounds as
+    the padded one — a retiling changes per-round work, never the
+    iteration count."""
+    net, sp, nbrs, bks = _setup("geant")
+    w = core.mask_slots(sp.data, nbrs)
+    inj = net.r
+    _, k_pad = ops.edge_rounds(w, inj, nbrs.out_nbr, nbrs.out_mask,
+                               reduce="sum", max_rounds=net.V,
+                               impl="ref", return_rounds=True)
+    _, k_bkt = ops.edge_rounds_bucketed(w, inj, bks.out, reduce="sum",
+                                        max_rounds=net.V, impl="ref",
+                                        return_rounds=True)
+    assert int(k_pad) == int(k_bkt)
+
+
+def test_pallas_interpret_bitwise():
+    """The bucketed Pallas kernel agrees with the padded Pallas kernel
+    (both compute in f32 — like-for-like, unlike a f64 ref compare)."""
+    net, sp, nbrs, bks = _setup("fog")
+    w = jnp.asarray(core.mask_slots(sp.data, nbrs), jnp.float32)
+    inj = jnp.asarray(net.r, jnp.float32)
+    y_pad = ops.edge_rounds(w, inj, nbrs.out_nbr, nbrs.out_mask,
+                            reduce="sum", max_rounds=net.V,
+                            impl="pallas_interpret")
+    y_bkt = ops.edge_rounds_bucketed(w, inj, bks.out, reduce="sum",
+                                     max_rounds=net.V,
+                                     impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(y_pad), np.asarray(y_bkt))
+
+
+# -------------------------------------------------------------- edge cases
+def test_isolated_node_bucket():
+    """A post-failure graph (hub removed -> its row/col empty) buckets
+    the isolated node into the width-1 tile with its lane masked, and
+    flows still match the padded engine bitwise."""
+    net, _, _, _ = _setup("fog")
+    net_f = core.fail_node(net, core.churn_hub(net))
+    nbrs_f = core.build_neighbors(net_f.adj)
+    bks_f = core.build_buckets(net_f.adj)
+    # the failed node has no edges in either direction
+    hub = core.churn_hub(net)
+    assert not np.asarray(net_f.adj)[hub].any()
+    for eb in (bks_f.out, bks_f.inn):
+        pos = int(np.asarray(eb.inv)[hub])
+        off = 0
+        for t_nodes, t_mask in zip(eb.nodes, eb.mask):
+            if off <= pos < off + t_nodes.shape[0]:
+                assert t_mask.shape[1] == 1          # width-1 bucket
+                assert not bool(np.asarray(t_mask)[pos - off].any())
+            off += t_nodes.shape[0]
+    sp_f = core.spt_phi_sparse(net_f, nbrs_f)
+    _bitwise_tree(core.compute_flows(net_f, sp_f, "sparse", nbrs=nbrs_f),
+                  core.compute_flows(net_f, sp_f, "sparse", nbrs=nbrs_f,
+                                     buckets=bks_f))
+
+
+def _star_net(V=9, S=3, seed=0):
+    """A star: hub 0 <-> every leaf.  Linear costs (always feasible);
+    the hub's out-degree V-1 lands it ALONE in the top bucket (Vb=1)
+    while every leaf sits in the width-1 bucket."""
+    rng = np.random.RandomState(seed)
+    adj = np.zeros((V, V), bool)
+    adj[0, 1:] = adj[1:, 0] = True
+    r = np.zeros((S, V))
+    for s in range(S):
+        r[s, rng.choice(V, 2, replace=False)] = rng.uniform(0.5, 1.5, 2)
+    return CECNetwork(
+        adj=jnp.asarray(adj),
+        link_cost=Cost("linear", jnp.asarray(rng.uniform(1, 2, (V, V)))),
+        comp_cost=Cost("linear", jnp.asarray(rng.uniform(1, 2, V))),
+        dest=jnp.asarray(rng.randint(0, V, S), jnp.int32),
+        r=jnp.asarray(r),
+        a=jnp.asarray(rng.uniform(0.3, 0.8, S)),
+        w=jnp.asarray(rng.uniform(1, 3, (S, V))),
+        task_type=jnp.asarray(np.zeros(S), jnp.int32),
+    )
+
+
+def test_single_hub_star_vb1_bucket():
+    net = _star_net()
+    nbrs = core.build_neighbors(net.adj)
+    bks = core.build_buckets(net.adj)
+    # hub alone in the widest bucket, all leaves in the width-1 bucket
+    assert bks.out.nbr[-1].shape[0] == 1
+    assert int(np.asarray(bks.out.nodes[-1])[0]) == 0
+    assert bks.out.nbr[0].shape == (net.V - 1, 1)
+    sp = core.spt_phi_sparse(net, nbrs)
+    _bitwise_tree(core.compute_flows(net, sp, "sparse", nbrs=nbrs),
+                  core.compute_flows(net, sp, "sparse", nbrs=nbrs,
+                                     buckets=bks))
+    phi_p, h_p = core.run(net, sp, n_iters=10, method="sparse")
+    phi_b, h_b = core.run(net, sp, n_iters=10, method="sparse",
+                          bucketed=True)
+    _bitwise_tree(phi_p, phi_b)
+    assert h_p["final_cost"] == h_b["final_cost"]
+
+
+def test_nan_poisoned_padding_per_bucket():
+    """NaN in the PADDING lanes of every bucket tile never leaks into
+    the fixed point (mirrors test_edge_rounds.py's poisoning of the
+    global tile) — the bucket masks keep padding inert."""
+    net, sp, nbrs, bks = _setup("fog")
+    w = core.mask_slots(sp.data, nbrs)
+    inj = net.r
+    clean = ops.edge_rounds_bucketed(w, inj, bks.out, reduce="sum",
+                                     max_rounds=net.V, impl="ref")
+    # poison the [V, Dmax] slot array exactly where NO bucket owns a
+    # real lane: every bucket reads its rows' lanes < its width, so
+    # poisoning all out_mask padding poisons each tile's padding lanes
+    w_nan = jnp.where(nbrs.out_mask[None], w, jnp.nan)
+    got = ops.edge_rounds_bucketed(w_nan, inj, bks.out, reduce="sum",
+                                   max_rounds=net.V, impl="ref")
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(got))
+    assert np.isfinite(np.asarray(got)).all()
+
+
+# ---------------------------------------------------------------- LRU cache
+def test_bucket_cache_hit_and_eviction():
+    """build_buckets is memoized per adjacency bytes (same object on a
+    repeat call) and the cache is a bounded LRU: recently-USED entries
+    survive an insertion burst, stale ones are evicted."""
+    net, _, _, _ = _setup("abilene")
+    a = core.build_buckets(net.adj)
+    assert core.build_buckets(np.asarray(net.adj)) is a       # hit
+    # flood the cache with > _NBR_CACHE_MAX distinct tiny adjacencies,
+    # touching `a` between insertions so LRU (not FIFO) keeps it alive
+    for k in range(_NBR_CACHE_MAX + 4):
+        adj = np.zeros((6, 6), bool)
+        adj[0, 1 + k % 5] = adj[1 + k % 5, 0] = True
+        core.build_buckets(adj)
+        assert core.build_buckets(net.adj) is a               # refreshed
+    assert len(_BUCKET_CACHE) <= _NBR_CACHE_MAX
+    assert len(_NBR_CACHE) <= _NBR_CACHE_MAX
+
+
+def test_neighbor_cache_is_lru_not_fifo():
+    """The oldest UNUSED entry is evicted first; a touched entry
+    outlives insertion order."""
+    base = np.zeros((5, 5), bool)
+    base[0, 1] = base[1, 0] = True
+    keep = core.build_neighbors(base)
+    for k in range(_NBR_CACHE_MAX - 1):
+        adj = np.zeros((5, 5), bool)
+        adj[2, 3] = adj[3, 2] = True
+        adj[0, 4 - k % 2] = adj[4 - k % 2, 0] = True
+        adj[k % 2, 2] = adj[2, k % 2] = True
+        core.build_neighbors(adj)
+    assert core.build_neighbors(base) is keep  # touch: now most recent
+    fill = np.zeros((5, 5), bool)
+    fill[1, 2] = fill[2, 1] = True
+    core.build_neighbors(fill)                 # evicts the LRU, not base
+    assert core.build_neighbors(base) is keep

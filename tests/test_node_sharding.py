@@ -1,0 +1,166 @@
+"""Node-axis sharding harness (`distributed.build_node_partition` /
+`node_flows_carry_and_cost`).
+
+Three layers:
+
+* partition invariants — the concrete halo plan is checked against a
+  brute-force reconstruction: every masked neighbor slot's concat-space
+  remap points back at exactly the global row it names (local block or
+  boundary-halo block), and the boundary sets contain precisely the
+  rows some OTHER shard references;
+* degenerate mesh — with ONE node shard the sharded solve must equal
+  `flows_carry_and_cost` outright (no halo traffic exists), which keeps
+  the whole code path in tier-1 on single-device CI;
+* true multi-device parity — a subprocess pins
+  ``--xla_force_host_platform_device_count=4`` BEFORE jax imports (the
+  device count is frozen at backend init, so it cannot be set from a
+  live test process) and checks t_data/t_result BITWISE against the
+  single-device solve, F/G/cost to sum-order tolerance, on a
+  (tasks × nodes) = (1, 4) and a (2, 2) mesh.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import distributed as dist
+
+
+def _setup(name):
+    net = core.make_scenario(core.TABLE_II[name])
+    nbrs = core.build_neighbors(net.adj)
+    return net, nbrs
+
+
+# ------------------------------------------------------ partition invariants
+@pytest.mark.parametrize("name,n", [("fog", 2), ("fog", 4), ("geant", 4),
+                                    ("abilene", 3)])
+def test_partition_remap_brute_force(name, n):
+    """Every masked slot's remap resolves to the global row the padded
+    neighbor list names; every cross-shard reference (and nothing else
+    structural) sits in the referenced shard's boundary list."""
+    net, nbrs = _setup(name)
+    part = dist.build_node_partition(nbrs, n)
+    V, Vl, Bmax = part.V, part.Vl, part.Bmax
+    assert part.Vp == n * Vl and part.Vp >= V
+    owner = np.arange(part.Vp) // Vl
+
+    def pad_rows(x):
+        return np.pad(np.asarray(x), [(0, part.Vp - V), (0, 0)])
+
+    referenced = set()
+    for nbr, mask, remap, pmask in (
+            (pad_rows(nbrs.in_nbr), pad_rows(nbrs.in_mask),
+             part.in_remap, part.in_mask),
+            (pad_rows(nbrs.out_nbr), pad_rows(nbrs.out_mask),
+             part.out_remap, part.out_mask)):
+        np.testing.assert_array_equal(
+            pmask, mask.reshape(n, Vl, -1))          # masks just reshard
+        for s in range(n):
+            for l in range(Vl):
+                u_glob = s * Vl + l
+                for d in range(nbr.shape[1]):
+                    if not mask[u_glob, d]:
+                        continue
+                    tgt = int(nbr[u_glob, d])
+                    rm = int(remap[s, l, d])
+                    if owner[tgt] == s:
+                        assert rm == tgt - s * Vl, "local read mis-remapped"
+                    else:
+                        referenced.add(tgt)
+                        o, p = divmod(rm - Vl, Bmax)
+                        assert o == owner[tgt]
+                        assert o * Vl + int(part.bnd[o, p]) == tgt, \
+                            "halo read resolves to the wrong row"
+    # boundary lists hold exactly the cross-referenced rows (up to the
+    # Bmax=1 keep-nonzero floor when no boundary exists at all)
+    listed = {s * Vl + int(b) for s in range(n)
+              for b in part.bnd[s] if s * Vl + int(b) in referenced}
+    assert listed == referenced
+
+
+def test_partition_padded_rows_inert():
+    """Zero-padded node rows (V < Vp) have fully-masked neighbor slots:
+    they inject nothing and never change, so they sit at the fixed
+    point from round 0."""
+    net, nbrs = _setup("fog")          # V = 19, 4 shards -> Vp = 20
+    part = dist.build_node_partition(nbrs, 4)
+    assert part.Vp > part.V
+    pad = np.arange(part.V, part.Vp)
+    assert not part.in_mask.reshape(part.Vp, -1)[pad].any()
+    assert not part.out_mask.reshape(part.Vp, -1)[pad].any()
+
+
+# ------------------------------------------------------ single-shard parity
+def test_node_sharded_single_shard_matches():
+    """(tasks, nodes) = (1, 1): the node-sharded solve on a degenerate
+    mesh is the plain sparse solve — t_* bitwise, F/G/cost exact up to
+    the psum over one device (a no-op)."""
+    net, nbrs = _setup("fog")
+    phi = core.spt_phi_sparse(net, nbrs)
+    ref_c, ref_cost = core.flows_carry_and_cost(net, phi, "sparse",
+                                                nbrs=nbrs)
+    mesh = dist.task_node_mesh(1, 1)
+    carry, cost = dist.node_flows_carry_and_cost(net, phi, nbrs, mesh)
+    np.testing.assert_array_equal(np.asarray(carry.t_data),
+                                  np.asarray(ref_c.t_data))
+    np.testing.assert_array_equal(np.asarray(carry.t_result),
+                                  np.asarray(ref_c.t_result))
+    np.testing.assert_array_equal(np.asarray(carry.F), np.asarray(ref_c.F))
+    np.testing.assert_array_equal(np.asarray(carry.G), np.asarray(ref_c.G))
+    np.testing.assert_allclose(float(cost), float(ref_cost), rtol=1e-6)
+
+
+# ------------------------------------------------------- 4-device subprocess
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+os.environ["JAX_PLATFORMS"] = "cpu"
+import numpy as np
+import jax
+from repro import core
+from repro.core import distributed as dist
+
+assert len(jax.devices()) == 4, jax.devices()
+for name, (nt, nn) in [("fog", (1, 4)), ("geant", (2, 2))]:
+    net = core.make_scenario(core.TABLE_II[name])
+    nbrs = core.build_neighbors(net.adj)
+    phi = core.spt_phi_sparse(net, nbrs)
+    ref_c, ref_cost = core.flows_carry_and_cost(net, phi, "sparse",
+                                                nbrs=nbrs)
+    mesh = dist.task_node_mesh(nt, nn)
+    part = dist.build_node_partition(nbrs, nn)
+    carry, cost = dist.node_flows_carry_and_cost(net, phi, nbrs, mesh,
+                                                 part)
+    # the traffic recursions are shard-local folds over exact halo
+    # copies: bitwise.  F/G/cost cross shards: sum-order only.
+    np.testing.assert_array_equal(np.asarray(carry.t_data),
+                                  np.asarray(ref_c.t_data))
+    np.testing.assert_array_equal(np.asarray(carry.t_result),
+                                  np.asarray(ref_c.t_result))
+    np.testing.assert_allclose(np.asarray(carry.F),
+                               np.asarray(ref_c.F), rtol=2e-6, atol=0)
+    np.testing.assert_allclose(np.asarray(carry.G),
+                               np.asarray(ref_c.G), rtol=2e-6, atol=0)
+    np.testing.assert_allclose(float(cost), float(ref_cost), rtol=1e-5)
+    print(f"{name} ({nt}x{nn}): Bmax={part.Bmax} OK")
+print("NODE_SHARD_PARITY_PASS")
+"""
+
+
+def test_node_sharded_4device_parity():
+    """t_* bitwise vs the single-device solve on real 4-device meshes
+    (virtual CPU devices — the flag must precede jax init, hence the
+    subprocess)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "NODE_SHARD_PARITY_PASS" in out.stdout
