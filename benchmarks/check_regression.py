@@ -14,7 +14,11 @@ the V = 10⁴ scaling target this PR's throughput lives on) and the
 streaming churn replay rows (``replay_*``: per-iteration/refeasibilize wall-clock and
 the warm iterations-to-target; the cold counts are ungated context —
 they share their target with the warm run, so warm improvements move
-them) gate the exit status: a
+them) and the robustness rows (``robustness_*``: async/fault
+final-cost ratios over the synchronous optimum, guarded recovery
+iterations-to-target, and the armed-guard per-iteration wall-clock —
+quality rows where higher is worse, so the same slower-than gate
+applies) gate the exit status: a
 fresh row more than ``threshold`` (default 20%) slower than its
 committed counterpart is a regression and the process exits 1.  Rows
 present on only one side are reported but never fail — machines differ
@@ -41,7 +45,7 @@ import sys
 GATED_PREFIXES = ("scale_flows_sparse", "scale_step_sparse",
                   "scale_run_sparse", "scale_fusedrun_V", "scale_rounds_",
                   "scale_bucketed_", "scale_wasted_lanes_",
-                  "replay_")
+                  "replay_", "robustness_")
 # ...except the cold-restart iteration counts: cold shares its
 # iterations-to-target TARGET with the warm run (min of the two finals),
 # so a warm-start IMPROVEMENT inflates the cold count — it is context
@@ -55,7 +59,7 @@ UNGATED_PREFIXES = ("replay_cold_iters_", "scale_bucketed_speedup_")
 # gated row families: a fresh report missing an ENTIRE family the
 # committed baseline has means that sweep never ran — overwriting the
 # baseline would silently un-gate the family forever (see report())
-FAMILIES = ("scale_", "replay_")
+FAMILIES = ("scale_", "replay_", "robustness_")
 
 
 def rows_to_dict(rows) -> dict:
@@ -152,7 +156,8 @@ def report(fresh: dict, committed: dict, threshold: float = 0.2,
             # without the family's rows, silently un-gating it forever.
             print(f"# ERROR: committed baseline has gated {fam}* rows "
                   "but the fresh report has none — run that sweep too "
-                  "(scale: --only scale; replay: --replay)", file=out)
+                  "(scale: --only scale; replay: --replay; robustness: "
+                  "--robustness)", file=out)
             return 2
     return 1 if regressions else 0
 

@@ -70,14 +70,22 @@ def _bench_replay(name: str, tail_iters: int = N_TAIL,
     # the host segment driver keeps the committed replay_* rows
     # measuring what they always measured; the fused driver is timed
     # separately below
-    eng = core.ReplayEngine(net, loop_driver="host", bucketed=bucketed)
+    # invariant_checks=False: the post-event check is a host sync +
+    # O(S*V^2) closure; the streaming pipeline being timed must not
+    # carry it (tests/test_replay.py runs the checks on every event)
+    eng = core.ReplayEngine(net, loop_driver="host", bucketed=bucketed,
+                            invariant_checks=False)
     t0 = time.perf_counter()
     hist = eng.play(sched, tail_iters=tail_iters, cold_baseline=True)
     wall = (time.perf_counter() - t0) * 1e6
 
     repairs = [r for r in hist["records"] if r.warm_iters is not None]
-    warm = sum(r.warm_iters for r in repairs)
-    cold = sum(r.cold_iters for r in repairs)
+    # iters_to_target's -1 (never reached) folds to budget+1: strictly
+    # worse than exhausting the segment budget, same scale as before
+    warm = sum(core.iters_or_budget(r.warm_iters, r.segment_iters)
+               for r in repairs)
+    cold = sum(core.iters_or_budget(r.cold_iters, r.segment_iters)
+               for r in repairs)
     pairs = "|".join(f"{type(r.event).__name__}:{r.warm_iters}v{r.cold_iters}"
                      for r in repairs)
     # counts emitted +1 so a perfect (0-iteration) warm start stays a
@@ -121,7 +129,8 @@ def _bench_replay(name: str, tail_iters: int = N_TAIL,
 
     # the fused segment driver: same schedule, bitwise-identical
     # trajectory, one host sync per inter-event segment
-    eng_f = core.ReplayEngine(net, loop_driver="fused", bucketed=bucketed)
+    eng_f = core.ReplayEngine(net, loop_driver="fused", bucketed=bucketed,
+                              invariant_checks=False)
     t0 = time.perf_counter()
     eng_f.play(sched, tail_iters=tail_iters)
     wall_f = (time.perf_counter() - t0) * 1e6

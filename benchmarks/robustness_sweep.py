@@ -1,0 +1,130 @@
+"""Robustness sweep (fig: none — the asynchrony/fault regime of the
+ISSUE's acceptance bar, measured as committed rows).
+
+Every row is a *quality* or *recovery* metric for the fault-injection
+layer (core.faults) and the guarded-rollback layer (core.guards), on
+the acceptance bar's named scenarios:
+
+  robustness_part_p50_<name>   final-cost RATIO of a p=0.5
+                               partial-participation run (2x budget)
+                               over the synchronous optimum — the
+                               paper's asynchronous-updating claim as
+                               a number; 1.0 is parity, the gate trips
+                               when the ratio worsens >20%
+  robustness_stale_k3_<name>   same ratio with k=3 bounded-staleness
+                               marginal broadcasts stacked on p=0.5
+  robustness_drop_p20_<name>   same ratio under 20% control-message
+                               dropout (held marginals)
+  robustness_recovery_<name>   1 + iterations-to-target for a GUARDED
+                               run under transient corruption
+                               (corrupt_p=0.1) to come back within 1%
+                               of the synchronous optimum; -1
+                               (never recovered) folds to budget+1 via
+                               iters_or_budget, and the +1 keeps a
+                               0-iteration recovery a comparable row
+                               under the gate's us_per_call > 0 filter
+  robustness_guard_iter_<name> us per iteration of the fused driver
+                               with guards ARMED (checkpoint ring +
+                               sentinels in the carry), measured over
+                               an 8-iteration chunk — the wall-clock
+                               price of the recovery layer
+
+All five are gated by benchmarks/check_regression.py against the
+committed BENCH_report.json (the ratio rows gate QUALITY: a fresh
+ratio >20% above the committed one means the async solver stopped
+converging as well).  Runs are seeded end-to-end, so the ratios are
+deterministic per machine up to XLA fusion noise — far inside the
+20% gate band.  Emitted by ``benchmarks.run --robustness``.
+"""
+import jax
+
+from repro import core
+from repro.core.faults import FaultPlan
+from repro.core.guards import GuardConfig
+
+from .common import emit, time_call
+
+NAMES = ("sw_queue",)          # --full adds the power-law ba_1000 row
+NAMES_FULL = ("sw_queue", "ba_1000")
+SYNC_ITERS = 30                # synchronous reference budget
+ASYNC_ITERS = 60               # 2x budget for the degraded modes
+
+
+def _bench_robustness(name: str):
+    net = core.make_scenario(core.TABLE_II[name])
+    nbrs = core.build_neighbors(net.adj)
+    phi0 = core.spt_phi_sparse(net, nbrs)
+    _, hs = core.run(net, phi0, n_iters=SYNC_ITERS, method="sparse")
+    sync = hs["final_cost"]
+
+    plans = (
+        ("part_p50", FaultPlan(participation_p=0.5), 1),
+        ("stale_k3", FaultPlan(participation_p=0.5, staleness_k=3), 2),
+        ("drop_p20", FaultPlan(dropout_p=0.2), 3),
+    )
+    for key, plan, seed in plans:
+        _, hf = core.run(net, phi0, n_iters=ASYNC_ITERS, method="sparse",
+                         fault_plan=plan,
+                         fault_rng=jax.random.PRNGKey(seed))
+        ratio = hf["final_cost"] / sync
+        emit(f"robustness_{key}_{name}", float(ratio),
+             f"async={hf['final_cost']:.4f};sync={sync:.4f};"
+             f"iters={ASYNC_ITERS}v{SYNC_ITERS}")
+
+    # guarded recovery under transient corruption: NaN rows injected
+    # AFTER cost measurement (so the driver would accept them), caught
+    # by the nonfinite sentinels and rolled back from the checkpoint
+    # ring — the row is how many iterations the guarded run needs to
+    # come back within 1% of the clean synchronous optimum
+    cfg = GuardConfig(checkpoint_every=2, max_retries=64)
+    plan = FaultPlan(corrupt_p=0.1)
+    _, hg = core.run(net, phi0, n_iters=ASYNC_ITERS, method="sparse",
+                     fault_plan=plan, fault_rng=jax.random.PRNGKey(7),
+                     guards=cfg)
+    it = core.iters_to_target(hg["costs"], 1.01 * sync)
+    rec = 1 + core.iters_or_budget(it, ASYNC_ITERS)
+    emit(f"robustness_recovery_{name}", float(rec),
+         f"rollbacks={len(hg['guard_events'])};"
+         f"n_corrupt={hg['n_corrupt']};final={hg['final_cost']:.4f};"
+         f"target={1.01 * sync:.4f}")
+
+    # wall-clock price of the armed guard layer: fused chunks with the
+    # checkpoint ring + sentinel selects in the carry vs without
+    st_g = core.init_run_state(net, phi0, method="sparse",
+                               guards=GuardConfig())
+    core.run_chunk(net, st_g, 8)           # compile + settle
+    us_g = time_call(lambda: core.run_chunk(net, st_g, 8),
+                     n=3, warmup=0) / 8.0
+    st_p = core.init_run_state(net, phi0, method="sparse")
+    core.run_chunk(net, st_p, 8)
+    us_p = time_call(lambda: core.run_chunk(net, st_p, 8),
+                     n=3, warmup=0) / 8.0
+    if st_g.stopped:
+        # a stopped driver makes run_chunk a no-op — a near-zero
+        # baseline every honest later run would fail against
+        emit(f"robustness_guard_iter_{name}", 0.0,
+             "driver_stopped_not_timed")
+    else:
+        emit(f"robustness_guard_iter_{name}", us_g,
+             f"V={net.V};seg=8;plain_us={us_p:.1f};"
+             f"overhead={us_g / us_p:.2f}x")
+
+
+def run(full: bool = False, names=None):
+    if names is None:
+        names = NAMES_FULL if full else NAMES
+    for name in names:
+        _bench_robustness(name)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also sweep the power-law ba_1000 row")
+    ap.add_argument("--names", default=None,
+                    help="comma-separated TABLE_II scenario names")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=a.full,
+        names=tuple(a.names.split(",")) if a.names else None)

@@ -25,13 +25,20 @@ def main(argv=None) -> int:
                          "(dense at V=1000 takes hours on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL)
-                         + ",replay")
+                         + ",replay,robustness")
     ap.add_argument("--replay", action="store_true",
                     help="also run the streaming churn replay sweep "
                          "(benchmarks.replay_sweep) and emit its "
                          "replay_* rows — part of the committed "
                          "BENCH_report.json baseline "
                          "(regenerate with --only scale --replay)")
+    ap.add_argument("--robustness", action="store_true",
+                    help="also run the fault/guard robustness sweep "
+                         "(benchmarks.robustness_sweep) and emit its "
+                         "robustness_* rows — async-convergence "
+                         "quality ratios, guarded recovery counts and "
+                         "the armed-guard iteration wall-clock, part "
+                         "of the committed BENCH_report.json baseline")
     ap.add_argument("--sizes", default=None,
                     help="comma-separated V list for the scale sweep "
                          "(e.g. 20,100 — the quick CI subset); default "
@@ -54,6 +61,8 @@ def main(argv=None) -> int:
     names = args.only.split(",") if args.only else list(ALL)
     if args.replay and "replay" not in names:
         names.append("replay")
+    if args.robustness and "robustness" not in names:
+        names.append("robustness")
 
     committed_rows = None
     if args.check_against:
@@ -97,6 +106,9 @@ def main(argv=None) -> int:
             elif name == "replay":
                 from . import replay_sweep
                 replay_sweep.run(full=args.full)
+            elif name == "robustness":
+                from . import robustness_sweep
+                robustness_sweep.run(full=args.full)
             elif name == "roofline":
                 from . import roofline
                 roofline.run(args.report)

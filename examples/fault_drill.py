@@ -1,0 +1,77 @@
+"""Fault drill: churn replay under injected asynchrony + corruption,
+with guarded rollback recovery.
+
+The replay_churn example answers "can a warm iterate survive topology
+churn?"; this one answers "can it survive churn while the SOLVER
+itself is degraded?" — a 5-event schedule replayed with
+
+  * p=0.6 partial participation (each iteration a random 40% of the
+    nodes skip their φ row update),
+  * k=2 bounded-staleness marginal broadcasts,
+  * transient NaN corruption of the candidate iterate (corrupt_p=0.15,
+    injected AFTER the cost measurement so the driver would accept it),
+
+and the guard layer armed: on-device sentinels (non-finite φ/cost,
+simplex mass drift, cost explosion) trip a rollback to the last
+checkpoint-ring snapshot, back σ off, and render a GuardEvent.
+
+    PYTHONPATH=src python examples/fault_drill.py
+"""
+import numpy as np
+
+import jax
+
+from repro import core
+
+net = core.make_scenario(core.TABLE_II["fog"])
+hub = core.churn_hub(net)
+adj = np.asarray(net.adj)
+u = int(next(i for i in np.argsort(-adj.sum(1))
+             if i != hub and any(j != hub for j in np.nonzero(adj[i])[0])))
+v = int(next(j for j in np.nonzero(adj[u])[0] if j != hub))
+
+schedule = core.ChurnSchedule((
+    (4,  core.RateScale(1.4)),
+    (8,  core.NodeFail(hub)),
+    (12, core.LinkCut(u, v)),
+    (16, core.NodeRecover(hub)),
+    (20, core.RateScale(0.7)),
+), name="fog_fault_drill")
+
+plan = core.FaultPlan(participation_p=0.6, staleness_k=2,
+                      corrupt_p=0.15, corrupt_mode="nan")
+guards = core.GuardConfig(checkpoint_every=2, max_retries=64)
+
+print(f"== fault drill on fog (V={net.V}, hub={hub}) ==")
+print(f"plan: {plan}")
+engine = core.ReplayEngine(net, loop_driver="fused",
+                           fault_plan=plan,
+                           fault_rng=jax.random.PRNGKey(42),
+                           guards=guards)
+hist = engine.play(schedule, tail_iters=12, cold_baseline=False)
+
+print(f"\n{'event':<22}{'t':>4}{'before':>10}{'shock':>10}{'recovered':>11}")
+for rec in hist["records"]:
+    recovered = (rec.segment_costs or [rec.cost_after])[-1]
+    print(f"{type(rec.event).__name__:<22}{rec.it:>4}"
+          f"{rec.cost_before:>10.2f}{rec.cost_after:>10.2f}"
+          f"{recovered:>11.2f}")
+
+events = hist["guard_events"]
+print(f"\n== {len(events)} sentinel trips across {hist['n_iters']} "
+      "iterations ==")
+print(f"{'it':>4}  {'sentinel':<16}{'action':<10}{'cost':>12}"
+      f"{'restored':>10}")
+for ev in events:
+    restored = "-" if ev.restored_cost is None else f"{ev.restored_cost:.2f}"
+    print(f"{ev.it:>4}  {ev.sentinel:<16}{ev.action:<10}"
+          f"{ev.cost:>12.4g}{restored:>10}")
+
+# the drill's point: despite every-few-iterations NaN poisoning, the
+# final iterate is finite, feasible and loop-free — each trip rolled
+# back to a checkpoint instead of latching the σ safeguard stop
+assert all(bool(jax.numpy.isfinite(x).all())
+           for x in jax.tree.leaves(engine.phi))
+core.check_invariants(engine.net, engine.phi, engine.nbrs)
+print(f"\nfinal cost {hist['final_cost']:.2f}; iterate finite, feasible, "
+      "loop-free despite injected corruption")

@@ -52,17 +52,27 @@ hist = engine.play(schedule, tail_iters=8, cold_baseline=True)
 
 print(f"{'event':<22}{'t':>4}{'before':>10}{'shock':>10}"
       f"{'recovered':>11}{'warm':>6}{'cold':>6}")
+def _fmt_iters(iters):
+    # -1 is iters_to_target's never-reached sentinel
+    if iters is None:
+        return "-"
+    return ">" if iters < 0 else iters
+
+
 for rec in hist["records"]:
     recovered = (rec.segment_costs or [rec.cost_after])[-1]
-    warm = "-" if rec.warm_iters is None else rec.warm_iters
-    cold = "-" if rec.cold_iters is None else rec.cold_iters
     print(f"{type(rec.event).__name__:<22}{rec.it:>4}"
           f"{rec.cost_before:>10.2f}{rec.cost_after:>10.2f}"
-          f"{recovered:>11.2f}{warm:>6}{cold:>6}")
+          f"{recovered:>11.2f}{_fmt_iters(rec.warm_iters):>6}"
+          f"{_fmt_iters(rec.cold_iters):>6}")
 
 repairs = [r for r in hist["records"] if r.warm_iters is not None]
-warm = sum(r.warm_iters for r in repairs)
-cold = sum(r.cold_iters for r in repairs)
+# never-reached (-1) folds to budget+1 so a non-converging side counts
+# as strictly worse than exhausting its whole segment budget
+warm = sum(core.iters_or_budget(r.warm_iters, r.segment_iters)
+           for r in repairs)
+cold = sum(core.iters_or_budget(r.cold_iters, r.segment_iters)
+           for r in repairs)
 print(f"\nfinal cost {hist['final_cost']:.2f} after {hist['n_iters']} "
       f"iterations; warm start needed {warm} iterations-to-target vs "
       f"{cold} for cold SPT restarts across {len(repairs)} repairs")

@@ -9,6 +9,8 @@ Public API:
   TABLE_II, make_scenario, fail_node                    (scenarios, §V)
   ChurnSchedule, random_schedule, churn_schedule        (churn events)
   ReplayEngine, check_invariants                        (streaming replay)
+  FaultPlan, init_fault_state                           (fault injection)
+  GuardConfig, GuardEvent                               (guards/rollback)
 """
 from .costs import Cost, CostFamily, FAMILIES, LINEAR, QUEUE, SAT
 from .network import (CECNetwork, EdgeBuckets, Flows, FlowsCarry,
@@ -18,11 +20,14 @@ from .network import (CECNetwork, EdgeBuckets, Flows, FlowsCarry,
                       compute_flows, cost_of_flows, flows_carry_and_cost,
                       gather_edges, is_loop_free, mask_slots, offload_phi,
                       phi_to_sparse, refeasibilize, refeasibilize_sparse,
-                      scatter_edges, sparse_to_phi, spt_phi,
-                      spt_phi_sparse, total_cost, uniform_phi)
+                      sanitize_phi_sparse, scatter_edges, sparse_to_phi,
+                      spt_phi, spt_phi_sparse, total_cost, uniform_phi)
 from .marginals import Marginals, compute_marginals, phi_gradients
+from .faults import (FaultPlan, FaultState, fault_state_specs,
+                     init_fault_state)
 from .sgp import (RunState, SGPConsts, init_run_state, make_consts,
                   project_rows, run, run_chunk, sgp_step)
+from .guards import GuardConfig, GuardEvent, GuardState, init_guard_state
 from .baselines import run_all, run_lcor, run_lpr, run_spoo
 from .optimality import (flow_domain_optimum, marginals_vs_autodiff,
                          theorem1_residual)
@@ -37,7 +42,7 @@ from .events import (ChurnSchedule, ChurnState, DestRedraw, LinkCut,
                      LinkRestore, NodeFail, NodeRecover, RateScale,
                      SourceRedraw, event_kind, random_schedule)
 from .replay import (EventRecord, ReplayEngine, check_feasible,
-                     check_invariants, iters_to_target)
+                     check_invariants, iters_or_budget, iters_to_target)
 from . import moe_bridge, topologies
 
 __all__ = [
@@ -48,10 +53,13 @@ __all__ = [
     "cost_of_flows",
     "flows_carry_and_cost", "gather_edges",
     "is_loop_free", "mask_slots", "offload_phi", "phi_to_sparse",
-    "refeasibilize", "refeasibilize_sparse", "scatter_edges",
+    "refeasibilize", "refeasibilize_sparse", "sanitize_phi_sparse",
+    "scatter_edges",
     "sparse_to_phi", "spt_phi", "spt_phi_sparse", "total_cost",
     "uniform_phi",
     "Marginals", "compute_marginals", "phi_gradients",
+    "FaultPlan", "FaultState", "fault_state_specs", "init_fault_state",
+    "GuardConfig", "GuardEvent", "GuardState", "init_guard_state",
     "RunState", "SGPConsts", "init_run_state", "make_consts",
     "project_rows", "run", "run_chunk", "sgp_step",
     "run_all", "run_lcor", "run_lpr", "run_spoo",
@@ -67,5 +75,5 @@ __all__ = [
     "NodeFail", "NodeRecover", "RateScale", "SourceRedraw", "event_kind",
     "random_schedule",
     "EventRecord", "ReplayEngine", "check_feasible", "check_invariants",
-    "iters_to_target",
+    "iters_or_budget", "iters_to_target",
 ]

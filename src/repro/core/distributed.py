@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .faults import fault_state_specs, init_fault_state
 from .network import (CECNetwork, FlowsCarry, Neighbors, Phi, PhiSparse,
                       _phi_edge_views, build_neighbors,
                       flows_carry_and_cost_jit, gather_edges,
@@ -173,7 +174,7 @@ def make_distributed_step_flows(mesh: Mesh, variant: str = "sgp",
                                 kappa: float = 0.0, method: str = "dense",
                                 nbrs: Optional[Neighbors] = None,
                                 engine_impl: Optional[str] = None,
-                                buckets=None):
+                                buckets=None, fault_plan=None):
     """The drivers' shard_mapped per-iteration primitive:
     step(net, phi, fl, consts, sigma) -> (phi_new, fl_new, cost_new).
 
@@ -186,12 +187,38 @@ def make_distributed_step_flows(mesh: Mesh, variant: str = "sgp",
     gone.  Both `run_distributed_chunk` drivers dispatch THIS compiled
     executable, which is what makes the fused pipeline bitwise the
     python loop.
+
+    fault_plan (faults.FaultPlan) arms the fault injectors INSIDE the
+    shard_mapped step: the step then additionally takes and returns a
+    `FaultState` (rng replicated — every shard draws the same node
+    masks/lags, exactly one applies a given corruption — ring/held
+    sharded with their task dim).
     """
     if method == "sparse" and nbrs is None:
         raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
                          "precomputed outside jit")
     nbrs_spec = (Neighbors(P(), P(), P(), P(), P())
                  if nbrs is not None else None)
+
+    if fault_plan is not None:
+        fs_spec = fault_state_specs(fault_plan, AXIS)
+
+        def step_f(net, phi, fl, consts, sigma, nbrs, buckets, fs):
+            return _sgp_step_flows_impl(
+                net, phi, fl, consts, variant=variant, scaling=scaling,
+                sigma=sigma, kappa=kappa, method=method, psum_axis=AXIS,
+                engine_impl=engine_impl, nbrs=nbrs, buckets=buckets,
+                fault_plan=fault_plan, fault_state=fs)
+
+        sharded = _shard_map(
+            step_f, mesh=mesh,
+            in_specs=(_TASK_SHARDED_NET, _phi_spec(method), _CARRY_SPEC,
+                      _CONSTS_SPEC, P(), nbrs_spec, _buckets_spec(buckets),
+                      fs_spec),
+            out_specs=(_phi_spec(method), _CARRY_SPEC, P(), fs_spec))
+        jitted = jax.jit(sharded)
+        return partial(_call_with_nbrs_flows_faulted, jitted, nbrs,
+                       buckets)
 
     def step(net, phi, fl, consts, sigma, nbrs, buckets):
         return _sgp_step_flows_impl(
@@ -211,6 +238,11 @@ def make_distributed_step_flows(mesh: Mesh, variant: str = "sgp",
 def _call_with_nbrs_flows(jitted, nbrs, buckets, net, phi, fl, consts,
                           sigma):
     return jitted(net, phi, fl, consts, sigma, nbrs, buckets)
+
+
+def _call_with_nbrs_flows_faulted(jitted, nbrs, buckets, net, phi, fl,
+                                  consts, sigma, fs):
+    return jitted(net, phi, fl, consts, sigma, nbrs, buckets, fs)
 
 
 @dataclasses.dataclass
@@ -246,6 +278,11 @@ class DistributedRunState:
     stopped: bool = False
     flows: Optional[FlowsCarry] = None   # flows of `phi` (device carry)
     buckets: object = None           # NeighborBuckets (bucketed sparse mode)
+    fault_plan: object = None        # faults.FaultPlan (static; None = off)
+    fault_state: object = None       # faults.FaultState (device carry)
+    guard_cfg: object = None         # guards.GuardConfig (None = unguarded)
+    guard_state: object = None       # guards.GuardState (device carry)
+    guard_events: list = dataclasses.field(default_factory=list)
 
 
 def init_distributed_state(net: CECNetwork, phi0,
@@ -254,14 +291,22 @@ def init_distributed_state(net: CECNetwork, phi0,
                            kappa: float = 0.0, min_scale: float = 0.05,
                            method: str = "dense",
                            engine_impl: Optional[str] = None,
-                           bucketed: bool = False
+                           bucketed: bool = False,
+                           fault_plan=None,
+                           fault_rng: Optional[jax.Array] = None,
+                           guards=None
                            ) -> DistributedRunState:
     """Pad, convert at the boundary, build the shard_map step and
     evaluate φ⁰'s flows + T⁰ (one solve, both carried) — exactly
     `run_distributed`'s prologue.  bucketed=True (sparse method only)
     replicates the degree-bucketed tiles on every device and runs each
     shard's fixed-point recursions over them (bitwise the padded
-    shard_map trajectory, ΣVb·Db per-round work per shard)."""
+    shard_map trajectory, ΣVb·Db per-round work per shard).
+    fault_plan/fault_rng arm the on-device fault injectors inside the
+    shard_mapped step; guards (a guards.GuardConfig) arms the
+    sentinel/rollback layer — both live on the PADDED tensors (padded
+    rows are fault-transparent: local=1 data rows pass the mass
+    sentinel, empty result rows have |rsum|=0)."""
     from .network import build_buckets
     mesh = mesh or task_mesh()
     n_dev = mesh.devices.size
@@ -284,16 +329,29 @@ def init_distributed_state(net: CECNetwork, phi0,
                                        scaling=scaling, kappa=kappa,
                                        method=method, nbrs=nbrs,
                                        engine_impl=engine_impl,
-                                       buckets=buckets)
+                                       buckets=buckets,
+                                       fault_plan=fault_plan)
     fl_p, T0 = flows_carry_and_cost_jit(net_p, phi_p, method, nbrs=nbrs,
                                         engine_impl=engine_impl,
                                         buckets=buckets)
     consts = make_consts(net_p, T0, min_scale)
+    fault_state = None
+    if fault_plan is not None:
+        fault_state = init_fault_state(net_p, phi_p, fl_p, fault_plan,
+                                       rng=fault_rng, method=method,
+                                       nbrs=nbrs, engine_impl=engine_impl,
+                                       buckets=buckets)
+    guard_state = None
+    if guards is not None:
+        from .guards import init_guard_state
+        guard_state = init_guard_state(phi_p, fl_p, T0, guards)
     return DistributedRunState(
         phi=phi_p, consts=consts, nbrs=nbrs, net_p=net_p, step=step,
         mesh=mesh, method=method, scaling=scaling, variant=variant,
         engine_impl=engine_impl, S=S, costs=[float(T0)],
-        min_scale=min_scale, flows=fl_p, buckets=buckets)
+        min_scale=min_scale, flows=fl_p, buckets=buckets,
+        fault_plan=fault_plan, fault_state=fault_state,
+        guard_cfg=guards, guard_state=guard_state)
 
 
 def rebaseline_distributed_state(state: DistributedRunState,
@@ -316,6 +374,18 @@ def rebaseline_distributed_state(state: DistributedRunState,
     state.consts = make_consts(net_p, T0, state.min_scale)
     state.costs = [float(T0)]
     state.sigma, state.n_rejected, state.stopped = 1.0, 0, False
+    if state.fault_plan is not None:
+        # re-anchor ring/hold on the new baseline's marginals; the fault
+        # rng stream continues where the previous segment left it
+        state.fault_state = init_fault_state(
+            net_p, phi_p, fl_p, state.fault_plan,
+            rng=state.fault_state.rng, method=state.method,
+            nbrs=state.nbrs, engine_impl=state.engine_impl,
+            buckets=state.buckets)
+    if state.guard_cfg is not None:
+        from .guards import init_guard_state
+        state.guard_state = init_guard_state(phi_p, fl_p, T0,
+                                             state.guard_cfg)
     return state
 
 
@@ -336,10 +406,18 @@ def run_distributed_chunk(state: DistributedRunState, n_iters: int,
     mirrors the select arithmetic in f32 (`accept_step`).  `tol`, like
     the single-process driver, fires only after an ACCEPTED step.
     """
+    faulted = (state.fault_plan is not None
+               and state.fault_state is not None)
+    guarded = (state.guard_cfg is not None
+               and state.guard_state is not None)
     if driver is None:
         driver = "fused"
     if driver not in ("host", "fused"):
         raise ValueError(f"unknown driver {driver!r}")
+    if faulted or guarded:
+        # faults carry on-device state, guards select on device — only
+        # the fused pipeline threads them (host == fused bitwise anyway)
+        driver = "fused"
     if state.stopped or n_iters <= 0:
         return state
     fl = state.flows
@@ -380,9 +458,18 @@ def _run_distributed_chunk_fused(state: DistributedRunState, fl,
                                  n_iters: int, tol: float
                                  ) -> DistributedRunState:
     """Async-pipelined distributed chunk: one device sync per chunk
-    (see `sgp._run_chunk_fused` — same design, shard_mapped step)."""
+    (see `sgp._run_chunk_fused` — same design, shard_mapped step; the
+    fault/guard layers thread exactly as in the single-process fused
+    driver, with the fault state flowing through the shard_map)."""
     adaptive = state.scaling == "adaptive" and state.variant == "sgp"
+    faulted = (state.fault_plan is not None
+               and state.fault_state is not None)
+    guarded = (state.guard_cfg is not None
+               and state.guard_state is not None)
+    if guarded:
+        from .guards import _guarded_update   # lazy: guards imports sgp
     phi = state.phi
+    fs, gs, cfg = state.fault_state, state.guard_state, state.guard_cfg
     sigma = jnp.float32(state.sigma)
     prev = jnp.float32(state.costs[-1])
     n_costs = jnp.asarray(len(state.costs), jnp.int32)
@@ -390,18 +477,58 @@ def _run_distributed_chunk_fused(state: DistributedRunState, fl,
     stopped = jnp.asarray(False)
     tol32 = jnp.float32(tol)
     cost_hist, take_hist, live_hist = [], [], []
-    for _ in range(n_iters):
-        phi_new, fl_new, cost_new = state.step(state.net_p, phi, fl,
-                                               state.consts, sigma)
-        (phi, fl, sigma, prev, n_costs, n_rej, stopped, _, take,
-         live) = _accept_update(phi_new, fl_new, cost_new, phi, fl,
-                                sigma, prev, n_costs, n_rej, stopped,
-                                None, None, tol32, adaptive=adaptive)
+    code_hist, roll_hist, ck_hist = [], [], []
+    it_start = state.it
+    for it in range(state.it, state.it + n_iters):
+        if faulted:
+            phi_new, fl_new, cost_new, fs_new = state.step(
+                state.net_p, phi, fl, state.consts, sigma, fs)
+        else:
+            phi_new, fl_new, cost_new = state.step(state.net_p, phi, fl,
+                                                   state.consts, sigma)
+        stopped_pre = stopped
+        if faulted:
+            # a stopped carry freezes the fault state too (bitwise
+            # chunked resumption past a stop — see sgp._run_chunk_fused)
+            fs = jax.tree.map(
+                lambda new, old: jnp.where(stopped_pre, old, new),
+                fs_new, fs)
+        if guarded:
+            do_ckpt = bool(cfg.checkpoint_every
+                           and it % cfg.checkpoint_every == 0)
+            (phi, fl, sigma, prev, n_costs, n_rej, stopped, _, take,
+             live, gs, code, rolled, ck_cost) = _guarded_update(
+                phi_new, fl_new, cost_new, phi, fl, sigma, prev,
+                n_costs, n_rej, stopped, None, None, tol32, gs,
+                state.nbrs, adaptive=adaptive, cfg=cfg, do_ckpt=do_ckpt)
+            code_hist.append(code)
+            roll_hist.append(rolled)
+            ck_hist.append(ck_cost)
+        else:
+            (phi, fl, sigma, prev, n_costs, n_rej, stopped, _, take,
+             live) = _accept_update(phi_new, fl_new, cost_new, phi, fl,
+                                    sigma, prev, n_costs, n_rej, stopped,
+                                    None, None, tol32, adaptive=adaptive)
         cost_hist.append(cost_new)
         take_hist.append(take)
         live_hist.append(live)
-    _fold_fused_histories(state, sigma, n_rej, stopped, cost_hist,
-                          take_hist, live_hist)
+    extra = (code_hist, roll_hist, ck_hist) if guarded else None
+    cost_h, _, live_h, extra_h = _fold_fused_histories(
+        state, sigma, n_rej, stopped, cost_hist, take_hist, live_hist,
+        extra)
+    if guarded:
+        from .guards import GuardEvent, SENTINEL_NAMES
+        codes, rolls, cks = extra_h
+        for i, (code, rolled, ck) in enumerate(zip(codes, rolls, cks)):
+            if live_h[i] and int(code) > 0:
+                state.guard_events.append(GuardEvent(
+                    it=it_start + i, sentinel=SENTINEL_NAMES[int(code)],
+                    action="rollback" if bool(rolled) else "stop",
+                    cost=float(cost_h[i]),
+                    restored_cost=float(ck) if bool(rolled) else None))
+        state.guard_state = gs
+    if faulted:
+        state.fault_state = fs
     state.phi, state.flows = phi, fl
     return state
 
@@ -420,7 +547,9 @@ def run_distributed(net: CECNetwork, phi0, n_iters: int = 200,
                     scaling: str = "adaptive", kappa: float = 0.0,
                     min_scale: float = 0.05, method: str = "dense",
                     tol: float = 0.0, engine_impl: Optional[str] = None,
-                    driver: Optional[str] = None, bucketed: bool = False):
+                    driver: Optional[str] = None, bucketed: bool = False,
+                    fault_plan=None, fault_rng: Optional[jax.Array] = None,
+                    guards=None):
     """Driver: distributed SGP with the same safeguard as `sgp.run`.
 
     method="sparse" runs the neighbor-list engine on every shard (the
@@ -440,20 +569,30 @@ def run_distributed(net: CECNetwork, phi0, n_iters: int = 200,
     chunk with one host sync at the end; driver="host" is the bitwise
     python-loop reference.  `tol` stops after an accepted step improves
     by less than tol·cost (once >4 costs accumulated).
+    fault_plan/fault_rng/guards mirror `sgp.run` — either one forces
+    the fused driver, and the history then also carries
+    "guard_events"/"n_corrupt".
     """
     sparse_in = isinstance(phi0, PhiSparse)
     state = init_distributed_state(net, phi0, mesh=mesh, variant=variant,
                                    scaling=scaling, kappa=kappa,
                                    min_scale=min_scale, method=method,
                                    engine_impl=engine_impl,
-                                   bucketed=bucketed)
+                                   bucketed=bucketed,
+                                   fault_plan=fault_plan,
+                                   fault_rng=fault_rng, guards=guards)
     state = run_distributed_chunk(state, n_iters, tol=tol, driver=driver)
     phi = state.phi
     if method == "sparse" and not sparse_in:
         state.phi = sparse_to_phi(phi, state.nbrs, net.V)  # back to dense
     phi_out = unpad_phi(state)
-    return phi_out, {"costs": state.costs, "final_cost": state.costs[-1],
-                     "n_rejected": state.n_rejected}
+    hist = {"costs": state.costs, "final_cost": state.costs[-1],
+            "n_rejected": state.n_rejected}
+    if guards is not None:
+        hist["guard_events"] = state.guard_events
+    if state.fault_state is not None:
+        hist["n_corrupt"] = int(state.fault_state.n_corrupt)
+    return phi_out, hist
 
 
 # ----------------------------------------------------------- node sharding

@@ -1103,6 +1103,35 @@ def refeasibilize(net: CECNetwork, phi: Phi,
     return Phi(data, result)
 
 
+def sanitize_phi_sparse(phi_sp: PhiSparse, nbrs: Neighbors) -> PhiSparse:
+    """On-device repair of a damaged edge-slot iterate (jit-safe — no
+    topology change, unlike `refeasibilize_sparse`): zero non-finite
+    entries and padding slots, clip negatives, renormalize data rows
+    with lost mass routed to local offload (a fully-emptied row becomes
+    all-local), renormalize surviving result rows and leave emptied ones
+    exactly empty.  The guard layer's last-resort scrub for a poisoned
+    checkpoint; NOT a projection — feasible iterates pass through only
+    up to renormalization, so call it on known-damaged state."""
+
+    def scrub(x, mask):
+        x = jnp.where(jnp.isfinite(x), x, 0.0)
+        x = jnp.maximum(x, 0.0)
+        return jnp.where(mask, x, 0.0)
+
+    data = scrub(phi_sp.data, nbrs.out_mask[None])
+    local = scrub(phi_sp.local[..., 0], True)
+    dsum = jnp.sum(data, axis=-1) + local
+    local = local + jnp.maximum(0.0, 1.0 - dsum)
+    tot = jnp.maximum(jnp.sum(data, axis=-1) + local, 1e-30)
+    data = data / tot[..., None]
+    local = local / tot
+    result = scrub(phi_sp.result, nbrs.out_mask[None])
+    rsum = jnp.sum(result, axis=-1)
+    result = result / jnp.maximum(rsum[..., None], 1e-30)
+    result = jnp.where(rsum[..., None] > 1e-12, result, 0.0)
+    return PhiSparse(data, local[..., None], result)
+
+
 def _slot_remap(old: Neighbors, new: Neighbors):
     """Per-row map from NEW out-edge slots to the OLD slot of the same
     edge (numpy, concrete): remap[i, e'] = e with old.out_nbr[i, e] ==

@@ -30,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -105,11 +106,24 @@ def check_invariants(net: CECNetwork, phi_sp: PhiSparse, nbrs: Neighbors,
 
 
 def iters_to_target(costs, target: float) -> int:
-    """Index of the first cost <= target (len(costs) if never reached)."""
+    """Index of the first cost <= target, or -1 if never reached.
+
+    The sentinel is deliberately NOT len(costs): a trajectory that
+    never reaches the target used to be indistinguishable from one
+    that reached it on its final step.  Consumers that want a number
+    comparable against budgets use `iters_or_budget`."""
     for i, c in enumerate(costs):
         if c <= target:
             return i
-    return len(costs)
+    return -1
+
+
+def iters_or_budget(iters: int, budget: int) -> int:
+    """Fold `iters_to_target`'s -1 sentinel into a comparable count:
+    the count itself when the target was reached, else `budget + 1`
+    (strictly worse than exhausting the whole budget), so sums and
+    warm-vs-cold comparisons order never-reached outcomes correctly."""
+    return budget + 1 if iters < 0 else iters
 
 
 # ---------------------------------------------------------------- records
@@ -154,6 +168,21 @@ class ReplayEngine:
     proj_impl, driver, ... — driver="distributed" instead bakes
     variant/scaling in at init; a run_opts "driver" wins over
     loop_driver for the "run" engine).
+
+    invariant_checks (default on) runs `check_invariants` host-side on
+    the repaired iterate after every event — a spot check over
+    `invariant_loop_tasks` tasks for the loop-freedom closure.  Benches
+    pass False: the check is a host sync + O(S·V²) closure that would
+    drain the async pipeline a long churn schedule is supposed to keep
+    full.
+
+    fault_plan/fault_rng/guards (see core.faults / core.guards) thread
+    the robustness layer through every warm segment: each event's
+    re-initialized driver state gets a fresh split of the engine's
+    fault rng (so replay stays deterministic per seed but segments
+    draw independent fault streams) and a guard carry re-anchored at
+    the repaired iterate; tripped `GuardEvent`s accumulate across
+    segments in `guard_log`.
     """
 
     def __init__(self, net: CECNetwork, phi0: Optional[PhiSparse] = None,
@@ -161,7 +190,10 @@ class ReplayEngine:
                  min_scale: float = 0.05, mesh=None,
                  run_opts: Optional[dict] = None,
                  loop_driver: Optional[str] = None,
-                 bucketed: bool = False):
+                 bucketed: bool = False,
+                 invariant_checks: bool = True,
+                 invariant_loop_tasks: Optional[int] = 4,
+                 fault_plan=None, fault_rng=None, guards=None):
         if driver not in ("run", "distributed"):
             raise ValueError(f"unknown replay driver {driver!r}")
         if bucketed and driver != "run":
@@ -186,6 +218,13 @@ class ReplayEngine:
             # thread the backend into every run_chunk call (the
             # distributed driver instead bakes it into its step)
             self.run_opts.setdefault("engine_impl", engine_impl)
+        self.invariant_checks = invariant_checks
+        self.invariant_loop_tasks = invariant_loop_tasks
+        self.fault_plan = fault_plan
+        self.guards = guards
+        self._fault_rng = (jax.random.PRNGKey(0) if fault_rng is None
+                           else fault_rng)
+        self._guard_log: list = []           # finished segments' trips
         self.records: list[EventRecord] = []
         self.cost_log: list[float] = []      # finished segments' costs
         self.total_iters = 0
@@ -199,19 +238,27 @@ class ReplayEngine:
 
     # ------------------------------------------------------------- driver
     def _init_state(self, phi_sp: PhiSparse) -> None:
+        robust = {}
+        if self.fault_plan is not None:
+            # each segment draws an independent fault stream from the
+            # engine's deterministic seed
+            self._fault_rng, sub = jax.random.split(self._fault_rng)
+            robust.update(fault_plan=self.fault_plan, fault_rng=sub)
+        if self.guards is not None:
+            robust.update(guards=self.guards)
         if self.driver == "run":
             self.state: object = init_run_state(
                 self.net, phi_sp, min_scale=self.min_scale,
                 method="sparse", engine_impl=self.engine_impl,
                 nbrs=self.nbrs, bucketed=self.bucketed,
-                buckets=self.buckets)
+                buckets=self.buckets, **robust)
         else:
             self.state = dist.init_distributed_state(
                 self.net, phi_sp, mesh=self.mesh, method="sparse",
                 min_scale=self.min_scale, engine_impl=self.engine_impl,
                 variant=self.run_opts.get("variant", "sgp"),
                 scaling=self.run_opts.get("scaling", "adaptive"),
-                kappa=self.run_opts.get("kappa", 0.0))
+                kappa=self.run_opts.get("kappa", 0.0), **robust)
             self.mesh = self.state.mesh      # reuse across re-inits
 
     @property
@@ -229,6 +276,12 @@ class ReplayEngine:
     @property
     def cost(self) -> float:
         return self.state.costs[-1]
+
+    @property
+    def guard_log(self) -> list:
+        """All `GuardEvent`s tripped so far, across segments."""
+        return self._guard_log + list(
+            getattr(self.state, "guard_events", None) or [])
 
     def iterate(self, n_iters: int) -> list:
         """Advance the warm driver `n_iters` iterations; returns the
@@ -279,6 +332,10 @@ class ReplayEngine:
                 self.buckets = build_buckets(net_new.adj)
         self.net = net_new
         self.cost_log.extend(self.state.costs)
+        self._guard_log.extend(
+            getattr(self.state, "guard_events", None) or [])
+        if getattr(self.state, "guard_events", None):
+            self.state.guard_events = []     # folded into _guard_log
         if self.driver == "distributed" and kind != "topology":
             # rate/routing events keep the graph (self.nbrs stays the
             # memoized tiles the step was built from): swap the churned
@@ -286,6 +343,11 @@ class ReplayEngine:
             dist.rebaseline_distributed_state(self.state, net_new, phi)
         else:
             self._init_state(phi)             # warm re-baseline
+        if self.invariant_checks:
+            # post-event feasibility/loop-freedom spot check (see
+            # __init__: benches disable this host sync)
+            check_invariants(self.net, self.phi, self.nbrs,
+                             n_loop_tasks=self.invariant_loop_tasks)
         rec = EventRecord(it=self.total_iters, event=event, kind=kind,
                           cost_before=cost_before,
                           cost_after=float(self.state.costs[-1]))
@@ -357,4 +419,5 @@ class ReplayEngine:
 
     def history(self) -> dict:
         return {"costs": self.costs, "final_cost": self.cost,
-                "records": self.records, "n_iters": self.total_iters}
+                "records": self.records, "n_iters": self.total_iters,
+                "guard_events": self.guard_log}

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .costs import Cost
+from .faults import fault_step_begin, fault_step_end, init_fault_state
 from .marginals import BIG, Marginals, compute_marginals
 from .network import (CECNetwork, Flows, FlowsCarry, Neighbors, Phi,
                       PhiSparse, _phi_edge_views, build_buckets,
@@ -382,11 +383,17 @@ def _sgp_propose_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
                       proj_impl: Optional[str] = None,
                       engine_impl: Optional[str] = None,
                       nbrs: Optional[Neighbors] = None,
-                      slot_F: bool = False, buckets=None):
+                      slot_F: bool = False, buckets=None,
+                      mg: Optional[Marginals] = None):
     """The projection half of one Algorithm-1 iteration: given the
     CURRENT iterate φ and its (already measured, psum'ed if distributed)
     flows `fl`, compute marginals, blocked sets, the Eq. 16 scaling and
     the projected candidate iterate.  Returns (phi_new, marginals).
+
+    `mg` overrides the internally computed marginals — the fault layer
+    (core.faults) injects stale/held broadcasts this way; the blocked
+    sets then see the SAME (possibly stale) values the projection does,
+    exactly as a node acting on an old broadcast would.
 
     Splitting the step here is what lets the drivers compute each
     iterate's flows exactly once: `fl` is threaded through the driver
@@ -402,9 +409,10 @@ def _sgp_propose_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
     if sparse and nbrs is None:
         raise ValueError("method='sparse' needs nbrs=build_neighbors(adj) "
                          "precomputed outside jit")
-    mg = compute_marginals(net, phi, fl, method, nbrs=nbrs,
-                           engine_impl=engine_impl, slot_F=slot_F,
-                           buckets=buckets)
+    if mg is None:
+        mg = compute_marginals(net, phi, fl, method, nbrs=nbrs,
+                               engine_impl=engine_impl, slot_F=slot_F,
+                               buckets=buckets)
 
     S, V = net.S, net.V
     is_dest = jnp.arange(V)[None] == net.dest[:, None]
@@ -648,9 +656,19 @@ def _sgp_step_flows_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
                          proj_impl: Optional[str] = None,
                          engine_impl: Optional[str] = None,
                          nbrs: Optional[Neighbors] = None,
-                         buckets=None, with_aux: bool = False):
+                         buckets=None, with_aux: bool = False,
+                         fault_plan=None, fault_state=None):
     """One DRIVER iteration: propose the candidate from the current
     iterate's carried flows, then measure the candidate (flows + cost).
+
+    fault_plan/fault_state (see core.faults) arm the asynchrony/fault
+    injectors INSIDE this same executable: stale/held marginal
+    broadcasts feed the propose via `mg=`, partial participation folds
+    into the Theorem-2 row masks, and value corruption poisons the
+    candidate AFTER its flows/cost were measured.  When armed the
+    return becomes (phi_new, carry_new, cost_new, fault_state');
+    `fault_plan=None` (the default) traces the identical program as
+    before the fault layer existed.
 
     This is the primitive both the python-loop reference and the fused
     pipelined driver dispatch — the SAME jitted executable, which is
@@ -663,6 +681,20 @@ def _sgp_step_flows_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
     boundary `network.flows_carry_and_cost` for φ⁰).  Returns
     (phi_new, carry_new, cost_new[, marginals-of-`phi` if with_aux]).
     """
+    faulted = fault_plan is not None and fault_state is not None
+    mg_in = None
+    if faulted:
+        if with_aux:
+            raise ValueError("with_aux is not supported under fault "
+                             "injection (the aux marginals would be the "
+                             "injected, not the true, ones)")
+        mg_in, pmask, k_cor, fs_mid = fault_step_begin(
+            net, phi, fl, fault_state, fault_plan, method, nbrs,
+            engine_impl, buckets)
+        if pmask is not None:
+            mask_data = pmask if mask_data is None else mask_data & pmask
+            mask_result = (pmask if mask_result is None
+                           else mask_result & pmask)
     phi_new, mg = _sgp_propose_impl(
         net, phi, fl, consts, variant=variant, beta=beta,
         mask_data=mask_data, mask_result=mask_result,
@@ -670,10 +702,15 @@ def _sgp_step_flows_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
         method=method, use_blocking=use_blocking, scaling=scaling,
         sigma=sigma, kappa=kappa, proj_impl=proj_impl,
         engine_impl=engine_impl, nbrs=nbrs, buckets=buckets,
-        slot_F=(method == "sparse"))
+        slot_F=(method == "sparse"), mg=mg_in)
     carry_new, cost_new = flows_carry_and_cost(
         net, phi_new, method, nbrs=nbrs, engine_impl=engine_impl,
         psum_axis=psum_axis, buckets=buckets)
+    if faulted:
+        phi_new, fs_new = fault_step_end(
+            net, phi_new, k_cor, fault_plan, fs_mid, nbrs=nbrs,
+            psum_axis=psum_axis)
+        return phi_new, carry_new, cost_new, fs_new
     if with_aux:
         return phi_new, carry_new, cost_new, mg
     return phi_new, carry_new, cost_new
@@ -683,7 +720,7 @@ sgp_step_flows = jax.jit(
     _sgp_step_flows_impl,
     static_argnames=("variant", "method", "use_blocking", "scaling",
                      "kappa", "psum_axis", "proj_impl", "engine_impl",
-                     "with_aux"))
+                     "with_aux", "fault_plan"))
 
 
 # ------------------------------------------------------------------- driver
@@ -763,13 +800,20 @@ class RunState:
     stopped: bool = False            # sigma blow-up / tol early exit
     flows: Optional[FlowsCarry] = None   # flows of `phi` (device carry)
     buckets: object = None           # NeighborBuckets (bucketed sparse mode)
+    fault_plan: object = None        # faults.FaultPlan (static injector arm)
+    fault_state: object = None       # faults.FaultState (device carry)
+    guard_cfg: object = None         # guards.GuardConfig (static policy)
+    guard_state: object = None       # guards.GuardState (device carry)
+    guard_events: list = dataclasses.field(default_factory=list)
 
 
 def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
                    method: str = "dense", rng: Optional[jax.Array] = None,
                    engine_impl: Optional[str] = None,
                    nbrs: Optional[Neighbors] = None,
-                   bucketed: bool = False, buckets=None) -> RunState:
+                   bucketed: bool = False, buckets=None,
+                   fault_plan=None, fault_rng: Optional[jax.Array] = None,
+                   guards=None) -> RunState:
     """Set up the resumable driver state exactly as `run` would: build
     (or accept) the neighbor lists, convert a dense φ⁰ to slots under
     method="sparse", evaluate φ⁰'s flows + T⁰ (one solve, both carried)
@@ -779,7 +823,13 @@ def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
     via `buckets`) the degree-bucketed `NeighborBuckets` tiles and runs
     EVERY fixed-point recursion of the driver over them — bitwise the
     padded trajectory at ΣVb·Db per-round work (the power-law scaling
-    mode; see core.network's layout docstring)."""
+    mode; see core.network's layout docstring).
+
+    fault_plan (faults.FaultPlan) arms the asynchrony/fault injectors,
+    seeded by `fault_rng` (default PRNGKey(0), a stream separate from
+    the Theorem-2 async `rng`); guards (guards.GuardConfig) arms the
+    sentinel/rollback recovery layer anchored at φ⁰.  Either forces the
+    fused driver in `run_chunk`."""
     if method == "sparse":
         nbrs = build_neighbors(net.adj) if nbrs is None else nbrs
         if bucketed and buckets is None:
@@ -793,9 +843,20 @@ def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
                                        engine_impl=engine_impl,
                                        buckets=buckets)
     consts = make_consts(net, T0, min_scale)
+    fault_state = None
+    if fault_plan is not None:
+        fault_state = init_fault_state(
+            net, phi0, fl0, fault_plan, rng=fault_rng, method=method,
+            nbrs=nbrs, engine_impl=engine_impl, buckets=buckets)
+    guard_state = None
+    if guards is not None:
+        from .guards import init_guard_state   # lazy: guards imports sgp
+        guard_state = init_guard_state(phi0, fl0, T0, guards)
     return RunState(phi=phi0, consts=consts, nbrs=nbrs, method=method,
                     costs=[float(T0)], min_scale=min_scale, rng=rng,
-                    flows=fl0, buckets=buckets)
+                    flows=fl0, buckets=buckets,
+                    fault_plan=fault_plan, fault_state=fault_state,
+                    guard_cfg=guards, guard_state=guard_state)
 
 
 def _accept_update_impl(phi_new, fl_new, cost_new, phi, fl, sigma, prev,
@@ -899,6 +960,16 @@ def run_chunk(net: CECNetwork, state: RunState, n_iters: int,
         driver = "host" if callback is not None else "fused"
     if driver not in ("host", "fused"):
         raise ValueError(f"unknown driver {driver!r}")
+    if state.fault_plan is not None or state.guard_cfg is not None:
+        if callback is not None:
+            raise ValueError(
+                "fault injection / guards run the fused on-device "
+                "pipeline; per-iteration callbacks need a fault-free "
+                "host loop")
+        # host and fused are bitwise-identical, so silently routing a
+        # robustness run through the fused carry changes nothing but
+        # where the fault/guard selects live
+        driver = "fused"
     if driver == "fused" and callback is not None:
         raise ValueError("driver='fused' runs the whole chunk on device; "
                          "per-iteration callbacks need driver='host'")
@@ -968,16 +1039,20 @@ def run_chunk(net: CECNetwork, state: RunState, n_iters: int,
 
 
 def _fold_fused_histories(state, sigma, n_rej, stopped, cost_hist,
-                          take_hist, live_hist) -> None:
+                          take_hist, live_hist, extra=None):
     """The fused chunk's single device→host sync + bookkeeping
     writeback, shared by both drivers (`_run_chunk_fused`,
     `distributed._run_distributed_chunk_fused`) so the
     accept_step-mirroring accounting — which executed-and-accepted
     iterations append to `costs`, how `it` advances, when `stopped`
-    latches — stays single-sourced."""
-    sigma, n_rej, stopped, cost_hist, take_hist, live_hist = \
+    latches — stays single-sourced.  `extra` is any additional device
+    pytree to fetch in the SAME device_get (the guard layer's sentinel
+    histories); the fetched host histories come back as
+    (cost_hist, take_hist, live_hist, extra) so callers can render
+    per-iteration records without a second sync."""
+    sigma, n_rej, stopped, cost_hist, take_hist, live_hist, extra = \
         jax.device_get((sigma, n_rej, stopped, cost_hist, take_hist,
-                        live_hist))
+                        live_hist, extra))
     for c, t, l in zip(cost_hist, take_hist, live_hist):
         if l and t:
             state.costs.append(float(c))
@@ -985,6 +1060,7 @@ def _fold_fused_histories(state, sigma, n_rej, stopped, cost_hist,
     state.n_rejected += int(n_rej)
     state.it += int(np.sum(live_hist))
     state.stopped = bool(stopped)
+    return cost_hist, take_hist, live_hist, extra
 
 
 def _run_chunk_fused(net: CECNetwork, state: RunState, fl, n_iters: int,
@@ -1014,8 +1090,13 @@ def _run_chunk_fused(net: CECNetwork, state: RunState, fl, n_iters: int,
     adaptive = scaling == "adaptive" and variant == "sgp"
     refresh = scaling == "paper" and refresh_every
     use_rng = async_frac > 0.0 and state.rng is not None
+    faulted = state.fault_plan is not None and state.fault_state is not None
+    guarded = state.guard_cfg is not None and state.guard_state is not None
+    if guarded:
+        from .guards import _guarded_update   # lazy: guards imports sgp
     phi, consts, nbrs = state.phi, state.consts, state.nbrs
     rng = state.rng
+    fs, gs, cfg = state.fault_state, state.guard_state, state.guard_cfg
     sigma = jnp.float32(state.sigma)
     prev = jnp.float32(state.costs[-1])
     n_costs = jnp.asarray(len(state.costs), jnp.int32)
@@ -1023,6 +1104,8 @@ def _run_chunk_fused(net: CECNetwork, state: RunState, fl, n_iters: int,
     stopped = jnp.asarray(False)
     tol32 = jnp.float32(tol)
     cost_hist, take_hist, live_hist = [], [], []
+    code_hist, roll_hist, ck_hist = [], [], []
+    it_start = state.it
     for it in range(state.it, state.it + n_iters):
         if refresh and it > 0 and it % refresh_every == 0:
             fresh = _make_consts_jit(net, prev, state.min_scale)
@@ -1035,23 +1118,62 @@ def _run_chunk_fused(net: CECNetwork, state: RunState, fl, n_iters: int,
                                           (net.S, net.V))
             mask_r = jax.random.bernoulli(k2, 1.0 - async_frac,
                                           (net.S, net.V))
-        phi_new, fl_new, cost_new = sgp_step_flows(
+        out = sgp_step_flows(
             net, phi, fl, consts, variant=variant, beta=beta,
             mask_data=mask_d, mask_result=mask_r,
             allowed_data=allowed_data, allowed_result=allowed_result,
             method=state.method, use_blocking=use_blocking,
             scaling=scaling, sigma=sigma, kappa=kappa,
             proj_impl=proj_impl, engine_impl=engine_impl, nbrs=nbrs,
-            buckets=state.buckets)
-        (phi, fl, sigma, prev, n_costs, n_rej, stopped, rng, take,
-         live) = _accept_update(phi_new, fl_new, cost_new, phi, fl,
-                                sigma, prev, n_costs, n_rej, stopped,
-                                rng_new, rng, tol32, adaptive=adaptive)
+            buckets=state.buckets, fault_plan=state.fault_plan,
+            fault_state=fs)
+        stopped_pre = stopped
+        if faulted:
+            phi_new, fl_new, cost_new, fs_new = out
+            # a stopped carry freezes the fault state too, so chunked
+            # resumption past a stop stays bitwise (the dead dispatches
+            # must not advance the fault rng/ring)
+            fs = jax.tree.map(
+                lambda new, old: jnp.where(stopped_pre, old, new),
+                fs_new, fs)
+        else:
+            phi_new, fl_new, cost_new = out
+        if guarded:
+            do_ckpt = bool(cfg.checkpoint_every
+                           and it % cfg.checkpoint_every == 0)
+            (phi, fl, sigma, prev, n_costs, n_rej, stopped, rng, take,
+             live, gs, code, rolled, ck_cost) = _guarded_update(
+                phi_new, fl_new, cost_new, phi, fl, sigma, prev,
+                n_costs, n_rej, stopped, rng_new, rng, tol32, gs, nbrs,
+                adaptive=adaptive, cfg=cfg, do_ckpt=do_ckpt)
+            code_hist.append(code)
+            roll_hist.append(rolled)
+            ck_hist.append(ck_cost)
+        else:
+            (phi, fl, sigma, prev, n_costs, n_rej, stopped, rng, take,
+             live) = _accept_update(phi_new, fl_new, cost_new, phi, fl,
+                                    sigma, prev, n_costs, n_rej, stopped,
+                                    rng_new, rng, tol32, adaptive=adaptive)
         cost_hist.append(cost_new)
         take_hist.append(take)
         live_hist.append(live)
-    _fold_fused_histories(state, sigma, n_rej, stopped, cost_hist,
-                          take_hist, live_hist)
+    extra = (code_hist, roll_hist, ck_hist) if guarded else None
+    cost_h, _, live_h, extra_h = _fold_fused_histories(
+        state, sigma, n_rej, stopped, cost_hist, take_hist, live_hist,
+        extra)
+    if guarded:
+        from .guards import GuardEvent, SENTINEL_NAMES
+        codes, rolls, cks = extra_h
+        for i, (code, rolled, ck) in enumerate(zip(codes, rolls, cks)):
+            if live_h[i] and int(code) > 0:
+                state.guard_events.append(GuardEvent(
+                    it=it_start + i, sentinel=SENTINEL_NAMES[int(code)],
+                    action="rollback" if bool(rolled) else "stop",
+                    cost=float(cost_h[i]),
+                    restored_cost=float(ck) if bool(rolled) else None))
+        state.guard_state = gs
+    if faulted:
+        state.fault_state = fs
     state.phi, state.flows, state.consts = phi, fl, consts
     if use_rng:
         state.rng = rng
@@ -1067,8 +1189,16 @@ def run(net: CECNetwork, phi0, n_iters: int = 200,
         refresh_every: int = 20, scaling: str = "adaptive",
         kappa: float = 0.0, proj_impl: Optional[str] = None,
         engine_impl: Optional[str] = None,
-        driver: Optional[str] = None, bucketed: bool = False):
+        driver: Optional[str] = None, bucketed: bool = False,
+        fault_plan=None, fault_rng: Optional[jax.Array] = None,
+        guards=None):
     """Driver around the jitted step.
+
+    fault_plan (faults.FaultPlan, seeded by fault_rng) arms on-device
+    asynchrony/fault injection; guards (guards.GuardConfig) arms the
+    sentinel/rollback recovery layer — see those modules.  Either one
+    forces the fused driver; the history then also carries
+    "guard_events"/"n_corrupt".
 
     driver="fused" (the default when no callback is given) runs each
     chunk of iterations — accept/reject, sigma safeguard, tol exit and
@@ -1126,7 +1256,8 @@ def run(net: CECNetwork, phi0, n_iters: int = 200,
     dense_in = not isinstance(phi0, PhiSparse)
     state = init_run_state(net, phi0, min_scale=min_scale, method=method,
                            rng=rng, engine_impl=engine_impl,
-                           bucketed=bucketed)
+                           bucketed=bucketed, fault_plan=fault_plan,
+                           fault_rng=fault_rng, guards=guards)
     state = run_chunk(net, state, n_iters, variant=variant, beta=beta,
                       allowed_data=allowed_data,
                       allowed_result=allowed_result,
@@ -1137,5 +1268,10 @@ def run(net: CECNetwork, phi0, n_iters: int = 200,
     phi = state.phi
     if method == "sparse" and dense_in:
         phi = sparse_to_phi(phi, state.nbrs, net.V)  # boundary: back to dense
-    return phi, {"costs": state.costs, "final_cost": state.costs[-1],
-                 "n_rejected": state.n_rejected}
+    hist = {"costs": state.costs, "final_cost": state.costs[-1],
+            "n_rejected": state.n_rejected}
+    if guards is not None:
+        hist["guard_events"] = state.guard_events
+    if state.fault_state is not None:
+        hist["n_corrupt"] = int(state.fault_state.n_corrupt)
+    return phi, hist

@@ -1,0 +1,291 @@
+"""Guard layer (core.guards): sentinels, checkpoint ring, rollback.
+
+Contract under test:
+
+  guarded == unguarded, bitwise   with no faults tripping, the guarded
+                                  fused driver walks the unguarded
+                                  trajectory bitwise (the guard carry
+                                  update runs `_accept_update_impl`
+                                  op-for-op and every rollback select
+                                  has a False predicate).
+  sentinels classify              each sentinel fires on the exact
+                                  pathology it names — unit-tested by
+                                  driving `_guarded_update` directly
+                                  with crafted carries.
+  rollback recovers               under real NaN corruption the run
+                                  rolls back to checkpoints, keeps a
+                                  finite iterate, and records the trips
+                                  as `GuardEvent`s; a retry budget
+                                  turns persistent corruption into a
+                                  clean stop that still restores the
+                                  last good iterate.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import guards as guards_mod
+from repro.core.faults import FaultPlan
+from repro.core.guards import (GuardConfig, SENTINEL_NAMES,
+                               _guarded_update, init_guard_state)
+from repro.core.network import PhiSparse
+
+SMALL = ["connected_er", "balanced_tree", "fog", "abilene", "lhc", "geant"]
+
+_CACHE = {}
+
+
+def _setup(name):
+    if name not in _CACHE:
+        net = core.make_scenario(core.TABLE_II[name])
+        nbrs = core.build_neighbors(net.adj)
+        _CACHE[name] = (net, core.spt_phi_sparse(net, nbrs), nbrs)
+    return _CACHE[name]
+
+
+def _assert_trees_equal(a, b, msg=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), msg)
+
+
+def _tree_finite(tree):
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(tree))
+
+
+# ------------------------------------------- guarded == unguarded bitwise
+@pytest.mark.parametrize("name", SMALL)
+def test_guarded_fault_free_bitwise(name):
+    """No faults → no trips → every guard select passes the accepted
+    carry through untouched: costs, n_rejected, φ all bitwise, and the
+    event log stays empty."""
+    net, phi0, _ = _setup(name)
+    pa, ha = core.run(net, phi0, n_iters=20, method="sparse")
+    pb, hb = core.run(net, phi0, n_iters=20, method="sparse",
+                      guards=GuardConfig())
+    assert ha["costs"] == hb["costs"], name
+    assert ha["n_rejected"] == hb["n_rejected"], name
+    assert hb["guard_events"] == []
+    _assert_trees_equal(pa, pb, name)
+
+
+def test_guarded_chunked_resume_bitwise():
+    """The GuardState (ring, window, counters) rides RunState across
+    chunks and the checkpoint cadence follows the GLOBAL iteration:
+    12 guarded iterations == 4+4+4, bitwise."""
+    net, phi0, nbrs = _setup("fog")
+    cfg = GuardConfig(checkpoint_every=3)
+    pa, ha = core.run(net, phi0, n_iters=12, method="sparse", guards=cfg)
+    st = core.init_run_state(net, phi0, method="sparse", nbrs=nbrs,
+                             guards=cfg)
+    for _ in range(3):
+        core.run_chunk(net, st, 4)
+    assert ha["costs"] == st.costs
+    _assert_trees_equal(pa, st.phi)
+
+
+# ----------------------------------------------------- sentinel unit tests
+def _carry(name="abilene", cfg=GuardConfig()):
+    net, phi0, nbrs = _setup(name)
+    fl, T0 = core.flows_carry_and_cost(net, phi0, method="sparse",
+                                       nbrs=nbrs)
+    gs = init_guard_state(phi0, fl, T0, cfg)
+    base = dict(phi=phi0, fl=fl, sigma=jnp.float32(1.0),
+                prev=jnp.float32(T0), n_costs=jnp.asarray(1, jnp.int32),
+                n_rej=jnp.asarray(0, jnp.int32),
+                stopped=jnp.asarray(False), tol=jnp.float32(0.0))
+    return net, phi0, nbrs, fl, float(T0), gs, base
+
+
+def _step(phi_new, fl_new, cost_new, b, gs, nbrs, cfg, adaptive=True,
+          do_ckpt=False):
+    return _guarded_update(phi_new, fl_new, jnp.float32(cost_new),
+                           b["phi"], b["fl"], b["sigma"], b["prev"],
+                           b["n_costs"], b["n_rej"], b["stopped"],
+                           None, None, b["tol"], gs, nbrs,
+                           adaptive=adaptive, cfg=cfg, do_ckpt=do_ckpt)
+
+
+def test_sentinel_mass_drift_rolls_back():
+    """An accepted candidate whose data rows sum to 2 trips mass_drift
+    and the carry restores the ring's slot-0 anchor bitwise.  (The
+    doubled mass goes through `local` — abilene's SPT φ⁰ computes every
+    task at its source, so its forwarding slots are all zero.)"""
+    cfg = GuardConfig()
+    net, phi0, nbrs, fl, T0, gs, b = _carry(cfg=cfg)
+    bad = PhiSparse(phi0.data, phi0.local * 2, phi0.result)
+    out = _step(bad, fl, 0.9 * T0, b, gs, nbrs, cfg)
+    phi_out, sigma_out, prev_out = out[0], out[2], out[3]
+    code, rolled = int(out[11]), bool(out[12])
+    assert SENTINEL_NAMES[code] == "mass_drift"
+    assert rolled
+    _assert_trees_equal(phi_out, phi0)
+    assert float(prev_out) == T0
+    assert float(sigma_out) == cfg.sigma_backoff   # max(1, 1) * backoff
+    assert int(out[10].retries) == 1 and int(out[10].n_trips) == 1
+
+
+def test_sentinel_nonfinite_phi_rolls_back():
+    cfg = GuardConfig()
+    net, phi0, nbrs, fl, T0, gs, b = _carry(cfg=cfg)
+    bad = PhiSparse(phi0.data.at[0, 0, 0].set(jnp.nan), phi0.local,
+                    phi0.result)
+    out = _step(bad, fl, 0.9 * T0, b, gs, nbrs, cfg)
+    assert SENTINEL_NAMES[int(out[11])] == "nonfinite_phi"
+    assert bool(out[12])
+    _assert_trees_equal(out[0], phi0)
+
+
+def test_sentinel_nonfinite_cost_rolls_back():
+    """The accept path never ADMITS a non-finite candidate cost
+    (`isfinite` gates `acc` in both scalings), so this sentinel guards
+    the CARRIED cost — e.g. resuming a segment that went bad while
+    unguarded: it trips on the first guarded iteration and restores."""
+    cfg = GuardConfig()
+    net, phi0, nbrs, fl, T0, gs, b = _carry(cfg=cfg)
+    b = dict(b, prev=jnp.float32(jnp.nan))
+    out = _step(phi0, fl, jnp.nan, b, gs, nbrs, cfg)
+    assert SENTINEL_NAMES[int(out[11])] == "nonfinite_cost"
+    assert bool(out[12])
+    assert float(out[3]) == T0                     # prev restored
+
+
+def test_sentinel_cost_explosion_rolls_back():
+    cfg = GuardConfig(explode_factor=10.0)
+    net, phi0, nbrs, fl, T0, gs, b = _carry(cfg=cfg)
+    out = _step(phi0, fl, 100.0 * T0, b, gs, nbrs, cfg, adaptive=False)
+    assert SENTINEL_NAMES[int(out[11])] == "cost_explosion"
+    assert bool(out[12])
+    assert float(out[3]) == T0
+
+
+def test_clean_step_no_trip():
+    cfg = GuardConfig()
+    net, phi0, nbrs, fl, T0, gs, b = _carry(cfg=cfg)
+    out = _step(phi0, fl, 0.9 * T0, b, gs, nbrs, cfg)
+    assert int(out[11]) == 0 and not bool(out[12])
+    assert float(out[3]) == pytest.approx(0.9 * T0)
+    assert int(out[10].n_trips) == 0
+
+
+def test_corrupted_checkpoint_is_sanitized_on_restore():
+    """If the newest ring slot itself holds poison, the restore path
+    re-feasibilizes it on device instead of handing it back: the
+    restored iterate is finite with unit row masses."""
+    cfg = GuardConfig()
+    net, phi0, nbrs, fl, T0, gs, b = _carry(cfg=cfg)
+    poisoned = PhiSparse(gs.ckpt_phi.data.at[0, 0, 0, 0].set(jnp.nan),
+                         gs.ckpt_phi.local, gs.ckpt_phi.result)
+    gs = guards_mod.GuardState(
+        ckpt_phi=poisoned, ckpt_fl=gs.ckpt_fl, ckpt_cost=gs.ckpt_cost,
+        ckpt_sigma=gs.ckpt_sigma, valid=gs.valid, ptr=gs.ptr,
+        window=gs.window, wptr=gs.wptr, retries=gs.retries,
+        n_trips=gs.n_trips)
+    bad = PhiSparse(phi0.data.at[0, 0, 0].set(jnp.nan), phi0.local,
+                    phi0.result)
+    out = _step(bad, fl, 0.9 * T0, b, gs, nbrs, cfg)
+    assert bool(out[12])
+    assert _tree_finite(out[0])
+    dsum = jnp.sum(out[0].data, axis=-1) + out[0].local[..., 0]
+    np.testing.assert_allclose(np.asarray(dsum), 1.0, atol=1e-5)
+
+
+# --------------------------------------------------- end-to-end recovery
+def test_rollback_recovery_under_corruption():
+    """corrupt_p=0.5 NaN poisoning with a tight checkpoint cadence: the
+    guarded run trips repeatedly, rolls back every time, and still ends
+    with a finite iterate and a finite cost trajectory."""
+    net, phi0, _ = _setup("abilene")
+    plan = FaultPlan(corrupt_p=0.5)
+    cfg = GuardConfig(checkpoint_every=2, max_retries=64)
+    phi, hist = core.run(net, phi0, n_iters=30, method="sparse",
+                         fault_plan=plan,
+                         fault_rng=jax.random.PRNGKey(3), guards=cfg)
+    events = hist["guard_events"]
+    assert len(events) >= 1
+    assert all(ev.action == "rollback" for ev in events)
+    assert all(ev.sentinel in SENTINEL_NAMES.values() for ev in events)
+    assert all(ev.restored_cost is not None
+               and np.isfinite(ev.restored_cost) for ev in events)
+    assert _tree_finite(phi)
+    assert np.isfinite(hist["costs"]).all()
+    assert hist["n_corrupt"] >= len(events)
+
+
+def test_retry_budget_latches_stop_with_clean_iterate():
+    """corrupt_p=1.0 never stops tripping: after `max_retries`
+    rollbacks the guard latches `stopped` — but the final trip STILL
+    restores the checkpoint, so the handed-back iterate is finite."""
+    net, phi0, nbrs = _setup("abilene")
+    plan = FaultPlan(corrupt_p=1.0)
+    cfg = GuardConfig(checkpoint_every=2, max_retries=2)
+    st = core.init_run_state(net, phi0, method="sparse", nbrs=nbrs,
+                             fault_plan=plan,
+                             fault_rng=jax.random.PRNGKey(0), guards=cfg)
+    core.run_chunk(net, st, 20)
+    assert st.stopped
+    events = st.guard_events
+    assert len(events) == cfg.max_retries + 1
+    assert [ev.action for ev in events] == ["rollback"] * cfg.max_retries \
+        + ["stop"]
+    assert _tree_finite(st.phi)
+
+
+def test_guard_events_render_iterations():
+    """GuardEvent.it is the GLOBAL driver iteration — chunked runs must
+    keep numbering across chunk boundaries."""
+    net, phi0, nbrs = _setup("abilene")
+    plan = FaultPlan(corrupt_p=1.0)
+    cfg = GuardConfig(checkpoint_every=2, max_retries=100)
+    st = core.init_run_state(net, phi0, method="sparse", nbrs=nbrs,
+                             fault_plan=plan,
+                             fault_rng=jax.random.PRNGKey(0), guards=cfg)
+    core.run_chunk(net, st, 4)
+    core.run_chunk(net, st, 4)
+    its = [ev.it for ev in st.guard_events]
+    assert its == sorted(its)
+    assert any(ev.it >= 4 for ev in st.guard_events)
+
+
+# ----------------------------------------------------------- distributed
+def test_distributed_guarded_fault_free_bitwise():
+    net, phi0, _ = _setup("abilene")
+    pa, ha = core.run_distributed(net, phi0, n_iters=15, method="sparse")
+    pb, hb = core.run_distributed(net, phi0, n_iters=15, method="sparse",
+                                  guards=GuardConfig())
+    assert ha["costs"] == hb["costs"]
+    assert hb["guard_events"] == []
+    _assert_trees_equal(pa, pb)
+
+
+def test_distributed_rollback_recovery():
+    net, phi0, _ = _setup("abilene")
+    plan = FaultPlan(corrupt_p=0.5)
+    cfg = GuardConfig(checkpoint_every=2, max_retries=64)
+    phi, hist = core.run_distributed(net, phi0, n_iters=30,
+                                     method="sparse", fault_plan=plan,
+                                     fault_rng=jax.random.PRNGKey(3),
+                                     guards=cfg)
+    assert len(hist["guard_events"]) >= 1
+    assert _tree_finite(phi)
+    assert np.isfinite(hist["costs"]).all()
+
+
+# ---------------------------------------------------------------- replay
+def test_replay_engine_guarded_churn():
+    """Faults + guards through a churn replay: the engine's guard_log
+    accumulates trips across segments (driver re-inits at every event)
+    and the live iterate stays finite through the whole schedule."""
+    net, phi0, _ = _setup("fog")
+    sched = core.random_schedule(net, n_events=3, seed=3, gap=(6, 10))
+    eng = core.ReplayEngine(net, phi0=phi0,
+                            fault_plan=FaultPlan(corrupt_p=0.3),
+                            fault_rng=jax.random.PRNGKey(5),
+                            guards=GuardConfig(checkpoint_every=2,
+                                               max_retries=64))
+    h = eng.play(sched, tail_iters=15)
+    assert _tree_finite(eng.phi)
+    assert h["guard_events"] == eng.guard_log
+    assert all(ev.action in ("rollback", "stop")
+               for ev in eng.guard_log)

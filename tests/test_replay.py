@@ -22,6 +22,13 @@ The replay engine's contract (core.replay) is locked four ways:
 
 * **Scale** (slow) — the canned `sw_1000_churn` schedule end-to-end,
   with per-event invariants and warm-start beating the cold restart.
+
+* **Round-trip identities** — cut-then-restore / fail-then-recover
+  with ZERO intervening iterations on a crafted 6-node instance where
+  the repaired iterate is predictable in closed form: the cut of a
+  mass-free edge round-trips `refeasibilize_sparse` bitwise to φ⁰, and
+  a leaf node's fail/recover round-trips to φ⁰ with exactly that
+  node's result row zeroed.
 """
 import numpy as np
 import pytest
@@ -269,7 +276,9 @@ def test_randomized_schedule_invariants(seed):
 def test_warm_beats_cold_on_small_churn():
     """Across a failure→recovery roundtrip, the warm iterate needs
     measurably fewer iterations-to-target than cold SPT restarts
-    (deterministic: seeded schedule, CPU floats)."""
+    (deterministic: seeded schedule, CPU floats).  A -1 (never reached
+    target) folds to budget+1 via `iters_or_budget`, so a side that
+    never converges correctly counts WORSE than one that barely does."""
     net, _ = _setup("fog")
     hub = core.hub_node(net)
     sched = core.ChurnSchedule((
@@ -280,9 +289,51 @@ def test_warm_beats_cold_on_small_churn():
     hist = eng.play(sched, tail_iters=8, cold_baseline=True)
     repairs = [r for r in hist["records"] if r.warm_iters is not None]
     assert len(repairs) == 2
-    warm = sum(r.warm_iters for r in repairs)
-    cold = sum(r.cold_iters for r in repairs)
+    warm = sum(core.iters_or_budget(r.warm_iters, r.segment_iters)
+               for r in repairs)
+    cold = sum(core.iters_or_budget(r.cold_iters, r.segment_iters)
+               for r in repairs)
     assert warm < cold, (warm, cold)
+
+
+def test_iters_to_target_sentinel():
+    """-1 means 'never reached' — previously len(costs), which made a
+    trajectory that never converged indistinguishable from one that
+    converged on its very last step.  `iters_or_budget` folds the
+    sentinel into budget+1: strictly worse than using the full budget."""
+    assert core.iters_to_target([5.0, 4.0, 3.0], 3.5) == 2
+    assert core.iters_to_target([5.0, 4.0, 3.0], 5.0) == 0
+    assert core.iters_to_target([5.0, 4.0], 1.0) == -1
+    assert core.iters_to_target([], 1.0) == -1
+    assert core.iters_or_budget(2, 10) == 2
+    assert core.iters_or_budget(0, 10) == 0
+    assert core.iters_or_budget(-1, 10) == 11
+
+
+def test_invariant_checks_switch(monkeypatch):
+    """invariant_checks=True (the default) runs `check_invariants` on
+    the repaired iterate after every event; False (the bench setting)
+    runs none — the check is a host sync the streaming pipeline can't
+    afford, so the switch must really remove it."""
+    import repro.core.replay as replay_mod
+    net, _ = _setup("abilene")
+    calls = []
+    real = replay_mod.check_invariants
+
+    def counting(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(replay_mod, "check_invariants", counting)
+    eng = core.ReplayEngine(net)
+    eng.iterate(2)
+    eng.apply_event(core.RateScale(1.1))
+    eng.apply_event(core.NodeFail(core.hub_node(net)))
+    assert len(calls) == 2
+    eng_off = core.ReplayEngine(net, invariant_checks=False)
+    eng_off.iterate(2)
+    eng_off.apply_event(core.RateScale(1.1))
+    assert len(calls) == 2                         # unchanged
 
 
 def test_dest_redraw_rebuilds_moved_task():
@@ -407,6 +458,105 @@ def test_refeasibilize_leaves_noop_unchanged():
                                np.asarray(sp.result), atol=1e-6)
 
 
+# ---------------------------------------------------- round-trip identity
+def _line_net():
+    """A 6-node instance whose repair outcomes are predictable in
+    closed form: chain 0-1-2-3-4 plus node 5 hanging off BOTH 1 and 2,
+    one task sourced at 0 with destination 4, unit linear costs.  The
+    SPT routes node 5's (flow-free) result row via 2 — strictly fewer
+    hops than via 1 — so edge (1,5) carries zero φ mass in EITHER
+    direction and cutting it damages nothing."""
+    import jax.numpy as jnp
+    V, S = 6, 1
+    adj = np.zeros((V, V), bool)
+    for u, v in ((0, 1), (1, 2), (2, 3), (3, 4), (1, 5), (2, 5)):
+        adj[u, v] = adj[v, u] = True
+    d = np.where(adj, 1.0, 1.0)
+    r = np.zeros((S, V))
+    r[0, 0] = 1.0
+    from repro.core.costs import Cost
+    from repro.core.network import CECNetwork
+    return CECNetwork(
+        adj=jnp.asarray(adj),
+        link_cost=Cost("linear", jnp.asarray(d)),
+        comp_cost=Cost("linear", jnp.asarray(np.ones(V))),
+        dest=jnp.asarray([4], dtype=jnp.int32),
+        r=jnp.asarray(r),
+        a=jnp.asarray([0.5]),
+        w=jnp.asarray(np.ones((S, V))),
+        task_type=jnp.asarray([0], dtype=jnp.int32))
+
+
+def _assert_sparse_equal(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a.data), np.asarray(b.data),
+                                  msg)
+    np.testing.assert_array_equal(np.asarray(a.local),
+                                  np.asarray(b.local), msg)
+    np.testing.assert_array_equal(np.asarray(a.result),
+                                  np.asarray(b.result), msg)
+
+
+def test_link_cut_restore_roundtrip_is_bitwise_identity():
+    """Cut an edge that carries NO φ mass in either direction, restore
+    it immediately (zero iterations in between): the double
+    `refeasibilize_sparse` must be a bitwise identity on φ — rows remap
+    onto themselves and the renormalizer divides by exactly 1.0."""
+    net = _line_net()
+    nbrs = core.build_neighbors(net.adj)
+    phi0 = core.spt_phi_sparse(net, nbrs)
+    # node 5 really does route via 2: its φ⁰ row is one-hot on 2's slot
+    via = np.asarray(nbrs.out_nbr)[5][np.asarray(phi0.result)[0, 5] > 0]
+    assert list(via) == [2]
+
+    st = core.ChurnState(net)
+    st.apply(core.LinkCut(1, 5))
+    phi_c, nbrs_c = core.refeasibilize_sparse(st.network(), phi0, nbrs)
+    check_invariants(st.network(), phi_c, nbrs_c)
+    st.apply(core.LinkRestore(1, 5))
+    net_r = st.network()
+    phi_r, nbrs_r = core.refeasibilize_sparse(net_r, phi_c, nbrs_c)
+
+    np.testing.assert_array_equal(np.asarray(net_r.adj),
+                                  np.asarray(net.adj))
+    np.testing.assert_array_equal(np.asarray(nbrs_r.out_nbr),
+                                  np.asarray(nbrs.out_nbr))
+    _assert_sparse_equal(phi_r, phi0, "cut+restore must be identity")
+    check_invariants(net, phi_r, nbrs_r)
+
+
+def test_node_fail_recover_roundtrip_zeroes_only_failed_row():
+    """Fail node 5 (it loses every exit), recover it immediately: every
+    OTHER row round-trips bitwise to φ⁰, and node 5's result row comes
+    back exactly zero — it is flow-free (r[0,5]=0) so the recovery
+    repair must leave it empty rather than SPT-rebuild it (empty rows
+    of non-source nodes are feasible and cost nothing)."""
+    net = _line_net()
+    nbrs = core.build_neighbors(net.adj)
+    phi0 = core.spt_phi_sparse(net, nbrs)
+
+    st = core.ChurnState(net)
+    st.apply(core.NodeFail(5))
+    phi_f, nbrs_f = core.refeasibilize_sparse(st.network(), phi0, nbrs)
+    check_invariants(st.network(), phi_f, nbrs_f)
+    st.apply(core.NodeRecover(5))
+    net_r = st.network()
+    phi_r, nbrs_r = core.refeasibilize_sparse(net_r, phi_f, nbrs_f)
+
+    np.testing.assert_array_equal(np.asarray(nbrs_r.out_nbr),
+                                  np.asarray(nbrs.out_nbr))
+    want_result = np.asarray(phi0.result).copy()
+    want_result[0, 5] = 0.0                        # the one allowed change
+    np.testing.assert_array_equal(np.asarray(phi_r.data),
+                                  np.asarray(phi0.data))
+    np.testing.assert_array_equal(np.asarray(phi_r.local),
+                                  np.asarray(phi0.local))
+    np.testing.assert_array_equal(np.asarray(phi_r.result), want_result)
+    check_invariants(net, phi_r, nbrs_r)
+    # and the round-tripped iterate still descends
+    _, h = core.run(net, phi_r, n_iters=4, method="sparse")
+    assert h["final_cost"] <= h["costs"][0] * (1.0 + 1e-12)
+
+
 # ----------------------------------------------------------------- scale
 @pytest.mark.slow
 def test_sw1000_churn_replay():
@@ -431,7 +581,9 @@ def test_sw1000_churn_replay():
     check_invariants(eng.net, eng.phi, eng.nbrs, n_loop_tasks=4)
     repairs = [r for r in hist["records"] if r.warm_iters is not None]
     assert repairs, "no repair events measured"
-    warm = sum(r.warm_iters for r in repairs)
-    cold = sum(r.cold_iters for r in repairs)
+    warm = sum(core.iters_or_budget(r.warm_iters, r.segment_iters)
+               for r in repairs)
+    cold = sum(core.iters_or_budget(r.cold_iters, r.segment_iters)
+               for r in repairs)
     assert warm <= cold, (warm, cold)
     assert np.isfinite(hist["final_cost"])
