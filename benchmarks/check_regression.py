@@ -18,7 +18,10 @@ them) and the robustness rows (``robustness_*``: async/fault
 final-cost ratios over the synchronous optimum, guarded recovery
 iterations-to-target, and the armed-guard per-iteration wall-clock —
 quality rows where higher is worse, so the same slower-than gate
-applies) gate the exit status: a
+applies) and the regret-vs-drift rows (``regret_event_us_*``: churn
+events-per-second wall-clock through the event-loop engine and the
+fused stream; the speedup ratio and the cost-gap payloads are ungated
+context) gate the exit status: a
 fresh row more than ``threshold`` (default 20%) slower than its
 committed counterpart is a regression and the process exits 1.  Rows
 present on only one side are reported but never fail — machines differ
@@ -45,21 +48,22 @@ import sys
 GATED_PREFIXES = ("scale_flows_sparse", "scale_step_sparse",
                   "scale_run_sparse", "scale_fusedrun_V", "scale_rounds_",
                   "scale_bucketed_", "scale_wasted_lanes_",
-                  "replay_", "robustness_")
+                  "replay_", "robustness_", "regret_")
 # ...except the cold-restart iteration counts: cold shares its
 # iterations-to-target TARGET with the warm run (min of the two finals),
 # so a warm-start IMPROVEMENT inflates the cold count — it is context
-# for the warm row, not a perf promise of its own.  The bucketed
-# speedup RATIO is excluded for the same inverted-semantics reason as
-# scale_fusedrun_speedup_*: a higher value is an improvement, and a
-# padded-engine speedup would read as a "regression" — the bucketed
-# flows/step TIMING rows carry the actual promise
-UNGATED_PREFIXES = ("replay_cold_iters_", "scale_bucketed_speedup_")
+# for the warm row, not a perf promise of its own.  The bucketed and
+# fused-stream speedup RATIOS are excluded for the same
+# inverted-semantics reason as scale_fusedrun_speedup_*: a higher value
+# is an improvement, and a speedup would read as a "regression" — the
+# per-event/flows/step TIMING rows carry the actual promise
+UNGATED_PREFIXES = ("replay_cold_iters_", "scale_bucketed_speedup_",
+                    "regret_speedup_")
 
 # gated row families: a fresh report missing an ENTIRE family the
 # committed baseline has means that sweep never ran — overwriting the
 # baseline would silently un-gate the family forever (see report())
-FAMILIES = ("scale_", "replay_", "robustness_")
+FAMILIES = ("scale_", "replay_", "robustness_", "regret_")
 
 
 def rows_to_dict(rows) -> dict:
@@ -157,7 +161,7 @@ def report(fresh: dict, committed: dict, threshold: float = 0.2,
             print(f"# ERROR: committed baseline has gated {fam}* rows "
                   "but the fresh report has none — run that sweep too "
                   "(scale: --only scale; replay: --replay; robustness: "
-                  "--robustness)", file=out)
+                  "--robustness; regret: --regret)", file=out)
             return 2
     return 1 if regressions else 0
 

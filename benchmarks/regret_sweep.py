@@ -1,0 +1,166 @@
+"""Regret-vs-drift sweep (fig: none — the online-CEC tracking regime
+of arXiv 2406.19613 on top of the paper's churn scenarios).
+
+Two questions the replay rows never answered:
+
+1. **How far does the warm online iterate trail the per-instant
+   optimum** while the task pattern drifts?  The sweep replays the
+   canned `<scenario>_churn` schedule once through the fused stream,
+   then — cold, to convergence, OFF the hot path — solves the
+   per-instant optimum T*_k on each post-event network and reports the
+   cumulative and per-segment cost gap of the online accepted-cost
+   trajectory against it.
+2. **How many churn events per second can the engine absorb?**  A
+   seeded mobility burst (two `SourceRedraw`s per iteration — the
+   drifting-task-pattern regime of Theorem 2, all same-graph) replays
+   through the event-loop engine (host repair + device_get + re-init
+   per event) and through the fused stream (`play(stream=True)`: the
+   whole burst is ONE asynchronous dispatch with per-event on-device
+   rebaselines and a single sync).  Both trajectories are bitwise
+   identical (tests/test_replay_stream.py), so the rows time the same
+   computation.
+
+Rows (per scenario `<name>`):
+
+  regret_event_us_loop_<name>    us per churn event, event-loop engine,
+                                 16-event mobility burst (gated)
+  regret_event_us_fused_<name>   us per churn event through the fused
+                                 stream, same burst (gated)
+  regret_speedup_<name>          loop/fused events-per-second ratio
+                                 (ungated: higher is better, the
+                                 inverse of the gate's semantics; the
+                                 two *_us rows above are the gate)
+  regret_cum_<name>              derived-only (us=0): cumulative regret
+                                 Σ_k Σ_j (c_kj − T*_k) of the canned
+                                 churn replay's accepted-cost series
+                                 against the per-segment optimum
+  regret_seg_<name>              derived-only (us=0): per-event final
+                                 relative gap curve
+                                 `Event:(c_final − T*)/T*`
+
+The `regret_event_us_*` rows are gated by benchmarks/check_regression.py
+like every other `regret_`/`replay_` timing row; the derived-only rows
+carry their payload in the `derived` field and are skipped by the
+gate's `us_per_call > 0` filter.  Emitted by ``benchmarks.run
+--regret`` (opt-in like --replay: the sweep cold-solves sw_1000 to
+convergence once per churn event).
+"""
+import time
+
+from repro import core
+
+from .common import emit
+
+NAMES = ("sw_queue", "sw_1000")          # --full adds grid_1024
+N_BURST = 16                             # mobility-burst events
+# cold-solve budget for the per-instant optimum: chunks until the tol
+# early-exit fires (off the hot path, so generous)
+COLD_CHUNK = 40
+COLD_MAX_CHUNKS = 6
+COLD_TOL = 1e-5
+
+
+def mobility_burst(net: core.CECNetwork, n_events: int = N_BURST,
+                   start: int = 1) -> core.ChurnSchedule:
+    """Seeded all-same-graph burst: two task sources re-drawn per
+    iteration (ChurnSchedule allows ties — simultaneous arrivals), the
+    densest churn the stream coalesces into one window."""
+    S = int(net.dest.shape[0])
+    events = []
+    for i in range(n_events // 2):
+        t = start + i
+        events.append((t, core.SourceRedraw((2 * i) % S, seed=100 + i)))
+        events.append((t, core.SourceRedraw((2 * i + 1) % S, seed=200 + i)))
+    return core.ChurnSchedule(tuple(events), name="mobility_burst")
+
+
+def cold_optimum(net: core.CECNetwork) -> float:
+    """Per-instant optimum: cold SPT start on `net`, run to the tol
+    early-exit (or the chunk budget) — the drift-free baseline the
+    online iterate is regretted against."""
+    state = core.init_run_state(net, core.spt_phi_sparse(net),
+                                method="sparse")
+    for _ in range(COLD_MAX_CHUNKS):
+        core.run_chunk(net, state, COLD_CHUNK, tol=COLD_TOL)
+        if state.stopped:
+            break
+    return min(state.costs)
+
+
+def _regret_rows(name: str, net: core.CECNetwork) -> None:
+    """Replay the canned churn schedule, then score each post-event
+    segment against its cold per-instant optimum."""
+    sched = core.churn_schedule(f"{name}_churn", net)
+    eng = core.ReplayEngine(net, invariant_checks=False)
+    hist = eng.play(sched, tail_iters=5)
+
+    # the post-event networks, re-derived exactly as the engine did
+    churn = core.ChurnState(net)
+    nets = []
+    for (_t, event) in sched.events:
+        churn.apply(event)
+        nets.append(churn.network())
+
+    cum = 0.0
+    curve = []
+    for rec, net_k in zip(hist["records"], nets):
+        opt = cold_optimum(net_k)
+        series = [rec.cost_after] + list(rec.segment_costs)
+        cum += sum(c - opt for c in series)
+        gap = (series[-1] - opt) / opt if opt > 0 else 0.0
+        curve.append(f"{type(rec.event).__name__}:{gap:+.4f}")
+    emit(f"regret_cum_{name}", 0.0,
+         f"cum={cum:.3f};n_events={len(nets)}")
+    emit(f"regret_seg_{name}", 0.0, "|".join(curve))
+
+
+def _throughput_rows(name: str, net: core.CECNetwork) -> None:
+    """Events/sec through both engines on the mobility burst.  One
+    warm-up play per path (jit caches + the stream's memoized SPT rows
+    are what steady-state churn absorption runs on), then one timed
+    play each — a single play IS the workload, there is no tighter
+    per-call unit to repeat."""
+    sched = mobility_burst(net)
+    n_ev = len(sched.events)
+    walls = {}
+    for stream in (False, True):
+        core.ReplayEngine(net, invariant_checks=False).play(
+            sched, tail_iters=1, stream=stream)       # warm-up
+        eng = core.ReplayEngine(net, invariant_checks=False)
+        t0 = time.perf_counter()
+        hist = eng.play(sched, tail_iters=1, stream=stream)
+        walls[stream] = (time.perf_counter() - t0) * 1e6
+    final = hist["final_cost"]
+    emit(f"regret_event_us_loop_{name}", walls[False] / n_ev,
+         f"V={net.V};n_events={n_ev};final={final:.4f}")
+    emit(f"regret_event_us_fused_{name}", walls[True] / n_ev,
+         f"V={net.V};n_events={n_ev};final={final:.4f}")
+    emit(f"regret_speedup_{name}", walls[False] / walls[True],
+         f"loop_ev_per_s={n_ev / walls[False] * 1e6:.2f};"
+         f"fused_ev_per_s={n_ev / walls[True] * 1e6:.2f}")
+
+
+def _bench_regret(name: str) -> None:
+    net = core.make_scenario(core.TABLE_II[name])
+    _regret_rows(name, net)
+    _throughput_rows(name, net)
+
+
+def run(full: bool = False, names=None):
+    if names is None:
+        names = NAMES + ("grid_1024",) if full else NAMES
+    for name in names:
+        _bench_regret(name)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also sweep the grid_1024 churn schedule")
+    ap.add_argument("--names", default=None,
+                    help="comma-separated TABLE_II scenario names")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=a.full,
+        names=tuple(a.names.split(",")) if a.names else None)

@@ -25,7 +25,7 @@ def main(argv=None) -> int:
                          "(dense at V=1000 takes hours on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL)
-                         + ",replay,robustness")
+                         + ",replay,robustness,regret")
     ap.add_argument("--replay", action="store_true",
                     help="also run the streaming churn replay sweep "
                          "(benchmarks.replay_sweep) and emit its "
@@ -39,6 +39,14 @@ def main(argv=None) -> int:
                          "quality ratios, guarded recovery counts and "
                          "the armed-guard iteration wall-clock, part "
                          "of the committed BENCH_report.json baseline")
+    ap.add_argument("--regret", action="store_true",
+                    help="also run the regret-vs-drift sweep "
+                         "(benchmarks.regret_sweep) and emit its "
+                         "regret_* rows — per-instant-optimum cost "
+                         "gaps over the canned churn schedules and "
+                         "churn events/sec through the fused stream "
+                         "vs the event-loop engine, part of the "
+                         "committed BENCH_report.json baseline")
     ap.add_argument("--sizes", default=None,
                     help="comma-separated V list for the scale sweep "
                          "(e.g. 20,100 — the quick CI subset); default "
@@ -63,6 +71,8 @@ def main(argv=None) -> int:
         names.append("replay")
     if args.robustness and "robustness" not in names:
         names.append("robustness")
+    if args.regret and "regret" not in names:
+        names.append("regret")
 
     committed_rows = None
     if args.check_against:
@@ -109,6 +119,9 @@ def main(argv=None) -> int:
             elif name == "robustness":
                 from . import robustness_sweep
                 robustness_sweep.run(full=args.full)
+            elif name == "regret":
+                from . import regret_sweep
+                regret_sweep.run(full=args.full)
             elif name == "roofline":
                 from . import roofline
                 roofline.run(args.report)

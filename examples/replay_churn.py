@@ -4,7 +4,11 @@ A 5-event schedule — rate surge, hub failure, link cut, hub RECOVERY,
 rates easing off — replayed against a live warm-started iterate, with a
 cost-recovery printout per event.  The warm column is the replay
 engine; the cold column re-solves from the SPT φ⁰ after every repair
-(what you'd do without the engine).
+(what you'd do without the engine).  The regret column scores each
+segment's final cost against the PER-INSTANT optimum — a cold solve on
+that event's network run to its tol early-exit, off the replay path —
+the drift-tracking metric benchmarks/regret_sweep.py commits to
+BENCH_report.json.
 
     PYTHONPATH=src python examples/replay_churn.py [--topo ba]
 
@@ -50,8 +54,24 @@ engine = core.ReplayEngine(net, loop_driver="fused",
                            bucketed=(args.topo == "ba"))
 hist = engine.play(schedule, tail_iters=8, cold_baseline=True)
 
+# per-instant optima for the regret column: each event's network
+# (re-derived exactly as the engine derived it), cold-solved to the
+# tol early-exit — the reference the online iterate is tracking
+churn = core.ChurnState(net)
+optima = []
+for (_t, event) in schedule.events:
+    churn.apply(event)
+    net_k = churn.network()
+    st = core.init_run_state(net_k, core.spt_phi_sparse(net_k),
+                             method="sparse")
+    for _ in range(6):
+        core.run_chunk(net_k, st, 40, tol=1e-5)
+        if st.stopped:
+            break
+    optima.append(min(st.costs))
+
 print(f"{'event':<22}{'t':>4}{'before':>10}{'shock':>10}"
-      f"{'recovered':>11}{'warm':>6}{'cold':>6}")
+      f"{'recovered':>11}{'warm':>6}{'cold':>6}{'regret':>9}")
 def _fmt_iters(iters):
     # -1 is iters_to_target's never-reached sentinel
     if iters is None:
@@ -59,12 +79,13 @@ def _fmt_iters(iters):
     return ">" if iters < 0 else iters
 
 
-for rec in hist["records"]:
+for rec, opt in zip(hist["records"], optima):
     recovered = (rec.segment_costs or [rec.cost_after])[-1]
+    regret = (recovered - opt) / opt if opt > 0 else 0.0
     print(f"{type(rec.event).__name__:<22}{rec.it:>4}"
           f"{rec.cost_before:>10.2f}{rec.cost_after:>10.2f}"
           f"{recovered:>11.2f}{_fmt_iters(rec.warm_iters):>6}"
-          f"{_fmt_iters(rec.cold_iters):>6}")
+          f"{_fmt_iters(rec.cold_iters):>6}{regret:>+9.4f}")
 
 repairs = [r for r in hist["records"] if r.warm_iters is not None]
 # never-reached (-1) folds to budget+1 so a non-converging side counts

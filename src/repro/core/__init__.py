@@ -20,13 +20,14 @@ from .network import (CECNetwork, EdgeBuckets, Flows, FlowsCarry,
                       compute_flows, cost_of_flows, flows_carry_and_cost,
                       gather_edges, is_loop_free, mask_slots, offload_phi,
                       phi_to_sparse, refeasibilize, refeasibilize_sparse,
+                      refeasibilize_sparse_samegraph,
                       sanitize_phi_sparse, scatter_edges, sparse_to_phi,
                       spt_phi, spt_phi_sparse, total_cost, uniform_phi)
 from .marginals import Marginals, compute_marginals, phi_gradients
 from .faults import (FaultPlan, FaultState, fault_state_specs,
                      init_fault_state)
-from .sgp import (RunState, SGPConsts, init_run_state, make_consts,
-                  project_rows, run, run_chunk, sgp_step)
+from .sgp import (FusedStream, RunState, SGPConsts, init_run_state,
+                  make_consts, project_rows, run, run_chunk, sgp_step)
 from .guards import GuardConfig, GuardEvent, GuardState, init_guard_state
 from .baselines import run_all, run_lcor, run_lpr, run_spoo
 from .optimality import (flow_domain_optimum, marginals_vs_autodiff,
@@ -53,14 +54,15 @@ __all__ = [
     "cost_of_flows",
     "flows_carry_and_cost", "gather_edges",
     "is_loop_free", "mask_slots", "offload_phi", "phi_to_sparse",
-    "refeasibilize", "refeasibilize_sparse", "sanitize_phi_sparse",
+    "refeasibilize", "refeasibilize_sparse",
+    "refeasibilize_sparse_samegraph", "sanitize_phi_sparse",
     "scatter_edges",
     "sparse_to_phi", "spt_phi", "spt_phi_sparse", "total_cost",
     "uniform_phi",
     "Marginals", "compute_marginals", "phi_gradients",
     "FaultPlan", "FaultState", "fault_state_specs", "init_fault_state",
     "GuardConfig", "GuardEvent", "GuardState", "init_guard_state",
-    "RunState", "SGPConsts", "init_run_state", "make_consts",
+    "FusedStream", "RunState", "SGPConsts", "init_run_state", "make_consts",
     "project_rows", "run", "run_chunk", "sgp_step",
     "run_all", "run_lcor", "run_lpr", "run_spoo",
     "flow_domain_optimum", "marginals_vs_autodiff", "theorem1_residual",

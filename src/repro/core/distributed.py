@@ -355,7 +355,8 @@ def init_distributed_state(net: CECNetwork, phi0,
 
 
 def rebaseline_distributed_state(state: DistributedRunState,
-                                 net: CECNetwork, phi_sp
+                                 net: CECNetwork, phi_sp,
+                                 fault_rng: Optional[jax.Array] = None
                                  ) -> DistributedRunState:
     """Swap a SAME-GRAPH network (rate churn: r/cost params moved; or a
     destination re-draw — `dest` is just another step input) into the
@@ -363,7 +364,15 @@ def rebaseline_distributed_state(state: DistributedRunState,
     the compiled shard_map step is kept, so such events cost zero
     retraces.  `net.adj` must equal the adjacency the state was built
     from (the step computes with the init-time `Neighbors` tiles);
-    topology events must rebuild via `init_distributed_state` instead."""
+    topology events must rebuild via `init_distributed_state` instead.
+
+    `fault_rng` re-keys the fault injector for the new segment — the
+    ReplayEngine passes a fresh split of its engine-level rng here, the
+    same split a full `_init_state` rebuild would take, so the
+    post-event fault stream is identical between the two drivers'
+    rebaseline paths.  None continues the previous segment's stream
+    (the legacy behaviour, for direct callers that manage no engine
+    rng)."""
     net_p, phi_p, S = pad_tasks(net, phi_sp, state.mesh.devices.size)
     fl_p, T0 = flows_carry_and_cost_jit(net_p, phi_p, state.method,
                                         nbrs=state.nbrs,
@@ -375,11 +384,12 @@ def rebaseline_distributed_state(state: DistributedRunState,
     state.costs = [float(T0)]
     state.sigma, state.n_rejected, state.stopped = 1.0, 0, False
     if state.fault_plan is not None:
-        # re-anchor ring/hold on the new baseline's marginals; the fault
-        # rng stream continues where the previous segment left it
+        # re-anchor ring/hold on the new baseline's marginals, re-keyed
+        # per segment when the caller supplies a split
         state.fault_state = init_fault_state(
             net_p, phi_p, fl_p, state.fault_plan,
-            rng=state.fault_state.rng, method=state.method,
+            rng=(state.fault_state.rng if fault_rng is None
+                 else fault_rng), method=state.method,
             nbrs=state.nbrs, engine_impl=state.engine_impl,
             buckets=state.buckets)
     if state.guard_cfg is not None:

@@ -122,11 +122,16 @@ class ChurnSchedule:
 
     def __post_init__(self):
         its = [t for t, _ in self.events]
-        if any(b <= a for a, b in zip(its, its[1:])):
-            # ties would give the earlier event a zero-iteration
-            # follow-up segment, silently dropping its recovery stats
+        if any(b < a for a, b in zip(its, its[1:])):
             raise ValueError(f"schedule {self.name!r} events must fire "
-                             "at strictly increasing iterations")
+                             "at non-decreasing iterations")
+        # ties ARE allowed: two events at the same iteration apply
+        # back-to-back with a zero-length segment between them — the
+        # earlier event's EventRecord then carries segment_iters=0 and
+        # empty segment_costs (and no warm/cold recovery stats, which
+        # need a nonzero follow-up budget; see replay._finish_cold).
+        # The attribution is locked by tests/test_replay_stream.py for
+        # both the event-loop and the fused-stream paths.
 
     @property
     def n_events(self) -> int:
@@ -167,15 +172,25 @@ class ChurnState:
 
     # -------------------------------------------------------------- events
     def apply(self, event) -> str:
-        """Fold one event in; returns its kind."""
+        """Fold one event in; returns its kind.
+
+        `self.r`/`self.dest` are rebound copy-on-write, NEVER mutated
+        in place: `network()` hands them to `jnp.asarray`, which may
+        zero-copy-alias the numpy buffer on CPU, and the fused churn
+        stream (replay._flush_stream) defers every device read past the
+        NEXT apply — an in-place write here would race with the queued
+        computations still reading the previous network's buffer.
+        """
         if isinstance(event, RateScale):
             if event.task is None:
-                self.r *= event.factor
+                self.r = self.r * event.factor
             else:
-                self.r[event.task] *= event.factor
+                r = self.r.copy()
+                r[event.task] *= event.factor
+                self.r = r
         elif isinstance(event, SourceRedraw):
             rng = np.random.RandomState(event.seed)
-            row = self.r[event.task]
+            row = self.r[event.task].copy()
             vals = row[row > 0.0]
             alive = np.setdiff1d(np.arange(row.shape[0]),
                                  np.fromiter(self.failed, int, len(self.failed)))
@@ -183,9 +198,13 @@ class ChurnState:
                 src = rng.choice(alive, size=vals.size, replace=False)
                 row[:] = 0.0
                 row[src] = rng.permutation(vals)
+                r = self.r.copy()
+                r[event.task] = row
+                self.r = r
         elif isinstance(event, DestRedraw):
+            new_node = None
             if event.node is not None and event.node not in self.failed:
-                self.dest[event.task] = event.node
+                new_node = event.node
             else:
                 rng = np.random.RandomState(event.seed)
                 cand = np.setdiff1d(
@@ -193,7 +212,11 @@ class ChurnState:
                     np.fromiter(self.failed, int, len(self.failed)))
                 cand = cand[cand != self.dest[event.task]]
                 if cand.size:
-                    self.dest[event.task] = rng.choice(cand)
+                    new_node = rng.choice(cand)
+            if new_node is not None:
+                dest = self.dest.copy()
+                dest[event.task] = new_node
+                self.dest = dest
         elif isinstance(event, NodeFail):
             self.failed.add(int(event.node))
         elif isinstance(event, NodeRecover):

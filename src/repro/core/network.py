@@ -1210,3 +1210,59 @@ def refeasibilize_sparse(net: CECNetwork, phi_sp: PhiSparse,
     result = jnp.where(broken[:, None, None], spt_sp, result)
     result = jnp.where(is_dest[..., None], 0.0, result)
     return PhiSparse(data, local[..., None], result), new_nbrs
+
+
+def refeasibilize_sparse_samegraph(net: CECNetwork, phi_sp: PhiSparse,
+                                   nbrs: Neighbors,
+                                   rebuild_tasks: jnp.ndarray | None = None,
+                                   spt_sp: jnp.ndarray | None = None
+                                   ) -> PhiSparse:
+    """`refeasibilize_sparse` specialized to an UNCHANGED adjacency
+    (routing churn: destination/source re-draws) — bitwise the same
+    repaired iterate, with the topology machinery peeled off.
+
+    On the same graph `build_neighbors` memoizes to the identical
+    `Neighbors`, `_slot_remap` is the identity permutation and the
+    reslot gather is an exact copy, so the full repair reduces to the
+    masking/renormalization/damage arithmetic below — written in the
+    SAME operation order as `refeasibilize_sparse`, which is what makes
+    the reduction bitwise rather than merely close.  `spt_sp` lets the
+    caller supply `spt_result_slots(net, nbrs)` precomputed host-side
+    (the per-unique-destination Dijkstra is the dominant per-event host
+    cost at V > DENSE_V_LIMIT, and it depends only on the adjacency,
+    the zero-flow link weights and `net.dest` — not on φ — so a churn
+    stream memoizes it per destination vector).  Every operation here
+    is an eager device op with NO host sync, which lets the fused churn
+    stream (sgp.FusedStream) fold the repair into its dispatch pipeline
+    without draining it.
+    """
+    data = mask_slots(phi_sp.data, nbrs)
+    local = phi_sp.local[..., 0]
+    dsum = jnp.sum(data, axis=-1) + local
+    # missing mass goes to local offload
+    local = local + jnp.maximum(0.0, 1.0 - dsum)
+    tot = jnp.maximum(jnp.sum(data, axis=-1) + local, 1e-30)
+    data = data / tot[..., None]
+    local = local / tot
+
+    result = mask_slots(phi_sp.result, nbrs)
+    rsum = jnp.sum(result, axis=-1)                        # [S, V]
+    # on the same graph the reslot is an exact copy, so the pre-reslot
+    # sum the damage rule compares against IS rsum
+    rsum_before = rsum
+    S, V = net.S, net.V
+    is_dest = (jnp.arange(V)[None] == net.dest[:, None])   # [S, V]
+    alive = jnp.any(nbrs.out_mask, axis=-1)[None] | is_dest
+    src = (net.r * local > 1e-12) & (net.a[:, None] > 0.0)
+    damaged = (rsum <= 1e-12) & ((rsum_before > 1e-12) | src) \
+        & ~is_dest & alive
+    broken = jnp.any(damaged, axis=-1)                     # [S]
+    if rebuild_tasks is not None:
+        broken = broken | rebuild_tasks
+    if spt_sp is None:
+        spt_sp = spt_result_slots(net, nbrs)
+    result = result / jnp.maximum(rsum[..., None], 1e-30)
+    result = jnp.where(rsum[..., None] > 1e-12, result, 0.0)
+    result = jnp.where(broken[:, None, None], spt_sp, result)
+    result = jnp.where(is_dest[..., None], 0.0, result)
+    return PhiSparse(data, local[..., None], result)

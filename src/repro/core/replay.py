@@ -9,10 +9,23 @@ and WARM-STARTING the resumable drivers (`sgp.run_chunk` /
 `distributed.run_distributed_chunk`) between events instead of
 re-solving from the SPT φ⁰ each time.
 
-Guarantees the test layer (tests/test_replay.py) locks down:
+Same-graph events (everything `event_kind` calls "rate"/"routing" —
+the adjacency, and so the `Neighbors` tiles, are unchanged) can skip
+the host entirely: `play(..., stream=True)` coalesces every maximal
+run of them, warm gaps included, into ONE asynchronous dispatch
+stream (`sgp.FusedStream`) whose per-event re-baselines run as eager
+device ops, paying a single `device_get` per window instead of one
+per event.  Topology events break the stream and take the ordinary
+`apply_event` path.
+
+Guarantees the test layer (tests/test_replay.py,
+tests/test_replay_stream.py) locks down:
 
 * a zero-event replay is BITWISE `run(method="sparse")` — the engine
   adds nothing to the uninterrupted trajectory;
+* the fused stream is BITWISE the event loop on every canned `*_churn`
+  schedule — costs, final φ, `EventRecord` segmentation, guard log —
+  including fault-injected, guarded and Theorem-2-async replays;
 * after every event the iterate satisfies `check_invariants`: data rows
   on the simplex, result rows simplex-or-empty, exactly zero mass on
   dead/padding slots, loop-free supports;
@@ -34,11 +47,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .events import ChurnSchedule, ChurnState, DestRedraw
+from .events import ChurnSchedule, ChurnState, DestRedraw, event_kind
 from .network import (CECNetwork, Neighbors, PhiSparse, build_buckets,
                       build_neighbors, is_loop_free, refeasibilize_sparse,
-                      sparse_to_phi, spt_phi_sparse)
-from .sgp import init_run_state, run_chunk
+                      refeasibilize_sparse_samegraph, sparse_to_phi,
+                      spt_phi_sparse, spt_result_slots)
+from .sgp import FusedStream, init_run_state, run_chunk
 from . import distributed as dist
 
 
@@ -67,7 +81,10 @@ def check_feasible(phi_sp: PhiSparse, nbrs: Neighbors,
         raise AssertionError("nonzero mass on dead data slots")
     if not (result[np.broadcast_to(pad, result.shape)] == 0.0).all():
         raise AssertionError("nonzero mass on dead result slots")
-    if data.min() < 0.0 or local.min() < -atol:
+    # the negativity tolerance is symmetric: a data slot at -1e-9 of
+    # projection float error must not trip here while the same value in
+    # the local column would pass (data used to be checked strictly)
+    if data.min() < -atol or local.min() < -atol:
         raise AssertionError("negative routing fraction")
     np.testing.assert_allclose(data.sum(-1) + local, 1.0, atol=atol,
                                err_msg="data rows off the simplex")
@@ -193,12 +210,17 @@ class ReplayEngine:
                  bucketed: bool = False,
                  invariant_checks: bool = True,
                  invariant_loop_tasks: Optional[int] = 4,
-                 fault_plan=None, fault_rng=None, guards=None):
+                 fault_plan=None, fault_rng=None, guards=None,
+                 rng=None):
         if driver not in ("run", "distributed"):
             raise ValueError(f"unknown replay driver {driver!r}")
         if bucketed and driver != "run":
             raise ValueError("bucketed replay needs driver='run' (the "
                              "distributed step shards the padded tile)")
+        if rng is not None and driver != "run":
+            raise ValueError("the Theorem-2 async rng (rng=) drives "
+                             "run_chunk's row masks; driver="
+                             "'distributed' does not consume it")
         self.churn = ChurnState(net)
         self.net = net
         self.nbrs = build_neighbors(net.adj)
@@ -218,13 +240,33 @@ class ReplayEngine:
             # thread the backend into every run_chunk call (the
             # distributed driver instead bakes it into its step)
             self.run_opts.setdefault("engine_impl", engine_impl)
+        if driver == "distributed":
+            # the distributed iterate path consumes none of run_chunk's
+            # kwargs beyond what init_distributed_state bakes in —
+            # anything else (tol/async_frac/callback/...) would be
+            # silently dropped mid-replay, so refuse it up front
+            unsupported = set(self.run_opts) - {"variant", "scaling",
+                                                "kappa", "engine_impl"}
+            if unsupported:
+                raise ValueError(
+                    f"run_opts {sorted(unsupported)} are not supported "
+                    "by driver='distributed' (it bakes variant/scaling/"
+                    "kappa/engine_impl into the compiled step and drops "
+                    "everything else)")
+        if (self.run_opts.get("async_frac", 0.0) > 0.0) and rng is None:
+            raise ValueError(
+                "run_opts={'async_frac': ...} needs ReplayEngine("
+                "rng=...): the engine splits it per inter-event segment "
+                "to drive the Theorem-2 row masks")
         self.invariant_checks = invariant_checks
         self.invariant_loop_tasks = invariant_loop_tasks
         self.fault_plan = fault_plan
         self.guards = guards
         self._fault_rng = (jax.random.PRNGKey(0) if fault_rng is None
                            else fault_rng)
+        self._rng = rng                      # Theorem-2 async-mask stream
         self._guard_log: list = []           # finished segments' trips
+        self._spt_cache: dict = {}           # dest bytes -> SPT result rows
         self.records: list[EventRecord] = []
         self.cost_log: list[float] = []      # finished segments' costs
         self.total_iters = 0
@@ -237,13 +279,29 @@ class ReplayEngine:
         self._init_state(phi0)
 
     # ------------------------------------------------------------- driver
+    def _segment_fault_rng(self):
+        """Advance the engine's fault stream by one per-segment split —
+        the 'each event's segment draws an independent fault stream'
+        contract, shared by BOTH drivers' rebaseline paths (the
+        distributed same-graph rebaseline used to skip it and continue
+        the previous segment's stream)."""
+        self._fault_rng, sub = jax.random.split(self._fault_rng)
+        return sub
+
+    def _segment_rng(self):
+        """Per-segment split of the Theorem-2 async-mask rng (mirrors
+        the fault-rng contract: deterministic per engine seed, but
+        segments draw independent mask streams)."""
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
     def _init_state(self, phi_sp: PhiSparse) -> None:
         robust = {}
         if self.fault_plan is not None:
             # each segment draws an independent fault stream from the
             # engine's deterministic seed
-            self._fault_rng, sub = jax.random.split(self._fault_rng)
-            robust.update(fault_plan=self.fault_plan, fault_rng=sub)
+            robust.update(fault_plan=self.fault_plan,
+                          fault_rng=self._segment_fault_rng())
         if self.guards is not None:
             robust.update(guards=self.guards)
         if self.driver == "run":
@@ -251,7 +309,9 @@ class ReplayEngine:
                 self.net, phi_sp, min_scale=self.min_scale,
                 method="sparse", engine_impl=self.engine_impl,
                 nbrs=self.nbrs, bucketed=self.bucketed,
-                buckets=self.buckets, **robust)
+                buckets=self.buckets,
+                rng=None if self._rng is None else self._segment_rng(),
+                **robust)
         else:
             self.state = dist.init_distributed_state(
                 self.net, phi_sp, mesh=self.mesh, method="sparse",
@@ -330,6 +390,9 @@ class ReplayEngine:
                                                   rebuild_tasks=rebuild)
             if self.bucketed:
                 self.buckets = build_buckets(net_new.adj)
+        if kind == "topology":
+            # the memoized SPT rows are adjacency-derived (see _spt_rows)
+            self._spt_cache.clear()
         self.net = net_new
         self.cost_log.extend(self.state.costs)
         self._guard_log.extend(
@@ -339,8 +402,15 @@ class ReplayEngine:
         if self.driver == "distributed" and kind != "topology":
             # rate/routing events keep the graph (self.nbrs stays the
             # memoized tiles the step was built from): swap the churned
-            # net into the compiled step instead of rebuilding it
-            dist.rebaseline_distributed_state(self.state, net_new, phi)
+            # net into the compiled step instead of rebuilding it.  The
+            # fault rng takes the SAME per-segment engine split
+            # _init_state would — the rebaseline used to continue the
+            # previous segment's stream, silently breaking the
+            # independent-fault-streams contract on this path only
+            dist.rebaseline_distributed_state(
+                self.state, net_new, phi,
+                fault_rng=(self._segment_fault_rng()
+                           if self.fault_plan is not None else None))
         else:
             self._init_state(phi)             # warm re-baseline
         if self.invariant_checks:
@@ -355,10 +425,143 @@ class ReplayEngine:
         self._segment_open = True
         return rec
 
+    # ------------------------------------------------------ fused stream
+    def _spt_rows(self, net_new: CECNetwork):
+        """Memoized `spt_result_slots` for the live graph: the rows
+        depend only on (adjacency, zero-flow link weights, dest vector)
+        — never on φ — and same-graph churn leaves the first two fixed,
+        so the per-unique-destination Dijkstra (the dominant per-
+        routing-event host cost at scale) runs once per distinct dest
+        vector.  `apply_event` clears the cache on topology events."""
+        key = np.asarray(net_new.dest).tobytes()
+        rows = self._spt_cache.get(key)
+        if rows is None:
+            rows = spt_result_slots(net_new, self.nbrs)
+            self._spt_cache[key] = rows
+        return rows
+
+    def _stream_eligibility(self) -> Optional[str]:
+        """None if this engine can run fused churn streams, else why
+        not (the reasons are structural, fixed at __init__ time)."""
+        if self.driver != "run":
+            return ("driver='distributed' replays through its own "
+                    "compiled shard_map step")
+        if self.run_opts.get("driver") == "host":
+            return ("loop_driver='host' forces the per-iteration "
+                    "reference loop")
+        if self.run_opts.get("callback") is not None:
+            return "per-iteration callbacks need the host loop"
+        return None
+
+    def _flush_stream(self, window: list, t_prev: int) -> int:
+        """Run one maximal same-graph window — gaps and events — as a
+        single `FusedStream` dispatch stream with ONE host sync at the
+        end, then fold the fetched per-segment records into the
+        engine's bookkeeping exactly as the event loop would have.
+        Returns the new `t_prev` (the last window event's iteration)."""
+        if not window:
+            return t_prev
+        entering_costs = list(self.state.costs)
+        entering_guards = list(getattr(self.state, "guard_events", None)
+                               or [])
+        opts = {k: v for k, v in self.run_opts.items() if k != "driver"}
+        stream = FusedStream(self.net, self.state, **opts)
+        pending = []
+        for (t_ev, event) in window:
+            stream.advance(t_ev - t_prev)
+            kind = self.churn.apply(event)
+            net_new = self.churn.network()
+            repair = None
+            if kind == "routing":
+                rebuild = None
+                if isinstance(event, DestRedraw):
+                    rb = np.zeros(net_new.S, bool)
+                    rb[event.task] = True
+                    rebuild = jnp.asarray(rb)
+                spt = self._spt_rows(net_new)
+
+                def repair(p, _net=net_new, _rb=rebuild, _spt=spt):
+                    return refeasibilize_sparse_samegraph(
+                        _net, p, self.nbrs, rebuild_tasks=_rb, spt_sp=_spt)
+            stream.rebaseline(
+                net_new, repair=repair,
+                fault_rng=(self._segment_fault_rng()
+                           if self.fault_plan is not None else None),
+                rng=(self._segment_rng() if self._rng is not None
+                     else None))
+            self.net = net_new
+            pending.append((event, kind))
+            t_prev = t_ev
+        segments = stream.finish()
+        self._fold_stream(segments, pending, entering_costs,
+                          entering_guards)
+        if self.invariant_checks:
+            # deferred to the window's end: the per-event check is the
+            # host sync the stream exists to avoid (the event loop still
+            # checks every event)
+            check_invariants(self.net, self.phi, self.nbrs,
+                             n_loop_tasks=self.invariant_loop_tasks)
+        return t_prev
+
+    def _fold_stream(self, segments: list, pending: list,
+                     entering_costs: list, entering_guards: list) -> None:
+        """Mirror `iterate` + `apply_event`'s bookkeeping from the
+        stream's fetched per-segment records: segment k closes with
+        event k, the final segment stays open in `self.state` (the
+        stream's `finish` already left the state as that segment's warm
+        `RunState`)."""
+        for k, (event, kind) in enumerate(pending):
+            seg = segments[k]
+            self.total_iters += seg["executed"]
+            if self.records and self._segment_open:
+                self.records[-1].segment_costs.extend(seg["accepted"])
+                self.records[-1].segment_iters += seg["executed"]
+            baseline = (entering_costs if k == 0
+                        else [segments[k - 1]["cost_after"]])
+            self.cost_log.extend(baseline + seg["accepted"])
+            guards_k = seg["guard_events"]
+            if k == 0:
+                guards_k = entering_guards + guards_k
+            self._guard_log.extend(guards_k)
+            self.records.append(EventRecord(
+                it=self.total_iters, event=event, kind=kind,
+                cost_before=seg["cost_before"],
+                cost_after=seg["cost_after"]))
+            self._segment_open = True
+        last = segments[-1]
+        self.total_iters += last["executed"]
+        if self.records and self._segment_open:
+            self.records[-1].segment_costs.extend(last["accepted"])
+            self.records[-1].segment_iters += last["executed"]
+
+    def _play_stream(self, schedule: ChurnSchedule,
+                     tail_iters: int) -> dict:
+        """`play`'s fused-stream path: every maximal run of same-graph
+        (rate/routing) events — including the warm gaps between them —
+        dispatches as ONE asynchronous stream with a single host sync;
+        topology events (whose `Neighbors` tiles change shape) break
+        the stream and go through the ordinary `apply_event` path."""
+        t_prev = 0
+        window: list = []
+        for (t_ev, event) in schedule.events:
+            if event_kind(event) == "topology":
+                t_prev = self._flush_stream(window, t_prev)
+                window = []
+                self.iterate(t_ev - t_prev)
+                self.apply_event(event)
+                t_prev = t_ev
+            else:
+                window.append((t_ev, event))
+        t_prev = self._flush_stream(window, t_prev)
+        self.iterate(tail_iters)
+        self._segment_open = False
+        return self.history()
+
     # --------------------------------------------------------------- play
     def play(self, schedule: ChurnSchedule, tail_iters: int = 5,
              cold_baseline: bool = False, rel_tol: float = 0.02,
-             callback: Optional[Callable] = None) -> dict:
+             callback: Optional[Callable] = None,
+             stream: Optional[bool] = None) -> dict:
         """Replay a whole schedule: iterate to each event's firing
         iteration, apply it, continue warm; after the last event run
         `tail_iters` more.
@@ -372,7 +575,40 @@ class ReplayEngine:
 
         callback(record, engine), if given, fires after each event is
         applied (before its follow-up segment runs).
+
+        stream=True folds every maximal run of SAME-GRAPH events (rate
+        scaling, source/destination re-draws) into one on-device
+        dispatch stream (`sgp.FusedStream`): the per-event re-baseline
+        — repair, flows/T⁰, Eq. 16 constants, fault/guard re-anchoring
+        — runs as eager device ops inside the pipeline, so a long churn
+        burst pays ONE host sync instead of one per event.  The
+        trajectory (costs, final φ, EventRecord segmentation) is
+        bitwise the event loop's — the stream dispatches the same
+        functions `apply_event`/`_init_state` call, deferring only the
+        float() conversions — locked by tests/test_replay_stream.py.
+        Per-event invariant checks are deferred to each window's end
+        (they are a host sync); topology events break the stream and
+        keep the ordinary path.  Incompatible with cold_baseline /
+        callback / the host loop driver.  None (the default) streams
+        exactly when eligible AND the per-event work is unobserved
+        (invariant_checks=False, no cold baseline, no callback), so
+        checking engines keep their per-event checks.
         """
+        if stream is None:
+            stream = (callback is None and not cold_baseline
+                      and not self.invariant_checks
+                      and self._stream_eligibility() is None)
+        if stream:
+            reason = self._stream_eligibility()
+            if cold_baseline:
+                reason = reason or ("cold_baseline probes re-solve per "
+                                    "event on the host")
+            if callback is not None:
+                reason = reason or ("per-event callbacks observe records "
+                                    "the stream only builds at its end")
+            if reason:
+                raise ValueError(f"stream=True: {reason}")
+            return self._play_stream(schedule, tail_iters)
         t_prev = 0
         pending: Optional[EventRecord] = None
         for (t_ev, event) in schedule.events:

@@ -960,6 +960,13 @@ def run_chunk(net: CECNetwork, state: RunState, n_iters: int,
         driver = "host" if callback is not None else "fused"
     if driver not in ("host", "fused"):
         raise ValueError(f"unknown driver {driver!r}")
+    if async_frac > 0.0 and state.rng is None:
+        # the Theorem-2 row masks draw from state.rng — without one the
+        # masks silently never fired and async_frac was a no-op
+        raise ValueError(
+            "async_frac > 0 needs a driver rng: pass rng= to "
+            "init_run_state (or ReplayEngine(rng=...), which splits it "
+            "per inter-event segment)")
     if state.fault_plan is not None or state.guard_cfg is not None:
         if callback is not None:
             raise ValueError(
@@ -1063,6 +1070,315 @@ def _fold_fused_histories(state, sigma, n_rej, stopped, cost_hist,
     return cost_hist, take_hist, live_hist, extra
 
 
+class FusedStream:
+    """The fused chunk's dispatch loop as a RESUMABLE object: a whole
+    churn window — warm segments separated by same-graph rebaseline
+    events — runs as one asynchronous dispatch stream with a single
+    `device_get` at the end (`finish`).
+
+    `_run_chunk_fused` is literally ``FusedStream(...).advance(n);
+    finish()`` — one segment, no rebaselines — so the plain fused chunk
+    and the streaming replay share every instruction, and the bitwise
+    guarantees tests/test_fused_driver.py locks for the chunk carry over
+    to the stream for free.
+
+    `rebaseline` folds a same-graph churn event into the device carry
+    exactly as `replay.ReplayEngine.apply_event` + `_init_state` would
+    build a fresh `RunState` (the SAME eager `make_consts`, the same
+    `flows_carry_and_cost_jit`, the same fault/guard re-inits on the
+    same values, sigma/n_costs/n_rej/stopped reset), but WITHOUT the
+    per-event host syncs the event loop pays (`float(T0)` drains the
+    pipeline; invariant checks drain it AND run an O(S·V²) closure).
+    Identical eager ops on identical device values produce identical
+    floats, so the stream is bitwise the event loop while the pipeline
+    never drains — which is the whole point: a long schedule of
+    same-graph events (rate scaling, source/destination re-draws)
+    becomes one dispatch stream.  Topology events change the
+    `Neighbors` tile shapes and must break the stream (finish, apply
+    through the event loop, start a new stream).
+
+    A stopped carry (sigma blow-up / tol exit) keeps dispatching frozen
+    no-ops whose outputs are discarded — the event loop's early return,
+    expressed as selects — and the next `rebaseline` un-freezes it, as
+    `apply_event`'s fresh state does.
+    """
+
+    def __init__(self, net: CECNetwork, state: RunState, fl=None, *,
+                 variant: str = "sgp", beta: float = 1.0,
+                 allowed_data=None, allowed_result=None,
+                 async_frac: float = 0.0, tol: float = 0.0,
+                 use_blocking: bool = True, refresh_every: int = 20,
+                 scaling: str = "adaptive", kappa: float = 0.0,
+                 proj_impl: Optional[str] = None,
+                 engine_impl: Optional[str] = None):
+        if scaling == "paper":
+            kappa = 1.0          # Eq. 16 verbatim (run_chunk's resolution)
+        if async_frac > 0.0 and state.rng is None:
+            raise ValueError(
+                "async_frac > 0 needs a driver rng: pass rng= to "
+                "init_run_state (or ReplayEngine(rng=...))")
+        self.net = net
+        self.state = state
+        self._o = dict(variant=variant, beta=beta,
+                       allowed_data=allowed_data,
+                       allowed_result=allowed_result,
+                       async_frac=async_frac, use_blocking=use_blocking,
+                       refresh_every=refresh_every, scaling=scaling,
+                       kappa=kappa, proj_impl=proj_impl,
+                       engine_impl=engine_impl)
+        self._adaptive = scaling == "adaptive" and variant == "sgp"
+        self._refresh = scaling == "paper" and refresh_every
+        self._use_rng = async_frac > 0.0 and state.rng is not None
+        self._faulted = (state.fault_plan is not None
+                         and state.fault_state is not None)
+        self._guarded = (state.guard_cfg is not None
+                         and state.guard_state is not None)
+        if self._guarded:
+            from .guards import _guarded_update   # lazy: guards imports sgp
+            self._guarded_update = _guarded_update
+        self._phi, self._consts = state.phi, state.consts
+        self._fl = fl if fl is not None else _entry_flows(net, state,
+                                                          engine_impl)
+        self._rng = state.rng
+        self._fs, self._gs = state.fault_state, state.guard_state
+        self._sigma = jnp.float32(state.sigma)
+        self._prev = jnp.float32(state.costs[-1])
+        self._n_costs = jnp.asarray(len(state.costs), jnp.int32)
+        self._n_rej = jnp.asarray(0, jnp.int32)
+        self._stopped = jnp.asarray(bool(state.stopped))
+        self._tol32 = jnp.float32(tol)
+        self._cost_h, self._take_h, self._live_h = [], [], []
+        self._code_h, self._roll_h, self._ck_h = [], [], []
+        self._it = state.it           # per-segment iteration counter
+        self._seg_it0 = state.it      # `it` the open segment began at
+        self._markers: list = []      # closed segments' boundary scalars
+        self._finished = False
+
+    # ----------------------------------------------------------- advance
+    def advance(self, n_iters: int) -> "FusedStream":
+        """Dispatch `n_iters` driver iterations asynchronously — python
+        never blocks on a device value.  Each iteration is the shared
+        `sgp_step_flows` executable plus the `_accept_update` (or
+        guarded) select kernel; candidate costs and accepted/executed
+        flags accumulate as device scalars for `finish`."""
+        assert not self._finished, "stream already finished"
+        net, state, o = self.net, self.state, self._o
+        for it in range(self._it, self._it + n_iters):
+            if self._refresh and it > 0 and it % o["refresh_every"] == 0:
+                fresh = _make_consts_jit(net, self._prev, state.min_scale)
+                stopped = self._stopped
+                self._consts = jax.tree.map(
+                    lambda old, new: jnp.where(stopped, old, new),
+                    self._consts, fresh)
+            mask_d = mask_r = rng_new = None
+            if self._use_rng:
+                rng_new, k1, k2 = jax.random.split(self._rng, 3)
+                mask_d = jax.random.bernoulli(k1, 1.0 - o["async_frac"],
+                                              (net.S, net.V))
+                mask_r = jax.random.bernoulli(k2, 1.0 - o["async_frac"],
+                                              (net.S, net.V))
+            out = sgp_step_flows(
+                net, self._phi, self._fl, self._consts,
+                variant=o["variant"], beta=o["beta"],
+                mask_data=mask_d, mask_result=mask_r,
+                allowed_data=o["allowed_data"],
+                allowed_result=o["allowed_result"],
+                method=state.method, use_blocking=o["use_blocking"],
+                scaling=o["scaling"], sigma=self._sigma, kappa=o["kappa"],
+                proj_impl=o["proj_impl"], engine_impl=o["engine_impl"],
+                nbrs=state.nbrs, buckets=state.buckets,
+                fault_plan=state.fault_plan, fault_state=self._fs)
+            stopped_pre = self._stopped
+            if self._faulted:
+                phi_new, fl_new, cost_new, fs_new = out
+                # a stopped carry freezes the fault state too, so chunked
+                # resumption past a stop stays bitwise (the dead
+                # dispatches must not advance the fault rng/ring)
+                self._fs = jax.tree.map(
+                    lambda new, old: jnp.where(stopped_pre, old, new),
+                    fs_new, self._fs)
+            else:
+                phi_new, fl_new, cost_new = out
+            if self._guarded:
+                cfg = state.guard_cfg
+                do_ckpt = bool(cfg.checkpoint_every
+                               and it % cfg.checkpoint_every == 0)
+                (self._phi, self._fl, self._sigma, self._prev,
+                 self._n_costs, self._n_rej, self._stopped, self._rng,
+                 take, live, self._gs, code, rolled, ck_cost) = \
+                    self._guarded_update(
+                        phi_new, fl_new, cost_new, self._phi, self._fl,
+                        self._sigma, self._prev, self._n_costs,
+                        self._n_rej, self._stopped, rng_new, self._rng,
+                        self._tol32, self._gs, state.nbrs,
+                        adaptive=self._adaptive, cfg=cfg, do_ckpt=do_ckpt)
+                self._code_h.append(code)
+                self._roll_h.append(rolled)
+                self._ck_h.append(ck_cost)
+            else:
+                (self._phi, self._fl, self._sigma, self._prev,
+                 self._n_costs, self._n_rej, self._stopped, self._rng,
+                 take, live) = _accept_update(
+                    phi_new, fl_new, cost_new, self._phi, self._fl,
+                    self._sigma, self._prev, self._n_costs, self._n_rej,
+                    self._stopped, rng_new, self._rng, self._tol32,
+                    adaptive=self._adaptive)
+            self._cost_h.append(cost_new)
+            self._take_h.append(take)
+            self._live_h.append(live)
+        self._it += n_iters
+        return self
+
+    # -------------------------------------------------------- rebaseline
+    def rebaseline(self, net_new: CECNetwork, repair=None, *,
+                   fault_rng=None, rng=None) -> "FusedStream":
+        """Fold one SAME-GRAPH churn event into the carry without a
+        host sync: close the open segment (its boundary scalars are
+        snapshotted as device refs and fetched in `finish`'s single
+        device_get) and open the next one with the fresh-`RunState`
+        re-baseline the replay event loop performs.
+
+        `repair`, if given, maps the current device φ to the repaired
+        one (routing events: `refeasibilize_sparse_samegraph`, all
+        eager device ops); rate events pass None — the iterate stays
+        feasible as-is.  `net_new.adj` must equal the adjacency the
+        state's `Neighbors` were built from; topology events must break
+        the stream instead.  `fault_rng`/`rng` re-key the per-segment
+        fault and Theorem-2 async-mask streams (the same splits
+        `ReplayEngine._init_state` would pass)."""
+        assert not self._finished, "stream already finished"
+        state = self.state
+        phi = self._phi if repair is None else repair(self._phi)
+        fl, T0 = flows_carry_and_cost_jit(
+            net_new, phi, state.method, nbrs=state.nbrs,
+            engine_impl=self._o["engine_impl"], buckets=state.buckets)
+        self._markers.append(dict(
+            end=len(self._cost_h), it0=self._seg_it0,
+            prev=self._prev, n_rej=self._n_rej, T0=T0))
+        self.net = net_new
+        self._phi, self._fl = phi, fl
+        # the EAGER make_consts, exactly as init_run_state builds the
+        # fresh segment's Eq. 16 constants (the jitted compilation need
+        # not round the d2_sup chains identically — see _make_consts_jit)
+        self._consts = make_consts(net_new, T0, state.min_scale)
+        self._sigma = jnp.float32(1.0)
+        # bitwise jnp.float32(float(T0)), the fresh chunk's prologue
+        self._prev = T0.astype(jnp.float32)
+        self._n_costs = jnp.asarray(1, jnp.int32)
+        self._n_rej = jnp.asarray(0, jnp.int32)
+        self._stopped = jnp.asarray(False)
+        self._it = 0
+        self._seg_it0 = 0
+        if state.fault_plan is not None:
+            self._fs = init_fault_state(
+                net_new, phi, fl, state.fault_plan, rng=fault_rng,
+                method=state.method, nbrs=state.nbrs,
+                engine_impl=self._o["engine_impl"], buckets=state.buckets)
+        if state.guard_cfg is not None:
+            from .guards import init_guard_state
+            self._gs = init_guard_state(phi, fl, T0, state.guard_cfg)
+        if rng is not None:
+            self._rng = rng
+        return self
+
+    # ------------------------------------------------------------ finish
+    def _render_guard_events(self, extra_h, cost_h, live_h, s, e, it0):
+        """Host-side GuardEvent rendering for history slice [s, e), with
+        per-segment iteration numbering starting at `it0` (each replay
+        segment's fresh state restarts `it` at 0, so the event loop's
+        GuardEvent.it is within-segment — mirrored here)."""
+        if not self._guarded or extra_h is None:
+            return []
+        from .guards import GuardEvent, SENTINEL_NAMES
+        codes, rolls, cks = extra_h
+        out = []
+        for i in range(s, e):
+            if live_h[i] and int(codes[i]) > 0:
+                out.append(GuardEvent(
+                    it=it0 + (i - s), sentinel=SENTINEL_NAMES[int(codes[i])],
+                    action="rollback" if bool(rolls[i]) else "stop",
+                    cost=float(cost_h[i]),
+                    restored_cost=float(cks[i]) if bool(rolls[i]) else None))
+        return out
+
+    def finish(self) -> list:
+        """The stream's single device→host sync.
+
+        With no rebaselines this IS `_run_chunk_fused`'s epilogue:
+        append semantics on `self.state` (costs extended, `it` and
+        `n_rejected` advanced) and an empty return.  With rebaselines
+        it returns one dict per CLOSED segment — ``accepted`` costs,
+        ``executed`` iteration count, ``cost_before``/``cost_after``
+        (the event's boundary costs), per-segment ``n_rejected`` and
+        rendered ``guard_events`` — plus the trailing OPEN segment's
+        dict last, and leaves `self.state` as that last segment's warm
+        `RunState` (replace semantics: exactly what the event loop's
+        `_init_state` + `run_chunk` would have left behind)."""
+        assert not self._finished, "stream already finished"
+        self._finished = True
+        state = self.state
+        extra = ((self._code_h, self._roll_h, self._ck_h)
+                 if self._guarded else None)
+        if not self._markers:
+            cost_h, _, live_h, extra_h = _fold_fused_histories(
+                state, self._sigma, self._n_rej, self._stopped,
+                self._cost_h, self._take_h, self._live_h, extra)
+            if self._guarded:
+                state.guard_events.extend(self._render_guard_events(
+                    extra_h, cost_h, live_h, 0, len(cost_h),
+                    self._seg_it0))
+                state.guard_state = self._gs
+            if self._faulted:
+                state.fault_state = self._fs
+            state.phi, state.flows, state.consts = \
+                self._phi, self._fl, self._consts
+            if self._use_rng:
+                state.rng = self._rng
+            return []
+        (sigma, n_rej, stopped, cost_h, take_h, live_h, extra_h,
+         marks) = jax.device_get((
+            self._sigma, self._n_rej, self._stopped, self._cost_h,
+            self._take_h, self._live_h, extra,
+            [(m["prev"], m["n_rej"], m["T0"]) for m in self._markers]))
+        bounds = [0] + [m["end"] for m in self._markers] + [len(cost_h)]
+        it0s = [m["it0"] for m in self._markers] + [self._seg_it0]
+        segs = []
+        for k in range(len(bounds) - 1):
+            s, e = bounds[k], bounds[k + 1]
+            acc = [float(c) for c, t, l in zip(cost_h[s:e], take_h[s:e],
+                                              live_h[s:e]) if l and t]
+            seg = dict(accepted=acc,
+                       executed=int(np.sum(live_h[s:e])) if e > s else 0,
+                       guard_events=self._render_guard_events(
+                           extra_h, cost_h, live_h, s, e, it0s[k]))
+            if k < len(self._markers):
+                prev_k, nrej_k, T0_k = marks[k]
+                seg["cost_before"] = float(prev_k)
+                seg["n_rejected"] = int(nrej_k)
+                seg["cost_after"] = float(T0_k)
+            else:
+                seg["n_rejected"] = int(n_rej)
+            segs.append(seg)
+        # leave `state` as the LAST segment's warm RunState — the fresh
+        # state apply_event's _init_state would have built, advanced by
+        # the open segment's iterations
+        last = segs[-1]
+        state.costs = [float(marks[-1][2])] + list(last["accepted"])
+        state.sigma = float(sigma)
+        state.n_rejected = int(n_rej)
+        state.it = last["executed"]
+        state.stopped = bool(stopped)
+        state.guard_events = list(last["guard_events"])
+        if self._guarded:
+            state.guard_state = self._gs
+        if self._faulted:
+            state.fault_state = self._fs
+        state.phi, state.flows, state.consts = \
+            self._phi, self._fl, self._consts
+        state.rng = self._rng
+        return segs
+
+
 def _run_chunk_fused(net: CECNetwork, state: RunState, fl, n_iters: int,
                      variant: str, beta: float, allowed_data,
                      allowed_result, async_frac: float, tol: float,
@@ -1072,13 +1388,10 @@ def _run_chunk_fused(net: CECNetwork, state: RunState, fl, n_iters: int,
     """The whole accept/reject loop with ZERO host syncs inside: an
     async pipeline of the SAME compiled step the python reference runs.
 
-    Each iteration dispatches (asynchronously — python never blocks on
-    a device value) the shared `sgp_step_flows` executable plus the tiny
-    `_accept_update` select kernel that applies accept/reject, the
-    sigma safeguard and the accepted-only tol exit on device; the
+    One `FusedStream` segment, advanced `n_iters` and finished — the
     per-iteration candidate costs and accepted/executed flags accumulate
     as device scalars and come back in ONE `device_get` after the last
-    dispatch — the chunk's single device→host sync.  Because the step
+    dispatch, the chunk's single device→host sync.  Because the step
     executable is literally the host loop's jit-cache entry and the
     select arithmetic mirrors `accept_step`'s f32 ops, the resulting
     `costs`/sigma/rng/φ trajectory is bitwise identical to the python
@@ -1087,96 +1400,16 @@ def _run_chunk_fused(net: CECNetwork, state: RunState, fl, n_iters: int,
     pipelined iterations are discarded no-ops, so prefer right-sizing
     chunks when stops are expected.
     """
-    adaptive = scaling == "adaptive" and variant == "sgp"
-    refresh = scaling == "paper" and refresh_every
-    use_rng = async_frac > 0.0 and state.rng is not None
-    faulted = state.fault_plan is not None and state.fault_state is not None
-    guarded = state.guard_cfg is not None and state.guard_state is not None
-    if guarded:
-        from .guards import _guarded_update   # lazy: guards imports sgp
-    phi, consts, nbrs = state.phi, state.consts, state.nbrs
-    rng = state.rng
-    fs, gs, cfg = state.fault_state, state.guard_state, state.guard_cfg
-    sigma = jnp.float32(state.sigma)
-    prev = jnp.float32(state.costs[-1])
-    n_costs = jnp.asarray(len(state.costs), jnp.int32)
-    n_rej = jnp.asarray(0, jnp.int32)
-    stopped = jnp.asarray(False)
-    tol32 = jnp.float32(tol)
-    cost_hist, take_hist, live_hist = [], [], []
-    code_hist, roll_hist, ck_hist = [], [], []
-    it_start = state.it
-    for it in range(state.it, state.it + n_iters):
-        if refresh and it > 0 and it % refresh_every == 0:
-            fresh = _make_consts_jit(net, prev, state.min_scale)
-            consts = jax.tree.map(
-                lambda old, new: jnp.where(stopped, old, new), consts, fresh)
-        mask_d = mask_r = rng_new = None
-        if use_rng:
-            rng_new, k1, k2 = jax.random.split(rng, 3)
-            mask_d = jax.random.bernoulli(k1, 1.0 - async_frac,
-                                          (net.S, net.V))
-            mask_r = jax.random.bernoulli(k2, 1.0 - async_frac,
-                                          (net.S, net.V))
-        out = sgp_step_flows(
-            net, phi, fl, consts, variant=variant, beta=beta,
-            mask_data=mask_d, mask_result=mask_r,
-            allowed_data=allowed_data, allowed_result=allowed_result,
-            method=state.method, use_blocking=use_blocking,
-            scaling=scaling, sigma=sigma, kappa=kappa,
-            proj_impl=proj_impl, engine_impl=engine_impl, nbrs=nbrs,
-            buckets=state.buckets, fault_plan=state.fault_plan,
-            fault_state=fs)
-        stopped_pre = stopped
-        if faulted:
-            phi_new, fl_new, cost_new, fs_new = out
-            # a stopped carry freezes the fault state too, so chunked
-            # resumption past a stop stays bitwise (the dead dispatches
-            # must not advance the fault rng/ring)
-            fs = jax.tree.map(
-                lambda new, old: jnp.where(stopped_pre, old, new),
-                fs_new, fs)
-        else:
-            phi_new, fl_new, cost_new = out
-        if guarded:
-            do_ckpt = bool(cfg.checkpoint_every
-                           and it % cfg.checkpoint_every == 0)
-            (phi, fl, sigma, prev, n_costs, n_rej, stopped, rng, take,
-             live, gs, code, rolled, ck_cost) = _guarded_update(
-                phi_new, fl_new, cost_new, phi, fl, sigma, prev,
-                n_costs, n_rej, stopped, rng_new, rng, tol32, gs, nbrs,
-                adaptive=adaptive, cfg=cfg, do_ckpt=do_ckpt)
-            code_hist.append(code)
-            roll_hist.append(rolled)
-            ck_hist.append(ck_cost)
-        else:
-            (phi, fl, sigma, prev, n_costs, n_rej, stopped, rng, take,
-             live) = _accept_update(phi_new, fl_new, cost_new, phi, fl,
-                                    sigma, prev, n_costs, n_rej, stopped,
-                                    rng_new, rng, tol32, adaptive=adaptive)
-        cost_hist.append(cost_new)
-        take_hist.append(take)
-        live_hist.append(live)
-    extra = (code_hist, roll_hist, ck_hist) if guarded else None
-    cost_h, _, live_h, extra_h = _fold_fused_histories(
-        state, sigma, n_rej, stopped, cost_hist, take_hist, live_hist,
-        extra)
-    if guarded:
-        from .guards import GuardEvent, SENTINEL_NAMES
-        codes, rolls, cks = extra_h
-        for i, (code, rolled, ck) in enumerate(zip(codes, rolls, cks)):
-            if live_h[i] and int(code) > 0:
-                state.guard_events.append(GuardEvent(
-                    it=it_start + i, sentinel=SENTINEL_NAMES[int(code)],
-                    action="rollback" if bool(rolled) else "stop",
-                    cost=float(cost_h[i]),
-                    restored_cost=float(ck) if bool(rolled) else None))
-        state.guard_state = gs
-    if faulted:
-        state.fault_state = fs
-    state.phi, state.flows, state.consts = phi, fl, consts
-    if use_rng:
-        state.rng = rng
+    stream = FusedStream(net, state, fl=fl, variant=variant, beta=beta,
+                         allowed_data=allowed_data,
+                         allowed_result=allowed_result,
+                         async_frac=async_frac, tol=tol,
+                         use_blocking=use_blocking,
+                         refresh_every=refresh_every, scaling=scaling,
+                         kappa=kappa, proj_impl=proj_impl,
+                         engine_impl=engine_impl)
+    stream.advance(n_iters)
+    stream.finish()
     return state
 
 

@@ -127,6 +127,12 @@ def test_gating_prefixes():
     assert is_gated("replay_refeas_sw_queue")
     assert is_gated("replay_warm_iters_sw_1000")
     assert not is_gated("replay_cold_iters_grid_1024")
+    # regret rows: the per-event wall-clock through both engines is
+    # gated; the speedup RATIO has inverted semantics (higher is
+    # better — a fused improvement would read as a "regression")
+    assert is_gated("regret_event_us_loop_sw_1000")
+    assert is_gated("regret_event_us_fused_sw_1000")
+    assert not is_gated("regret_speedup_sw_1000")
     assert not is_gated("scale_step_dense_V100")
     assert not is_gated("scale_speedup_V100")
     assert not is_gated("fig5b_convergence")
@@ -236,3 +242,28 @@ def test_end_to_end_mini_replay_sweep(tmp_path):
     gated = [r for r in rows if is_gated(r["name"])
              and r["us_per_call"] > 0.0]
     assert len(gated) >= 2    # per-iter + refeas timings at minimum
+
+
+@pytest.mark.slow
+def test_end_to_end_mini_regret_sweep(tmp_path):
+    """Run a real (small-scenario) regret sweep: the gated per-event
+    timing rows and the derived-only cost-gap rows must both come out,
+    and an identical baseline is never a regression."""
+    from benchmarks import common, regret_sweep
+    saved = list(common.ROWS)
+    common.ROWS.clear()
+    try:
+        regret_sweep.run(names=("abilene",))
+        rows = list(common.ROWS)
+    finally:
+        common.ROWS[:] = saved
+    names = {r["name"] for r in rows}
+    assert {"regret_cum_abilene", "regret_seg_abilene",
+            "regret_event_us_loop_abilene", "regret_event_us_fused_abilene",
+            "regret_speedup_abilene"} <= names
+    fresh = _write(tmp_path / "fresh.json", rows)
+    baseline = _write(tmp_path / "baseline.json", rows)
+    assert compare_files(fresh, baseline) == 0
+    gated = [r for r in rows if is_gated(r["name"])
+             and r["us_per_call"] > 0.0]
+    assert len(gated) == 2    # the loop/fused per-event timings

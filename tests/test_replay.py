@@ -137,12 +137,16 @@ def test_random_schedule_never_disconnects_sources(seed):
                 (ev, s, srcs, int(dests[s]))
 
 
-def test_schedule_rejects_same_iteration_events():
-    """Two events at the same iteration would give the first a
-    zero-iteration segment (its recovery stats silently dropped) —
-    ChurnSchedule refuses the ambiguity up front."""
+def test_schedule_orders_events():
+    """Out-of-order schedules are refused up front; ties (two events at
+    the SAME iteration) are legal — they apply back-to-back with a
+    zero-length segment whose attribution is locked by
+    tests/test_replay_stream.py."""
     with pytest.raises(ValueError):
-        core.ChurnSchedule(((5, core.NodeFail(1)), (5, core.LinkCut(0, 2))))
+        core.ChurnSchedule(((5, core.NodeFail(1)), (4, core.LinkCut(0, 2))))
+    sched = core.ChurnSchedule(((5, core.NodeFail(1)),
+                                (5, core.LinkCut(0, 2))))
+    assert sched.n_events == 2 and sched.horizon == 5
 
 
 # ------------------------------------------------------ warm-start parity

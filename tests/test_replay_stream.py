@@ -1,0 +1,306 @@
+"""Fused churn-stream replay: bitwise parity with the event loop, the
+same-iteration tie attribution contract, and the replay engine's
+misconfiguration guards (rng threading, distributed run_opts
+validation, symmetric feasibility tolerance).
+
+The load-bearing guarantee: `ReplayEngine.play(..., stream=True)` —
+every maximal run of same-graph events dispatched as ONE on-device
+stream with a single host sync — produces BITWISE the event-loop
+replay's costs, final iterate, EventRecord segmentation and guard log
+on every schedule, including the canned `*_churn` ones.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.faults import FaultPlan
+from repro.core.guards import GuardConfig
+from repro.core.replay import check_feasible
+
+
+def _setup(name):
+    jax.config.update("jax_enable_x64", False)
+    return core.make_scenario(core.TABLE_II[name])
+
+
+def _mixed_schedule(net):
+    """Same-graph-heavy schedule with a tie and one topology break."""
+    return core.ChurnSchedule((
+        (2, core.RateScale(1.3)),
+        (4, core.SourceRedraw(1, seed=7)),
+        (4, core.DestRedraw(0, seed=3)),          # tie: zero-length segment
+        (6, core.RateScale(0.8, task=2)),
+        (8, core.NodeFail(core.churn_hub(net))),  # stream break
+        (11, core.RateScale(1.1)),
+        (13, core.DestRedraw(2, seed=9)),
+    ), name="mixed")
+
+
+def _assert_same_history(h0, h1):
+    assert h0["costs"] == h1["costs"]
+    assert h0["final_cost"] == h1["final_cost"]
+    assert h0["n_iters"] == h1["n_iters"]
+    assert len(h0["records"]) == len(h1["records"])
+    for r0, r1 in zip(h0["records"], h1["records"]):
+        assert (r0.it, r0.kind, type(r0.event)) == \
+               (r1.it, r1.kind, type(r1.event))
+        assert r0.cost_before == r1.cost_before
+        assert r0.cost_after == r1.cost_after
+        assert r0.segment_costs == r1.segment_costs
+        assert r0.segment_iters == r1.segment_iters
+    assert len(h0["guard_events"]) == len(h1["guard_events"])
+    for a, b in zip(h0["guard_events"], h1["guard_events"]):
+        assert (a.it, a.sentinel, a.action, a.cost, a.restored_cost) == \
+               (b.it, b.sentinel, b.action, b.cost, b.restored_cost)
+
+
+def _assert_same_phi(e0, e1):
+    for f in ("data", "local", "result"):
+        a = np.asarray(getattr(e0.phi, f))
+        b = np.asarray(getattr(e1.phi, f))
+        assert (a == b).all(), f"phi.{f} diverged"
+
+
+def _play_both(net, sched, tail_iters=5, **engine_kw):
+    out = []
+    for stream in (False, True):
+        eng = core.ReplayEngine(net, **engine_kw)
+        hist = eng.play(sched, tail_iters=tail_iters, stream=stream)
+        out.append((eng, hist))
+    (e0, h0), (e1, h1) = out
+    _assert_same_history(h0, h1)
+    _assert_same_phi(e0, e1)
+    return h0
+
+
+# ------------------------------------------------------- bitwise parity
+@pytest.mark.parametrize("name", ["fog", "sw_queue"])
+def test_stream_bitwise_on_canned_churn(name):
+    """The canned `*_churn` schedule (rate surge, hub failure, link
+    flap, recovery, source re-draw) replays bitwise-identically through
+    the fused stream and the event loop — topology events break the
+    stream, same-graph runs fold into single dispatch windows."""
+    net = _setup(name)
+    sched = core.churn_schedule(f"{name}_churn", net)
+    hist = _play_both(net, sched)
+    assert np.isfinite(hist["costs"]).all()
+
+
+@pytest.mark.slow
+def test_stream_bitwise_on_sw1000_churn():
+    net = _setup("sw_1000")
+    sched = core.churn_schedule("sw_1000_churn", net)
+    _play_both(net, sched, tail_iters=4)
+
+
+def test_stream_bitwise_with_faults_and_guards():
+    """The robustness layer streams bitwise too: per-segment fault-rng
+    splits, guard re-anchoring at each rebaseline, and the host-side
+    GuardEvent rendering (corrupt_p poisoning makes sentinels actually
+    trip) all match the event loop."""
+    net = _setup("fog")
+    sched = _mixed_schedule(net)
+    hist = _play_both(
+        net, sched,
+        fault_plan=FaultPlan(corrupt_p=0.5),
+        fault_rng=jax.random.PRNGKey(3),
+        guards=GuardConfig(checkpoint_every=2, max_retries=64))
+    assert len(hist["guard_events"]) >= 1  # the rendering path is exercised
+
+
+def test_stream_bitwise_with_async_masks():
+    """Theorem-2 async row masks draw from per-segment engine rng
+    splits on both paths (satellite: the rng= threading)."""
+    net = _setup("fog")
+    sched = _mixed_schedule(net)
+    _play_both(net, sched, rng=jax.random.PRNGKey(5),
+               run_opts={"async_frac": 0.3})
+
+
+# ----------------------------------------------------- tie attribution
+@pytest.mark.parametrize("stream", [False, True])
+def test_same_iteration_tie_attribution(stream):
+    """Two events at the same iteration: the earlier one's record gets
+    a zero-length segment (segment_iters=0, empty segment_costs) and
+    the later one inherits the follow-up — on BOTH replay paths."""
+    net = _setup("fog")
+    sched = core.ChurnSchedule((
+        (3, core.RateScale(1.2)),
+        (3, core.RateScale(0.9)),
+        (6, core.RateScale(1.1)),
+    ), name="ties")
+    eng = core.ReplayEngine(net)
+    hist = eng.play(sched, tail_iters=4, stream=stream)
+    recs = hist["records"]
+    assert [r.it for r in recs] == [3, 3, 6]
+    assert recs[0].segment_iters == 0 and recs[0].segment_costs == []
+    assert recs[1].segment_iters == 3
+    assert recs[2].segment_iters == 4
+    # cost attribution chains: the tied event re-baselines from the
+    # zero-length segment's (unchanged) baseline
+    assert recs[1].cost_before == recs[0].cost_after
+    assert hist["n_iters"] == 3 + 3 + 4
+
+
+# ------------------------------------------------- eligibility + guards
+def test_stream_eligibility_raises():
+    net = _setup("fog")
+    sched = core.ChurnSchedule(((2, core.RateScale(1.1)),))
+    eng = core.ReplayEngine(net, loop_driver="host")
+    with pytest.raises(ValueError, match="host"):
+        eng.play(sched, stream=True)
+    eng = core.ReplayEngine(net)
+    with pytest.raises(ValueError, match="cold_baseline"):
+        eng.play(sched, stream=True, cold_baseline=True)
+    with pytest.raises(ValueError, match="callback"):
+        eng.play(sched, stream=True, callback=lambda rec, engine: None)
+
+
+def test_stream_auto_engages_only_when_unobserved(monkeypatch):
+    """stream=None streams exactly when the per-event work is
+    unobserved: fused loop driver, no checks, no callback, no cold
+    baseline.  A checking engine keeps the per-event path."""
+    net = _setup("fog")
+    sched = core.ChurnSchedule(((2, core.RateScale(1.1)),))
+    calls = []
+    orig = core.ReplayEngine._play_stream
+    monkeypatch.setattr(
+        core.ReplayEngine, "_play_stream",
+        lambda self, *a, **k: calls.append(1) or orig(self, *a, **k))
+    core.ReplayEngine(net, invariant_checks=False).play(sched)
+    assert calls == [1]
+    core.ReplayEngine(net).play(sched)           # checks on -> event loop
+    assert calls == [1]
+    core.ReplayEngine(net, loop_driver="host",
+                      invariant_checks=False).play(sched)
+    assert calls == [1]
+
+
+# --------------------------------------------- satellite: rng threading
+def test_async_frac_without_rng_raises():
+    """run_opts={'async_frac': ...} used to be a silent no-op in replay
+    (run_chunk's masks gate on state.rng, which the engine never set);
+    both layers now refuse the misconfiguration loudly."""
+    net = _setup("fog")
+    with pytest.raises(ValueError, match="rng"):
+        core.ReplayEngine(net, run_opts={"async_frac": 0.3})
+    state = core.init_run_state(net, core.spt_phi_sparse(net),
+                                method="sparse")
+    with pytest.raises(ValueError, match="rng"):
+        core.run_chunk(net, state, 2, async_frac=0.3)
+
+
+def test_engine_rng_is_split_per_segment():
+    """The engine's rng= threads a FRESH split into every segment's
+    run state (mirroring the fault-rng contract), so the async masks
+    differ across segments but are deterministic per engine seed."""
+    net = _setup("fog")
+    key = jax.random.PRNGKey(11)
+    eng = core.ReplayEngine(net, rng=key, run_opts={"async_frac": 0.2})
+    k1, s1 = jax.random.split(key)
+    assert (np.asarray(eng.state.rng) == np.asarray(s1)).all()
+    eng.apply_event(core.RateScale(1.1))
+    _, s2 = jax.random.split(k1)
+    assert (np.asarray(eng.state.rng) == np.asarray(s2)).all()
+    with pytest.raises(ValueError, match="rng"):
+        core.ReplayEngine(net, driver="distributed",
+                          rng=jax.random.PRNGKey(0))
+
+
+# ------------------------- satellite: distributed fault-rng re-split
+def test_distributed_rebaseline_resplits_fault_rng():
+    """The distributed same-graph rebaseline used to keep the previous
+    segment's fault stream while the 'run' driver re-split per segment;
+    both paths now draw the SAME per-segment split sequence from the
+    engine seed."""
+    net = _setup("fog")
+    plan = FaultPlan(participation_p=0.7)
+    key = jax.random.PRNGKey(9)
+    engines = {}
+    for driver in ("run", "distributed"):
+        eng = core.ReplayEngine(net, driver=driver, fault_plan=plan,
+                                fault_rng=key)
+        eng.apply_event(core.RateScale(1.2))   # same-graph rebaseline
+        engines[driver] = np.asarray(eng.state.fault_state.rng)
+    assert (engines["run"] == engines["distributed"]).all()
+    k1, _ = jax.random.split(key)
+    _, s2 = jax.random.split(k1)
+    assert (engines["run"] == np.asarray(s2)).all()
+
+
+def test_distributed_rebaseline_legacy_rng_fallback():
+    """Direct callers that manage no engine rng keep the old behaviour:
+    fault_rng=None continues the previous segment's stream."""
+    from repro.core import distributed as dist
+    net = _setup("fog")
+    state = dist.init_distributed_state(
+        net, core.spt_phi_sparse(net), method="sparse",
+        fault_plan=FaultPlan(participation_p=0.7),
+        fault_rng=jax.random.PRNGKey(4))
+    rng_before = np.asarray(state.fault_state.rng)
+    dist.rebaseline_distributed_state(state, net, state.phi)
+    assert (np.asarray(state.fault_state.rng) == rng_before).all()
+
+
+# --------------------- satellite: distributed run_opts validation
+def test_distributed_engine_rejects_unsupported_run_opts():
+    net = _setup("fog")
+    for opts in ({"tol": 1e-4}, {"async_frac": 0.3}, {"callback": print}):
+        with pytest.raises(ValueError, match="not supported"):
+            core.ReplayEngine(net, driver="distributed", run_opts=opts)
+    # the keys the compiled step actually bakes in stay accepted
+    core.ReplayEngine(net, driver="distributed",
+                      run_opts={"variant": "sgp", "scaling": "adaptive"})
+
+
+# ------------------------- satellite: symmetric feasibility tolerance
+def test_check_feasible_tolerates_ulp_negative_data():
+    """A data slot at -1e-9 of projection float error must pass exactly
+    like the same value in the local column (the data check used to be
+    strictly < 0.0)."""
+    net = _setup("fog")
+    nbrs = core.build_neighbors(net.adj)
+    phi = core.spt_phi_sparse(net, nbrs)
+    eps = 1e-9
+    slot = np.asarray(nbrs.out_mask)[0].argmax()   # a real slot of node 0
+    data = np.asarray(phi.data).copy()
+    local = np.asarray(phi.local).copy()
+    data[0, 0, slot] = -eps
+    local[0, 0, 0] = 1.0 + eps
+    nudged = core.PhiSparse(jnp.asarray(data), jnp.asarray(local),
+                            phi.result)
+    check_feasible(nudged, nbrs, dest=net.dest)    # must not raise
+    data[0, 0, slot] = -1e-3                       # beyond atol still trips
+    local[0, 0, 0] = 1.0 + 1e-3
+    with pytest.raises(AssertionError, match="negative"):
+        check_feasible(core.PhiSparse(jnp.asarray(data),
+                                      jnp.asarray(local), phi.result),
+                       nbrs, dest=net.dest)
+
+
+# --------------------------------------------------- samegraph reduction
+def test_refeasibilize_samegraph_matches_full():
+    """`refeasibilize_sparse_samegraph` is bitwise the full repair when
+    the adjacency is unchanged — including a forced task rebuild."""
+    net = _setup("fog")
+    nbrs = core.build_neighbors(net.adj)
+    phi0 = core.spt_phi_sparse(net, nbrs)
+    state = core.init_run_state(net, phi0, method="sparse")
+    core.run_chunk(net, state, 6)
+    churn = core.ChurnState(net)
+    churn.apply(core.DestRedraw(1, seed=13))
+    net_new = churn.network()
+    rebuild = jnp.asarray(np.arange(net.S) == 1)
+    full, nbrs2 = core.refeasibilize_sparse(net_new, state.phi, nbrs,
+                                            rebuild_tasks=rebuild)
+    assert nbrs2 is nbrs                  # memoized: same adjacency
+    fast = core.refeasibilize_sparse_samegraph(net_new, state.phi, nbrs,
+                                               rebuild_tasks=rebuild)
+    for f in ("data", "local", "result"):
+        a = np.asarray(getattr(full, f))
+        b = np.asarray(getattr(fast, f))
+        assert (a == b).all(), f
