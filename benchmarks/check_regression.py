@@ -21,7 +21,12 @@ quality rows where higher is worse, so the same slower-than gate
 applies) and the regret-vs-drift rows (``regret_event_us_*``: churn
 events-per-second wall-clock through the event-loop engine and the
 fused stream; the speedup ratio and the cost-gap payloads are ungated
-context) gate the exit status: a
+context) and the serving + fleet rows (``serving_*``: warm plan
+wall-clock and us-per-request served from the live φ vs the greedy
+static assignment; ``fleet_*``: per-scenario wall-clock of the B=8
+vmap-batched fleet solve and its solo-loop counterpart — the
+``fleet_speedup_*`` ratio and the ``serving_cost_ratio`` quality
+payload are ungated context) gate the exit status: a
 fresh row more than ``threshold`` (default 20%) slower than its
 committed counterpart is a regression and the process exits 1.  Rows
 present on only one side are reported but never fail — machines differ
@@ -48,7 +53,8 @@ import sys
 GATED_PREFIXES = ("scale_flows_sparse", "scale_step_sparse",
                   "scale_run_sparse", "scale_fusedrun_V", "scale_rounds_",
                   "scale_bucketed_", "scale_wasted_lanes_",
-                  "replay_", "robustness_", "regret_")
+                  "replay_", "robustness_", "regret_",
+                  "serving_", "fleet_")
 # ...except the cold-restart iteration counts: cold shares its
 # iterations-to-target TARGET with the warm run (min of the two finals),
 # so a warm-start IMPROVEMENT inflates the cold count — it is context
@@ -58,12 +64,13 @@ GATED_PREFIXES = ("scale_flows_sparse", "scale_step_sparse",
 # is an improvement, and a speedup would read as a "regression" — the
 # per-event/flows/step TIMING rows carry the actual promise
 UNGATED_PREFIXES = ("replay_cold_iters_", "scale_bucketed_speedup_",
-                    "regret_speedup_")
+                    "regret_speedup_", "fleet_speedup_")
 
 # gated row families: a fresh report missing an ENTIRE family the
 # committed baseline has means that sweep never ran — overwriting the
 # baseline would silently un-gate the family forever (see report())
-FAMILIES = ("scale_", "replay_", "robustness_", "regret_")
+FAMILIES = ("scale_", "replay_", "robustness_", "regret_",
+            "serving_", "fleet_")
 
 
 def rows_to_dict(rows) -> dict:
@@ -161,7 +168,8 @@ def report(fresh: dict, committed: dict, threshold: float = 0.2,
             print(f"# ERROR: committed baseline has gated {fam}* rows "
                   "but the fresh report has none — run that sweep too "
                   "(scale: --only scale; replay: --replay; robustness: "
-                  "--robustness; regret: --regret)", file=out)
+                  "--robustness; regret: --regret; serving/fleet: "
+                  "--serving)", file=out)
             return 2
     return 1 if regressions else 0
 

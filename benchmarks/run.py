@@ -25,7 +25,7 @@ def main(argv=None) -> int:
                          "(dense at V=1000 takes hours on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL)
-                         + ",replay,robustness,regret")
+                         + ",replay,robustness,regret,serving")
     ap.add_argument("--replay", action="store_true",
                     help="also run the streaming churn replay sweep "
                          "(benchmarks.replay_sweep) and emit its "
@@ -47,6 +47,15 @@ def main(argv=None) -> int:
                          "churn events/sec through the fused stream "
                          "vs the event-loop engine, part of the "
                          "committed BENCH_report.json baseline")
+    ap.add_argument("--serving", action="store_true",
+                    help="also run the serving + fleet sweep "
+                         "(benchmarks.serving_sweep) and emit its "
+                         "serving_*/fleet_* rows — end-to-end "
+                         "requests/sec served from the live φ vs the "
+                         "greedy nearest-pod baseline, and the B=8 "
+                         "vmap-batched fleet solve vs B solo runs, "
+                         "part of the committed BENCH_report.json "
+                         "baseline")
     ap.add_argument("--sizes", default=None,
                     help="comma-separated V list for the scale sweep "
                          "(e.g. 20,100 — the quick CI subset); default "
@@ -73,6 +82,8 @@ def main(argv=None) -> int:
         names.append("robustness")
     if args.regret and "regret" not in names:
         names.append("regret")
+    if args.serving and "serving" not in names:
+        names.append("serving")
 
     committed_rows = None
     if args.check_against:
@@ -122,6 +133,9 @@ def main(argv=None) -> int:
             elif name == "regret":
                 from . import regret_sweep
                 regret_sweep.run(full=args.full)
+            elif name == "serving":
+                from . import serving_sweep
+                serving_sweep.run(full=args.full)
             elif name == "roofline":
                 from . import roofline
                 roofline.run(args.report)

@@ -1,0 +1,185 @@
+"""Serving + fleet sweep (fig: none — the system layer on top of the
+paper's solver).
+
+Two workloads, two promises:
+
+1. **End-to-end request serving** — a multi-pod cluster behind
+   `RequestRouter`: plan to the Theorem-1 optimum on the sparse engine
+   through the fused driver, then serve a stream of per-request offload
+   decisions FROM the live φ (`decide`, the φ-walk) while folding every
+   arrival into the windowed rate estimate (`observe`).  The same
+   stream is served by the deployed-heuristic baseline
+   (`greedy_plan`'s static nearest/least-utilized assignment) — the
+   head-to-head the serving layer exists for: the optimal plan serves
+   the SAME requests/sec order of magnitude at a strictly lower
+   network cost.
+2. **Fleet batching** — B=8 task-pattern variants of one topology
+   solved as ONE vmap-batched dispatch stream (`core.run_fleet`,
+   2 dispatches/iteration whatever B is) against the same B scenarios
+   solved one at a time through the solo fused driver.  Lane results
+   are bitwise-identical (tests/test_fleet.py), so the rows time the
+   same computation.
+
+Rows:
+
+  serving_plan_us           wall-clock of one warm `plan()` to the
+                            production n_iters (gated)
+  serving_rps_optimal       us per request served from the live φ —
+                            observe + decide per arrival (gated;
+                            derived carries req_per_s and the plan's
+                            network cost)
+  serving_rps_greedy        us per request under the greedy static
+                            assignment, same stream (gated)
+  serving_cost_ratio        derived-only (us=0): greedy/optimal network
+                            cost ratio on identical demand — the
+                            quality gap the optimizer buys at serving
+                            parity
+  fleet_run_us_B8           us per scenario, whole fleet in one batched
+                            stream, cold start (gated; derived carries
+                            the whole-fleet dispatch count)
+  fleet_solo_us_B8          us per scenario, same B solved one at a
+                            time through the solo fused driver (gated)
+  fleet_speedup_B8          solo/fleet wall ratio (ungated: higher is
+                            better — the two *_us rows are the gate)
+
+Emitted by ``benchmarks.run --serving`` (opt-in like --replay);
+``--quick`` shrinks the stream and iteration counts for the CI smoke
+diff.
+"""
+import time
+
+import numpy as np
+
+from repro import core
+from repro.serving import PodSpec, RequestRouter
+
+from .common import emit
+
+B_FLEET = 8
+FLEET_ITERS = 30
+
+
+def _router() -> RequestRouter:
+    pods = [PodSpec(30.0), PodSpec(20.0, speed=0.8),
+            PodSpec(40.0, speed=1.2), PodSpec(25.0)]
+    demand = np.array([[2.0, 1.0], [1.0, 2.0], [0.5, 0.8]])
+    return RequestRouter(
+        pods, n_frontends=2,
+        classes={"chat": 1.5, "summarize": 0.3, "embed": 0.05},
+        demand=demand)
+
+
+def _request_stream(router: RequestRouter, n_req: int):
+    """Seeded arrival stream matching the planned demand mix."""
+    demand = np.asarray(router.net.r)[:, 1:1 + router.F]
+    p = (demand / demand.sum()).ravel()
+    rng = np.random.RandomState(0)
+    picks = rng.choice(p.size, size=n_req, p=p)
+    toks = rng.poisson(20.0, size=n_req) + 1
+    return [(router.class_names[k // router.F], k % router.F, int(t))
+            for k, t in zip(picks, toks)], rng
+
+
+def _serving_rows(n_req: int, n_iters: int) -> None:
+    router = _router()
+    router.plan(n_iters=n_iters)               # warm-up: jit + SPT rows
+    t0 = time.perf_counter()
+    s = router.plan(n_iters=n_iters)
+    plan_us = (time.perf_counter() - t0) * 1e6
+    emit("serving_plan_us", plan_us,
+         f"V={router.net.V};n_iters={n_iters};cost={s['total_cost']:.4f}")
+
+    stream, rng = _request_stream(router, n_req)
+    router._decision_table()                   # build outside the timer
+    counts = np.zeros(router.P)
+    t = 0.0
+    t0 = time.perf_counter()
+    for name, f, toks in stream:
+        t += 1e-3
+        router.observe(name, f, toks, t)
+        counts[router.decide(name, f, rng=rng)] += 1
+    wall = (time.perf_counter() - t0) * 1e6
+    opt_cost = s["total_cost"]
+    emit("serving_rps_optimal", wall / n_req,
+         f"req_per_s={n_req / wall * 1e6:.0f};n_req={n_req};"
+         f"cost={opt_cost:.4f};"
+         f"top_pod_share={counts.max() / n_req:.2f}")
+
+    g = router.greedy_plan()
+    assign = g["assignment"]
+    idx = {name: i for i, name in enumerate(router.class_names)}
+    counts_g = np.zeros(router.P)
+    t0 = time.perf_counter()
+    for name, f, _toks in stream:
+        counts_g[assign[idx[name], f]] += 1
+    wall_g = (time.perf_counter() - t0) * 1e6
+    emit("serving_rps_greedy", wall_g / n_req,
+         f"req_per_s={n_req / wall_g * 1e6:.0f};n_req={n_req};"
+         f"cost={g['total_cost']:.4f}")
+    emit("serving_cost_ratio", 0.0,
+         f"greedy_over_optimal={g['total_cost'] / opt_cost:.4f};"
+         f"optimal={opt_cost:.4f};greedy={g['total_cost']:.4f}")
+
+
+def _fleet_nets(b: int):
+    import dataclasses
+
+    import jax.numpy as jnp
+    base = core.make_scenario(core.TABLE_II["abilene"])
+    rng = np.random.RandomState(0)
+    nets = []
+    for _ in range(b):
+        r = np.asarray(base.r) * (0.6 + 0.8 * rng.rand(*base.r.shape))
+        dest = rng.randint(0, base.V, size=np.asarray(base.dest).shape)
+        nets.append(dataclasses.replace(
+            base, r=jnp.asarray(r), dest=jnp.asarray(dest, jnp.int32)))
+    return nets
+
+
+def _fleet_rows(n_iters: int) -> None:
+    nets = _fleet_nets(B_FLEET)
+    nbrs = core.build_neighbors(nets[0].adj)
+
+    core.run_fleet(nets, n_iters=n_iters, nbrs=nbrs)      # warm-up jits
+    t0 = time.perf_counter()
+    _, hist = core.run_fleet(nets, n_iters=n_iters, nbrs=nbrs)
+    wall_fleet = (time.perf_counter() - t0) * 1e6
+
+    def solo_all():
+        for net in nets:
+            state = core.init_run_state(net, core.spt_phi_sparse(net, nbrs),
+                                        method="sparse", nbrs=nbrs)
+            core.run_chunk(net, state, n_iters, driver="fused")
+
+    solo_all()                                            # warm-up jits
+    t0 = time.perf_counter()
+    solo_all()
+    wall_solo = (time.perf_counter() - t0) * 1e6
+
+    emit(f"fleet_run_us_B{B_FLEET}", wall_fleet / B_FLEET,
+         f"B={B_FLEET};n_iters={n_iters};"
+         f"n_dispatches={hist['n_dispatches']}")
+    emit(f"fleet_solo_us_B{B_FLEET}", wall_solo / B_FLEET,
+         f"B={B_FLEET};n_iters={n_iters};"
+         f"n_dispatches={2 * n_iters * B_FLEET}")
+    emit(f"fleet_speedup_B{B_FLEET}", wall_solo / wall_fleet,
+         f"fleet_ms={wall_fleet / 1e3:.1f};solo_ms={wall_solo / 1e3:.1f}")
+
+
+def run(full: bool = False, quick: bool = False):
+    if quick:
+        _serving_rows(n_req=300, n_iters=40)
+        _fleet_rows(n_iters=8)
+    else:
+        _serving_rows(n_req=2000, n_iters=150)
+        _fleet_rows(n_iters=FLEET_ITERS)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (short stream, few iterations)")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=a.quick)

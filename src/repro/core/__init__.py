@@ -9,6 +9,7 @@ Public API:
   TABLE_II, make_scenario, fail_node                    (scenarios, §V)
   ChurnSchedule, random_schedule, churn_schedule        (churn events)
   ReplayEngine, check_invariants                        (streaming replay)
+  run_fleet, FleetCache, stack_fleet                    (batched fleet)
   FaultPlan, init_fault_state                           (fault injection)
   GuardConfig, GuardEvent                               (guards/rollback)
 """
@@ -27,7 +28,11 @@ from .marginals import Marginals, compute_marginals, phi_gradients
 from .faults import (FaultPlan, FaultState, fault_state_specs,
                      init_fault_state)
 from .sgp import (FusedStream, RunState, SGPConsts, init_run_state,
-                  make_consts, project_rows, run, run_chunk, sgp_step)
+                  make_consts, project_rows, run, run_chunk, run_opt_keys,
+                  sgp_step, validate_run_opts)
+from .fleet import (FleetCache, FleetState, fleet_cache_key,
+                    init_fleet_state, run_fleet, run_fleet_chunk,
+                    stack_fleet)
 from .guards import GuardConfig, GuardEvent, GuardState, init_guard_state
 from .baselines import run_all, run_lcor, run_lpr, run_spoo
 from .optimality import (flow_domain_optimum, marginals_vs_autodiff,
@@ -41,7 +46,7 @@ from .distributed import (DistributedRunState, NodePartition,
                           run_distributed_chunk, task_mesh, task_node_mesh)
 from .events import (ChurnSchedule, ChurnState, DestRedraw, LinkCut,
                      LinkRestore, NodeFail, NodeRecover, RateScale,
-                     SourceRedraw, event_kind, random_schedule)
+                     RateSet, SourceRedraw, event_kind, random_schedule)
 from .replay import (EventRecord, ReplayEngine, check_feasible,
                      check_invariants, iters_or_budget, iters_to_target)
 from . import moe_bridge, topologies
@@ -63,7 +68,10 @@ __all__ = [
     "FaultPlan", "FaultState", "fault_state_specs", "init_fault_state",
     "GuardConfig", "GuardEvent", "GuardState", "init_guard_state",
     "FusedStream", "RunState", "SGPConsts", "init_run_state", "make_consts",
-    "project_rows", "run", "run_chunk", "sgp_step",
+    "project_rows", "run", "run_chunk", "run_opt_keys", "sgp_step",
+    "validate_run_opts",
+    "FleetCache", "FleetState", "fleet_cache_key", "init_fleet_state",
+    "run_fleet", "run_fleet_chunk", "stack_fleet",
     "run_all", "run_lcor", "run_lpr", "run_spoo",
     "flow_domain_optimum", "marginals_vs_autodiff", "theorem1_residual",
     "TABLE_II", "ScenarioSpec", "churn_hub", "churn_schedule",
@@ -74,8 +82,8 @@ __all__ = [
     "run_distributed", "run_distributed_chunk", "task_mesh",
     "task_node_mesh",
     "ChurnSchedule", "ChurnState", "DestRedraw", "LinkCut", "LinkRestore",
-    "NodeFail", "NodeRecover", "RateScale", "SourceRedraw", "event_kind",
-    "random_schedule",
+    "NodeFail", "NodeRecover", "RateScale", "RateSet", "SourceRedraw",
+    "event_kind", "random_schedule",
     "EventRecord", "ReplayEngine", "check_feasible", "check_invariants",
     "iters_or_budget", "iters_to_target",
 ]

@@ -74,6 +74,26 @@ class DestRedraw:
 
 
 @dataclasses.dataclass(frozen=True)
+class RateSet:
+    """Set exogenous rates OUTRIGHT — one task's row [V] (`task` given)
+    or the full [S, V] matrix (`task=None`).
+
+    This is the serving bridge's event: a windowed estimate of arriving
+    request streams maps onto absolute task rates, which a multiplicative
+    `RateScale` cannot express once load MOVES between sources.  Unlike
+    `RateScale` it may introduce rate where the live network had none,
+    so its kind is "routing", not "rate": the replay engine repairs the
+    iterate through `refeasibilize_sparse` (whose direct-source damage
+    rule rebuilds a task whose new source sits on an empty result row)
+    instead of assuming feasibility is preserved.  Rates set on
+    currently-failed nodes stay masked until the node recovers
+    (`ChurnState.network` re-derives through `fail_node`).
+    """
+    r: object                       # [V] (task given) or [S, V] array-like
+    task: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class NodeFail:
     """Fail a node: links removed, compute disabled, its inputs stop,
     tasks destined to it go dark (`scenarios.fail_node` semantics)."""
@@ -102,7 +122,8 @@ class LinkRestore:
     both: bool = True
 
 
-_KIND = {RateScale: "rate", SourceRedraw: "routing", DestRedraw: "routing",
+_KIND = {RateScale: "rate", RateSet: "routing",
+         SourceRedraw: "routing", DestRedraw: "routing",
          NodeFail: "topology", NodeRecover: "topology",
          LinkCut: "topology", LinkRestore: "topology"}
 
@@ -187,6 +208,22 @@ class ChurnState:
             else:
                 r = self.r.copy()
                 r[event.task] *= event.factor
+                self.r = r
+        elif isinstance(event, RateSet):
+            new_r = np.asarray(event.r, dtype=self.r.dtype)
+            if event.task is None:
+                if new_r.shape != self.r.shape:
+                    raise ValueError(
+                        f"RateSet matrix shape {new_r.shape} != r shape "
+                        f"{self.r.shape}")
+                self.r = new_r.copy()
+            else:
+                if new_r.shape != self.r[event.task].shape:
+                    raise ValueError(
+                        f"RateSet row shape {new_r.shape} != per-task "
+                        f"shape {self.r[event.task].shape}")
+                r = self.r.copy()
+                r[event.task] = new_r
                 self.r = r
         elif isinstance(event, SourceRedraw):
             rng = np.random.RandomState(event.seed)

@@ -47,7 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .events import ChurnSchedule, ChurnState, DestRedraw, event_kind
+from .events import (ChurnSchedule, ChurnState, DestRedraw, RateSet,
+                     event_kind)
 from .network import (CECNetwork, Neighbors, PhiSparse, build_buckets,
                       build_neighbors, is_loop_free, refeasibilize_sparse,
                       refeasibilize_sparse_samegraph, sparse_to_phi,
@@ -423,6 +424,19 @@ class ReplayEngine:
                           cost_after=float(self.state.costs[-1]))
         self.records.append(rec)
         self._segment_open = True
+        return rec
+
+    def rebaseline_rates(self, r, task: Optional[int] = None,
+                         n_iters: int = 0) -> EventRecord:
+        """Warm drift rebaseline for the serving bridge: fold a windowed
+        request-rate estimate into the live system as a `RateSet` event
+        — the iterate is repaired and re-baselined WARM (never re-solved
+        from the SPT) — then advance `n_iters` iterations toward the new
+        optimum.  Returns the event's record (cost before/after the
+        repair)."""
+        rec = self.apply_event(RateSet(r, task=task))
+        if n_iters > 0:
+            self.iterate(n_iters)
         return rec
 
     # ------------------------------------------------------ fused stream

@@ -1413,6 +1413,42 @@ def _run_chunk_fused(net: CECNetwork, state: RunState, fl, n_iters: int,
     return state
 
 
+def run_opt_keys(fn=None) -> frozenset:
+    """Keyword surface a caller may forward to a driver as a `run_opts`
+    dict — `run_chunk` by default, or any driver `fn`.  Positional
+    driver inputs (net/state/phi0/n_iters) are excluded: wrappers own
+    those."""
+    import inspect
+    fn = run_chunk if fn is None else fn
+    return frozenset(inspect.signature(fn).parameters) - {
+        "net", "state", "phi0", "n_iters"}
+
+
+def validate_run_opts(opts: Optional[dict], supported, context: str,
+                      reserved=()) -> dict:
+    """Reject unsupported/reserved `run_opts` keys LOUDLY.
+
+    Forwarding dicts through **kwargs turns a typo'd or unsupported
+    option into silently-default behavior mid-flight (the PR-8 lesson
+    from the distributed replay driver); every layer that accepts a
+    run_opts dict funnels it through here instead.  `reserved` names
+    keys the wrapper sets itself (passing one is a conflict, not an
+    unknown).  Returns a copy of `opts` safe to ** into the driver.
+    """
+    opts = dict(opts or {})
+    clash = set(opts) & set(reserved)
+    if clash:
+        raise ValueError(
+            f"run_opts {sorted(clash)} are set by {context} itself — "
+            "pass them through its own arguments instead")
+    unknown = set(opts) - set(supported)
+    if unknown:
+        raise ValueError(
+            f"run_opts {sorted(unknown)} are not supported by {context}; "
+            f"supported keys: {sorted(set(supported) - set(reserved))}")
+    return opts
+
+
 def run(net: CECNetwork, phi0, n_iters: int = 200,
         variant: str = "sgp", beta: float = 1.0,
         allowed_data=None, allowed_result=None,

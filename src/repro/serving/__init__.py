@@ -1,2 +1,2 @@
-from .engine import ServeConfig, ServingEngine
-from .router import RequestRouter, PodSpec
+from .engine import Request, ServeConfig, ServingEngine
+from .router import PodSpec, RateEstimator, RequestRouter, RouterConfig

@@ -6,11 +6,22 @@ Slot model: `max_slots` concurrent sequences share the cache
 (prompt prefilled one slot at a time via model.prefill on a batch of 1
 — production would batch prefill; noted in EXPERIMENTS §Perf), then all
 active slots decode in lock-step batched steps.
+
+Model state vs cache: per-sequence recurrent state can live in TWO
+places.  Attention KV and mamba/ssd conv+ssm lanes live in the decode
+cache (per-slot by construction — admission slices the slot's lane).
+Anything the model keeps in its mutable STATE pytree (`state_specs()`)
+is engine-global UNLESS its spec carries a "batch" logical axis, in
+which case it is per-sequence and admission must slice/write back only
+the admitted slot's lane — prefilling on a batch of 1 and keeping the
+returned state whole would clobber every other in-flight sequence's
+lane (the cross-request state leak this engine once had; locked by
+tests/test_serving.py::test_admit_does_not_leak_state).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +35,10 @@ class ServeConfig:
     max_slots: int = 8
     max_len: int = 512
     eos_id: int = 1
+    # decode-step budget per request: `Request.out` carries the
+    # prefill-emitted first token plus at most max_new_tokens decode
+    # tokens (so a request that never hits EOS/max_len completes with
+    # exactly max_new_tokens + 1 output tokens)
     max_new_tokens: int = 64
 
 
@@ -35,6 +50,37 @@ class Request:
     done: bool = False
 
 
+def _state_lane_axes(model, mstate):
+    """Per-leaf slot-lane axis of the model-state pytree (-1 = global).
+
+    Derived from `state_specs()` logical axes: a leaf whose spec names
+    a "batch" axis holds per-sequence recurrent state; a leaf without
+    one is engine-global (sentinel -1, not None — None leaves vanish
+    from pytree structure and would break the tree.maps in `admit`).
+    Returns None (no slicing anywhere) when the model is stateless,
+    exposes no specs, or `mstate`'s structure doesn't match the specs
+    (a caller passing a custom state opts out of lane handling).
+    """
+    if not mstate or not hasattr(model, "state_specs"):
+        return None
+    specs = model.state_specs()
+    if not specs:
+        return None
+    is_spec = lambda x: isinstance(x, module.ParamSpec)  # noqa: E731
+    if (jax.tree.structure(specs, is_leaf=is_spec)
+            != jax.tree.structure(mstate)):
+        return None
+    return jax.tree.map(
+        lambda s: s.axes.index("batch") if "batch" in s.axes else -1,
+        specs, is_leaf=is_spec)
+
+
+def _lane_index(c, ax, slot):
+    idx = [slice(None)] * c.ndim
+    idx[ax] = slice(slot, slot + 1)
+    return tuple(idx)
+
+
 class ServingEngine:
     def __init__(self, model, params, cfg: ServeConfig,
                  mstate: Optional[dict] = None):
@@ -42,6 +88,7 @@ class ServingEngine:
         self.params = params
         self.cfg = cfg
         self.mstate = mstate or {}
+        self._state_lane = _state_lane_axes(model, self.mstate)
         key = jax.random.PRNGKey(0)
         self.cache = module.init(
             model.init_cache_specs(cfg.max_slots, cfg.max_len), key)
@@ -66,21 +113,41 @@ class ServingEngine:
         sl = jax.tree.map(lambda c: c[:, slot:slot + 1]
                           if c.ndim > 1 else c, self.cache)
         prompt = jnp.asarray(req.prompt[None])
+        # slot-lane state leaves see only their own lane; global leaves
+        # (batch-agnostic accumulators like MoE load EMAs) pass whole
+        ms = self.mstate
+        if self._state_lane is not None:
+            ms = jax.tree.map(
+                lambda c, ax: c if ax < 0 else c[_lane_index(c, ax, slot)],
+                self.mstate, self._state_lane)
         if hasattr(self.model, "prefill") and self.model.cfg.family != "encdec":
-            logits, self.mstate, sl = self.model.prefill(
-                self.params, self.mstate, sl, prompt)
+            logits, ms_new, sl = self.model.prefill(
+                self.params, ms, sl, prompt)
         else:  # enc-dec prefill needs encoder features (stubbed here)
             feats = jnp.zeros((1, self.model.cfg.n_enc_frames,
                                self.model.cfg.d_model), jnp.float32)
-            logits, self.mstate, sl = self.model.prefill(
-                self.params, self.mstate, sl, prompt, enc_feats=feats)
+            logits, ms_new, sl = self.model.prefill(
+                self.params, ms, sl, prompt, enc_feats=feats)
+        if self._state_lane is not None:
+            self.mstate = jax.tree.map(
+                lambda c, new, ax: (new if ax < 0 else
+                                    c.at[_lane_index(c, ax, slot)].set(new)),
+                self.mstate, ms_new, self._state_lane)
+        else:
+            self.mstate = ms_new
         self.cache = jax.tree.map(
             lambda c, s: c.at[:, slot:slot + 1].set(s) if c.ndim > 1 else s,
             self.cache, sl)
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+        if tok == self.cfg.eos_id or self.cfg.max_new_tokens <= 0:
+            # the prefill-emitted token can itself end the request; the
+            # slot is never occupied, so the next admit reuses it
+            req.done = True
+            return True
         self.active[slot] = req
         self.pos[slot] = len(req.prompt)
-        self.last_tok[slot] = int(jnp.argmax(logits[0]))
-        req.out.append(int(self.last_tok[slot]))
+        self.last_tok[slot] = tok
         return True
 
     def step(self):
@@ -99,8 +166,11 @@ class ServingEngine:
             tok = int(nxt[i])
             req.out.append(tok)
             self.last_tok[i] = tok
+            # out[0] is the prefill-emitted token: only DECODE-emitted
+            # tokens count against the max_new_tokens budget (counting
+            # the prefill token completed every request one step early)
             if (tok == self.cfg.eos_id
-                    or len(req.out) >= self.cfg.max_new_tokens
+                    or len(req.out) - 1 >= self.cfg.max_new_tokens
                     or self.pos[i] >= self.cfg.max_len - 1):
                 req.done = True
                 self.active[i] = None

@@ -13,13 +13,36 @@ Cluster model (a CEC network, §II of the paper):
 
 Request classes map to tasks: class m has input rate r (tokens/s of
 prompt) at each frontend and a_m = avg generated/prompt length ratio
-(result flow).  `plan()` runs distributed SGP to the Theorem-1 optimum;
-`on_pod_failure()` replays the paper's Fig-5b adaptivity experiment as a
-serving failover (warm-start from the surviving strategy).
+(result flow).  `plan()` runs SGP to the Theorem-1 optimum — on the
+SPARSE edge-slot engine through the FUSED async driver by default, the
+same production path every other layer uses — and `on_pod_failure()`
+replays the paper's Fig-5b adaptivity experiment as a serving failover
+(warm start from the sparse iterate via `refeasibilize_sparse`).
+
+The live-request bridge (the serving loop on top of the plan):
+
+  observe()            windowed estimation — arriving request streams
+                       fold into per-(class, frontend) token rates.
+  decide()             per-request offload decision served FROM the
+                       live φ: a loop-free walk down the class's data
+                       splits from the entry frontend to the pod that
+                       locally computes (argmax per hop, or sampled
+                       with `rng` so long-run pod frequencies match the
+                       optimal fractional dispatch).
+  maybe_rebaseline()   measured rates drifting past a threshold fold
+                       into the solver as ONE `RateSet` event through a
+                       `ReplayEngine` — the iterate is repaired and
+                       re-baselined WARM (never a cold re-plan).
+  greedy_plan()        the deployed-heuristic baseline: each (class,
+                       frontend) demand routed to the greedy
+                       nearest/least-utilized pod, congestion- and
+                       result-flow-blind — what `decide` is measured
+                       against in benchmarks/serving_sweep.py.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
@@ -39,6 +62,46 @@ class RouterConfig:
     dcn_capacity: float = 50.0   # gateway<->frontend, frontend<->pod
     ici_capacity: float = 200.0  # pod<->pod
     n_iters: int = 150
+    window: float = 60.0         # rate-estimation window, seconds
+
+
+class RateEstimator:
+    """Sliding-window token-rate estimate per (class, frontend).
+
+    `observe(s, f, tokens, t)` records one arriving request's prompt
+    tokens at time `t` (seconds, any monotone clock); `rates(t)`
+    returns the [S, F] tokens/s estimate over the trailing window —
+    the request→task-rate bridge the router re-plans against.
+    """
+
+    def __init__(self, n_classes: int, n_frontends: int,
+                 window: float = 60.0):
+        self.window = float(window)
+        self._events: deque = deque()          # (t, s, f, tokens)
+        self._sum = np.zeros((n_classes, n_frontends))
+        self._t = 0.0
+
+    def observe(self, s: int, f: int, tokens: float, t: float) -> None:
+        if t < self._t:
+            raise ValueError(f"time went backwards: {t} < {self._t}")
+        self._t = t
+        self._events.append((t, s, f, float(tokens)))
+        self._sum[s, f] += tokens
+        self._evict()
+
+    def _evict(self) -> None:
+        horizon = self._t - self.window
+        while self._events and self._events[0][0] <= horizon:
+            _, s, f, tok = self._events.popleft()
+            self._sum[s, f] -= tok
+
+    def rates(self, t: Optional[float] = None) -> np.ndarray:
+        if t is not None:
+            if t < self._t:
+                raise ValueError(f"time went backwards: {t} < {self._t}")
+            self._t = t
+            self._evict()
+        return np.maximum(self._sum, 0.0) / self.window
 
 
 class RequestRouter:
@@ -95,35 +158,195 @@ class RequestRouter:
         self._phi_init = core.offload_phi(self.net, pod_ids)
         self.net = core.enforce_feasibility(self.net, margin=0.8,
                                             phi0=self._phi_init)
+        self.nbrs = core.build_neighbors(self.net.adj)
         self.phi = None
         self.history = None
+        self.method = "sparse"
+        self.estimator = RateEstimator(S, self.F, window=cfg.window)
+        self._run_opts: dict = {}
+        self._live: Optional[core.ReplayEngine] = None
+        self._phi_table: Optional[np.ndarray] = None   # dense data rows
 
     # ------------------------------------------------------------------
     def plan(self, n_iters: Optional[int] = None,
-             distributed: bool = False):
-        phi0 = self.phi if self.phi is not None else self._phi_init
+             distributed: bool = False, method: str = "sparse",
+             driver: str = "fused", run_opts: Optional[dict] = None):
+        """Solve to the Theorem-1 optimum and return `summary()`.
+
+        method/driver default to the production path (edge-slot engine,
+        fused async chunks); run_opts forwards any other driver option
+        — unknown or wrapper-owned keys are rejected LOUDLY rather than
+        silently dropped (`core.validate_run_opts`).
+        """
         runner = core.run_distributed if distributed else core.run
+        reserved = ("method", "driver")
+        supported = core.run_opt_keys(runner) - {"min_scale", "rng",
+                                                 "mesh", "bucketed",
+                                                 "fault_plan", "fault_rng",
+                                                 "guards"}
+        opts = core.validate_run_opts(
+            run_opts, supported, "RequestRouter.plan"
+            + (" (distributed)" if distributed else ""), reserved=reserved)
+        phi0 = self.phi if self.phi is not None else self._phi_init
+        if method == "sparse" and not isinstance(phi0, core.PhiSparse):
+            phi0 = core.phi_to_sparse(phi0, self.nbrs)
         self.phi, self.history = runner(
-            self.net, phi0, n_iters=n_iters or self.cfg.n_iters)
+            self.net, phi0, n_iters=n_iters or self.cfg.n_iters,
+            method=method, driver=driver, **opts)
+        self.method = method
+        self._run_opts = opts
+        self._live = None           # next drift rebaseline re-anchors here
+        self._phi_table = None
         return self.summary()
 
     def on_pod_failure(self, pod_index: int, n_iters: Optional[int] = None):
         """Fail a pod and re-plan from the surviving strategy (warm start
-        — the paper's adaptivity property, Theorem 2)."""
+        — the paper's adaptivity property, Theorem 2).  A sparse iterate
+        is repaired natively (`refeasibilize_sparse` re-slots it onto
+        the failed graph's tiles); a dense one through `refeasibilize`."""
         node = 1 + self.F + pod_index
         self.net = core.fail_node(self.net, node)
-        if self.phi is not None:
-            self.phi = core.refeasibilize(self.net, self.phi)
-        return self.plan(n_iters=n_iters)
+        self._live = None
+        self._phi_table = None
+        if isinstance(self.phi, core.PhiSparse):
+            self.phi, self.nbrs = core.refeasibilize_sparse(
+                self.net, self.phi, self.nbrs)
+        else:
+            self.nbrs = core.build_neighbors(self.net.adj)
+            if self.phi is not None:
+                self.phi = core.refeasibilize(self.net, self.phi)
+        return self.plan(n_iters=n_iters, method=self.method,
+                         run_opts=self._run_opts or None)
+
+    # ------------------------------------------------- live request bridge
+    def class_index(self, class_name: str) -> int:
+        return self.class_names.index(class_name)
+
+    def observe(self, class_name: str, frontend: int, tokens: float,
+                t: float) -> None:
+        """Fold one arriving request (its prompt tokens, at time `t`)
+        into the windowed rate estimate."""
+        self.estimator.observe(self.class_index(class_name), frontend,
+                               tokens, t)
+
+    def drift(self) -> float:
+        """Relative L1 gap between the windowed estimate and the rates
+        the current plan was solved for."""
+        planned = np.asarray(self.net.r)[:, 1:1 + self.F]
+        est = self.estimator.rates()
+        return float(np.abs(est - planned).sum()
+                     / max(planned.sum(), 1e-9))
+
+    def maybe_rebaseline(self, threshold: float = 0.25,
+                         n_iters: int = 30) -> dict:
+        """Re-anchor the plan on the measured rates IF drift exceeds
+        `threshold` — as a warm `ReplayEngine` rebaseline (`RateSet`
+        event + `n_iters` warm iterations), never a cold re-plan."""
+        d = self.drift()
+        if d <= threshold:
+            return {"drift": d, "rebaselined": False}
+        if self.phi is None:
+            self.plan()
+        if self._live is None:
+            self._live = core.ReplayEngine(
+                self.net, phi0=self._sparse_phi(),
+                run_opts=dict(self._run_opts) or None,
+                invariant_checks=False)
+        r_new = np.zeros(np.asarray(self.net.r).shape)
+        r_new[:, 1:1 + self.F] = self.estimator.rates()
+        self._live.rebaseline_rates(r_new, n_iters=n_iters)
+        self.net = self._live.net
+        self.phi = self._live.phi
+        self.nbrs = self._live.nbrs
+        self.method = "sparse"
+        self._phi_table = None
+        return {"drift": d, "rebaselined": True,
+                "cost": float(self._live.cost)}
+
+    def _sparse_phi(self) -> core.PhiSparse:
+        if self.phi is None:
+            self.plan()
+        if isinstance(self.phi, core.PhiSparse):
+            return self.phi
+        return core.phi_to_sparse(self.phi, self.nbrs)
+
+    def _decision_table(self) -> np.ndarray:
+        """Dense per-class data rows [S, V, V+1] of the live φ (host
+        copy, rebuilt after every plan/failover/rebaseline)."""
+        if self._phi_table is None:
+            dense = core.as_dense_phi(self._sparse_phi(), self.net)
+            self._phi_table = np.asarray(dense.data)
+        return self._phi_table
+
+    def decide(self, class_name: str, frontend: int, rng=None) -> int:
+        """Per-request offload decision from the live φ: walk the
+        class's data splits from the entry frontend until a node
+        offloads locally, and return that pod index.
+
+        rng=None takes the argmax split at every hop (deterministic);
+        an `np.random` generator samples proportionally, so the
+        LONG-RUN pod frequencies reproduce the optimal fractional
+        dispatch instead of collapsing onto the single largest share.
+        Loop-freedom of φ bounds the walk at V hops.
+        """
+        s = self.class_index(class_name)
+        table = self._decision_table()
+        v = 1 + frontend
+        for _ in range(self.net.V):
+            row = table[s, v]
+            k = (int(np.argmax(row)) if rng is None
+                 else int(rng.choice(row.shape[0], p=row / row.sum())))
+            if k == self.net.V:                 # local offload: compute here
+                if v in self.pod_nodes:
+                    return v - (1 + self.F)
+                break                           # non-pod compute (degenerate)
+            v = k
+        raise RuntimeError(
+            f"φ walk from frontend {frontend} never reached a pod for "
+            f"class {class_name!r} — the plan is stale or infeasible")
+
+    def greedy_plan(self) -> dict:
+        """The deployed-heuristic baseline: route each (class, frontend)
+        demand entirely to the greedy nearest/least-utilized pod —
+        congestion-blind (no queueing model) and result-blind (a_m
+        ignored).  Returns the induced φ and its true network cost, for
+        head-to-head rows against `plan()`'s optimum."""
+        demand = np.asarray(self.net.r)[:, 1:1 + self.F]
+        caps = np.array([p.capacity for p in self.pods])
+        speeds = np.array([p.speed for p in self.pods])
+        load = np.zeros(self.P)
+        choice = np.zeros(demand.shape, np.int32)
+        # largest demands first — the classic greedy order
+        order = sorted(np.ndindex(*demand.shape),
+                       key=lambda sf: -demand[sf])
+        for s, f in order:
+            util = (load + demand[s, f]) / np.maximum(caps * speeds, 1e-9)
+            p = int(np.argmin(util))
+            choice[s, f] = p
+            load[p] += demand[s, f]
+        # induce the φ: base nearest-pod routing, frontend rows overridden
+        # by the greedy per-(class, frontend) pod choice
+        phi = core.offload_phi(self.net, self.pod_nodes)
+        data = np.array(phi.data)               # host copy (writable)
+        for s, f in np.ndindex(*demand.shape):
+            row = np.zeros(data.shape[-1])
+            row[1 + self.F + choice[s, f]] = 1.0
+            data[s, 1 + f] = row
+        phi = core.Phi(jnp.asarray(data), phi.result)
+        return {"phi": phi, "assignment": choice,
+                "total_cost": float(core.total_cost(self.net, phi)),
+                "pod_load": load}
 
     # ------------------------------------------------------------------
     def summary(self) -> dict:
-        fl = core.compute_flows(self.net, self.phi)
+        kwargs = ({"method": "sparse", "nbrs": self.nbrs}
+                  if isinstance(self.phi, core.PhiSparse) else {})
+        fl = core.compute_flows(self.net, self.phi, **kwargs)
         pod_load = np.asarray(fl.G)[1 + self.F:]
         pod_cap = np.asarray(self.net.comp_cost.params)[1 + self.F:]
         dispatch = np.asarray(fl.g)[:, 1 + self.F:]   # [class, pod]
         return {
-            "total_cost": float(core.total_cost(self.net, self.phi)),
+            "total_cost": float(core.cost_of_flows(self.net, fl)),
             "pod_utilization": (pod_load / np.maximum(pod_cap, 1e-9)),
             "dispatch": dispatch,
             "residual": core.theorem1_residual(self.net, self.phi),

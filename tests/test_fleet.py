@@ -1,0 +1,132 @@
+"""Batched fleet solver: vmap over the solo fused kernels.
+
+The load-bearing property is BITWISE parity — lane b of a B=8 fleet
+must reproduce the solo `run_chunk(driver="fused")` trajectory exactly
+(same accepted-cost list, same φ bytes), because the batched kernels
+are the solo kernels vmapped with reductions on their original axes.
+Everything else (dispatch counting, the warm-start cache, the
+one-topology contract) hangs off that.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import fleet as fleet_mod
+
+B = 8
+N_ITERS = 10
+
+
+def _fleet_nets(b=B, seed=0):
+    """B abilene variants: shared adjacency, per-lane task structure
+    (perturbed rates, redrawn destinations, perturbed result ratios)."""
+    base = core.make_scenario(core.TABLE_II["abilene"])
+    rng = np.random.RandomState(seed)
+    nets = []
+    for i in range(b):
+        r = np.asarray(base.r) * (0.6 + 0.8 * rng.rand(*base.r.shape))
+        dest = rng.randint(0, base.V, size=np.asarray(base.dest).shape)
+        a = np.asarray(base.a) * (0.5 + rng.rand(*base.a.shape))
+        nets.append(dataclasses.replace(
+            base, r=jnp.asarray(r), dest=jnp.asarray(dest, jnp.int32),
+            a=jnp.asarray(a)))
+    return nets
+
+
+def _solo_reference(net, nbrs, n_iters=N_ITERS):
+    phi0 = core.spt_phi_sparse(net, nbrs)
+    state = core.init_run_state(net, phi0, method="sparse", nbrs=nbrs)
+    state = core.run_chunk(net, state, n_iters, driver="fused")
+    return state
+
+
+def test_fleet_matches_solo_bitwise():
+    """Every lane of a B=8 fleet reproduces its solo fused run exactly:
+    accepted-cost trajectory AND final φ, bit for bit."""
+    nets = _fleet_nets()
+    nbrs = core.build_neighbors(nets[0].adj)
+    phis, hist = core.run_fleet(nets, n_iters=N_ITERS, nbrs=nbrs)
+    assert len(phis) == B
+    for b, net in enumerate(nets):
+        ref = _solo_reference(net, nbrs)
+        assert hist["costs"][b] == ref.costs, f"lane {b} cost trajectory"
+        for f in ("data", "local", "result"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(phis[b], f)),
+                np.asarray(getattr(ref.phi, f)),
+                err_msg=f"lane {b} phi.{f}")
+
+
+def test_fleet_dispatch_count_independent_of_B():
+    """The point of the fleet: 2 dispatches per iteration (propose +
+    accept) for the WHOLE fleet, however many lanes it carries."""
+    nbrs = core.build_neighbors(_fleet_nets(1)[0].adj)
+    for b in (1, 4, B):
+        _, hist = core.run_fleet(_fleet_nets(b), n_iters=N_ITERS,
+                                 nbrs=nbrs)
+        assert hist["n_dispatches"] == 2 * N_ITERS
+
+
+def test_fleet_warm_cache_roundtrip():
+    """A recurring task pattern re-enters at its converged φ: second
+    solve of the same fleet is all cache hits, starts at the first
+    solve's final cost, and never moves above it."""
+    nets = _fleet_nets()
+    cache = core.FleetCache()
+    _, cold = core.run_fleet(nets, n_iters=N_ITERS, cache=cache)
+    assert cold["warm"] == [False] * B
+    assert cache.misses == B and len(cache) == B
+
+    _, warm = core.run_fleet(nets, n_iters=4, cache=cache)
+    assert warm["warm"] == [True] * B
+    assert cache.hits == B
+    for b in range(B):
+        assert warm["costs"][b][0] == cold["costs"][b][-1]
+        assert min(warm["costs"][b]) <= cold["costs"][b][-1] + 1e-12
+
+
+def test_fleet_cache_key_discriminates():
+    """The task-pattern hash separates scenarios that share a topology;
+    a rate change is a different problem, a byte-identical clone is not."""
+    nets = _fleet_nets(2)
+    base = nets[0]
+    clone = dataclasses.replace(base)
+    assert fleet_mod.fleet_cache_key(base) == fleet_mod.fleet_cache_key(clone)
+    assert fleet_mod.fleet_cache_key(base) != fleet_mod.fleet_cache_key(nets[1])
+    bumped = dataclasses.replace(base, r=base.r * 1.0000001)
+    assert fleet_mod.fleet_cache_key(base) != fleet_mod.fleet_cache_key(bumped)
+
+
+def test_stack_fleet_rejects_mixed_topologies():
+    nets = _fleet_nets(2)
+    adj = np.array(np.asarray(nets[1].adj))
+    i, j = np.argwhere(adj).tolist()[0]
+    adj[i, j] = False
+    broken = dataclasses.replace(nets[1], adj=jnp.asarray(adj))
+    with pytest.raises(ValueError, match="different adjacency"):
+        core.stack_fleet([nets[0], broken])
+    mixed = dataclasses.replace(
+        nets[1], link_cost=core.Cost("linear", nets[1].link_cost.params))
+    with pytest.raises(ValueError, match="cost families"):
+        core.stack_fleet([nets[0], mixed])
+
+
+def test_fleet_explicit_phi0_and_scaling_guard():
+    """Caller-supplied φ⁰ (dense, converted at the boundary) wins over
+    the cache; unsupported scaling fails loudly."""
+    nets = _fleet_nets(2)
+    nbrs = core.build_neighbors(nets[0].adj)
+    phi0s = [core.offload_phi(net, list(range(4))) for net in nets]
+    phis, hist = core.run_fleet(nets, n_iters=3, phi0s=phi0s, nbrs=nbrs)
+    assert hist["warm"] == [False, False]
+    for b, net in enumerate(nets):
+        ref = core.init_run_state(net, core.phi_to_sparse(phi0s[b], nbrs),
+                                  method="sparse", nbrs=nbrs)
+        ref = core.run_chunk(net, ref, 3, driver="fused")
+        assert hist["costs"][b] == ref.costs
+    state = core.init_fleet_state(nets, nbrs=nbrs)
+    with pytest.raises(NotImplementedError, match="paper"):
+        core.run_fleet_chunk(state, 2, scaling="paper")

@@ -1,17 +1,283 @@
 """Serving layer: engine (batched decode over a slotted KV cache) and
-the SGP request router (the paper's optimizer as the scheduler)."""
+the SGP request router (the paper's optimizer as the scheduler).
+
+The tier-1 section runs on a tiny duck-typed stub model (pure jnp,
+deterministic next-token rule, a per-slot recurrent mstate leaf) so the
+engine's slot/state/completion machinery is locked without paying for a
+real transformer; the `slow` section keeps the reduced real-model
+sweeps.
+"""
+import types
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import configs
+from repro import configs, core
 from repro.models import build_model, module
-from repro.serving import PodSpec, RequestRouter, ServeConfig, ServingEngine
+from repro.serving import (PodSpec, RateEstimator, RequestRouter,
+                           ServeConfig, ServingEngine)
 from repro.serving.engine import Request
 
 KEY = jax.random.PRNGKey(0)
 
 
+# ---------------------------------------------------------------- stub model
+class TinyLM:
+    """Duck-typed serving stub: next token = (last + acc) % vocab where
+    `acc` is a PER-SLOT recurrent accumulator living in the model-state
+    pytree (axes name it "batch") — the mamba/ssd-style state the
+    engine must slot-slice around prefill.  Prefill REBUILDS the lane
+    from the prompt (acc = Σprompt), decode accumulates the fed token.
+    """
+
+    def __init__(self, vocab: int = 13, slots: int = 3):
+        self.cfg = types.SimpleNamespace(family="stub", vocab=vocab)
+        self.vocab = vocab
+        self.slots = slots
+
+    def init_cache_specs(self, batch, max_len):
+        return {"toks": module.ParamSpec((1, batch, max_len),
+                                         ("layers", "batch", "len"),
+                                         jnp.int32, "zeros")}
+
+    def state_specs(self):
+        return {"acc": module.ParamSpec((self.slots, 1), ("batch", "d"),
+                                        jnp.float32, "zeros")}
+
+    def param_specs(self):
+        return {}
+
+    def prefill(self, params, state, cache, prompt):
+        acc = (jnp.zeros_like(state["acc"])
+               + jnp.sum(prompt).astype(jnp.float32))
+        nxt = (prompt[0, -1] + acc[0, 0].astype(jnp.int32)) % self.vocab
+        return jax.nn.one_hot(nxt, self.vocab)[None], {"acc": acc}, cache
+
+    def decode_step(self, params, state, cache, toks, pos):
+        acc = state["acc"] + toks.astype(jnp.float32)
+        nxt = (toks[:, 0] + acc[:, 0].astype(jnp.int32)) % self.vocab
+        return jax.nn.one_hot(nxt, self.vocab), {"acc": acc}, cache
+
+
+def _tiny_engine(slots=3, max_new=6, eos=99, vocab=13, max_len=32):
+    model = TinyLM(vocab=vocab, slots=slots)
+    mstate = module.init(model.state_specs(), KEY)
+    return ServingEngine(model, {}, ServeConfig(max_slots=slots,
+                                                max_len=max_len,
+                                                eos_id=eos,
+                                                max_new_tokens=max_new),
+                         mstate=mstate)
+
+
+def _req(rid, toks):
+    return Request(rid=rid, prompt=np.asarray(toks, np.int32))
+
+
+# ------------------------------------------------------------ tier-1: engine
+def test_engine_exact_output_lengths():
+    """max_new_tokens budgets DECODE steps: out = prefill token + exactly
+    max_new_tokens decode tokens when neither EOS nor max_len triggers
+    (the off-by-one that completed requests one step early)."""
+    eng = _tiny_engine(slots=2, max_new=5, eos=99)   # eos unreachable
+    reqs = [_req(0, [3, 4]), _req(1, [2, 7, 5])]
+    eng.run(reqs, max_steps=50)
+    assert all(r.done for r in reqs)
+    assert [len(r.out) for r in reqs] == [6, 6]
+
+
+def test_engine_prefill_eos_completes_immediately():
+    """A prefill-emitted EOS ends the request at admission (it used to
+    go unchecked): out is the single EOS token and the slot is free."""
+    eng = _tiny_engine(slots=1, max_new=8, eos=0, vocab=5)
+    r = _req(0, [0])        # Σprompt=0 → prefill token (0+0)%5 = 0 = EOS
+    assert eng.admit(r)
+    assert r.done and r.out == [0]
+    assert eng.active == [None]           # slot never occupied
+    # and a mid-decode EOS still stops early, within the +1 budget
+    r2 = _req(1, [2])       # prefill 4; decode: acc 2+4=6 → (4+6)%5 = 0
+    eng.run([r2], max_steps=20)
+    assert r2.done and r2.out == [4, 0] and len(r2.out) < 8 + 1
+
+
+def test_engine_admit_step_run_basic():
+    """Continuous batching on the stub: more requests than slots drain
+    through freed slots, every output token in-vocab."""
+    eng = _tiny_engine(slots=2, max_new=3, eos=99)
+    reqs = [_req(i, [2 + i, 3]) for i in range(5)]
+    eng.run(reqs, max_steps=100)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 4 for r in reqs)
+    assert all(0 <= t < 13 for r in reqs for t in r.out)
+
+
+def test_admit_does_not_leak_state():
+    """The state-leak bugfix: admitting B mid-flight must not touch A's
+    per-slot recurrent lane, so A's outputs match a solo run exactly."""
+    pa, pb = [3, 4, 5], [9, 11]           # different Σ → distinct lanes
+    solo = _req(0, pa)
+    eng = _tiny_engine(slots=2, max_new=6, eos=99)
+    eng.run([solo], max_steps=50)
+
+    eng2 = _tiny_engine(slots=2, max_new=6, eos=99)
+    a, b = _req(0, pa), _req(1, pb)
+    assert eng2.admit(a)
+    eng2.step()
+    eng2.step()
+    assert eng2.admit(b)                  # mid-flight admission
+    eng2.run([], max_steps=50)            # drain both
+    assert a.done and b.done
+    assert a.out == solo.out
+
+
+def test_global_state_leaves_stay_global():
+    """A state leaf WITHOUT a batch axis (MoE-load-EMA-style accumulator)
+    is engine-global: admission keeps the prefill-updated value whole."""
+
+    class GlobalLM(TinyLM):
+        def state_specs(self):
+            return {"acc": module.ParamSpec((self.slots, 1),
+                                            ("batch", "d"),
+                                            jnp.float32, "zeros"),
+                    "n_prefills": module.ParamSpec((1,), ("d",),
+                                                   jnp.float32, "zeros")}
+
+        def prefill(self, params, state, cache, prompt):
+            logits, st, cache = super().prefill(
+                params, {"acc": state["acc"]}, cache, prompt)
+            st["n_prefills"] = state["n_prefills"] + 1.0
+            return logits, st, cache
+
+        def decode_step(self, params, state, cache, toks, pos):
+            logits, st, cache = super().decode_step(
+                params, {"acc": state["acc"]}, cache, toks, pos)
+            st["n_prefills"] = state["n_prefills"]
+            return logits, st, cache
+
+    model = GlobalLM(slots=2)
+    eng = ServingEngine(model, {}, ServeConfig(max_slots=2, max_len=32,
+                                               eos_id=99,
+                                               max_new_tokens=2),
+                        mstate=module.init(model.state_specs(), KEY))
+    eng.run([_req(i, [2, 3]) for i in range(3)], max_steps=50)
+    assert float(eng.mstate["n_prefills"][0]) == 3.0
+    assert eng.mstate["acc"].shape == (2, 1)   # lanes kept lane-shaped
+
+
+# ------------------------------------------------------------ tier-1: router
+def _small_router():
+    pods = [PodSpec(30.0), PodSpec(20.0, speed=0.8), PodSpec(40.0, 1.2)]
+    demand = np.array([[2.0, 1.0], [1.0, 2.0]])
+    return RequestRouter(pods, n_frontends=2,
+                         classes={"chat": 1.5, "sum": 0.3}, demand=demand)
+
+
+def test_router_plan_matches_run_bitwise():
+    """plan() IS core.run on the sparse engine through the fused driver
+    — same φ trajectory, bit for bit."""
+    router = _small_router()
+    router.plan(n_iters=40)
+    ref = _small_router()
+    phi0 = core.phi_to_sparse(ref._phi_init, ref.nbrs)
+    phi_ref, _ = core.run(ref.net, phi0, n_iters=40, method="sparse",
+                          driver="fused")
+    assert isinstance(router.phi, core.PhiSparse)
+    for f in ("data", "local", "result"):
+        np.testing.assert_array_equal(np.asarray(getattr(router.phi, f)),
+                                      np.asarray(getattr(phi_ref, f)))
+
+
+def test_router_run_opts_rejected_loudly():
+    router = _small_router()
+    with pytest.raises(ValueError, match="bogus"):
+        router.plan(n_iters=5, run_opts={"bogus": 1})
+    with pytest.raises(ValueError, match="driver"):
+        router.plan(n_iters=5, run_opts={"driver": "host"})
+    # supported keys pass through
+    s = router.plan(n_iters=30, run_opts={"tol": 0.0, "kappa": 0.0})
+    assert s["residual"]["loop_free"]
+
+
+def test_router_failover_refeasibilizes_sparse():
+    router = _small_router()
+    s1 = router.plan(n_iters=40)
+    victim = int(np.argmax(s1["dispatch"].sum(axis=0)))
+    s2 = router.on_pod_failure(victim, n_iters=40)
+    assert isinstance(router.phi, core.PhiSparse)   # stayed sparse
+    assert s2["dispatch"][:, victim].sum() < 1e-6
+    assert s2["dispatch"].sum() > 0.99 * s1["dispatch"].sum()
+    assert s2["residual"]["loop_free"]
+
+
+def test_router_decide_serves_from_phi():
+    router = _small_router()
+    s = router.plan(n_iters=40)
+    share = s["dispatch"].sum(axis=0)
+    p = router.decide("chat", 0)
+    assert 0 <= p < router.P and share[p] > 0.0
+    rng = np.random.RandomState(0)
+    picks = {router.decide("sum", 1, rng=rng) for _ in range(64)}
+    assert all(share[q] > 0.0 for q in picks)   # only pods φ routes to
+    g = router.greedy_plan()
+    assert g["total_cost"] >= s["total_cost"] - 1e-9
+
+
+def test_router_drift_triggers_warm_rebaseline():
+    router = _small_router()
+    router.plan(n_iters=40)
+    # below threshold: estimator tracking the plan → no rebaseline
+    t = 0.0
+    demand = np.asarray(router.net.r)[:, 1:3]
+    for _ in range(120):
+        t += 0.5
+        for s_idx, name in enumerate(router.class_names):
+            for f in range(2):
+                router.observe(name, f, demand[s_idx, f] * 0.5, t)
+    assert router.drift() < 0.05
+    assert not router.maybe_rebaseline(threshold=0.25)["rebaselined"]
+    # chat doubles at frontend 0 → drift → ONE warm RateSet rebaseline
+    for _ in range(120):
+        t += 0.5
+        router.observe("chat", 0, demand[0, 0] * 1.5, t)
+        for s_idx, name in enumerate(router.class_names):
+            for f in range(2):
+                router.observe(name, f, demand[s_idx, f] * 0.5, t)
+    out = router.maybe_rebaseline(threshold=0.25, n_iters=25)
+    assert out["rebaselined"] and out["drift"] > 0.25
+    assert router.drift() < 1e-6            # plan re-anchored on estimate
+    s2 = router.summary()
+    assert s2["residual"]["loop_free"]
+    assert np.isfinite(s2["total_cost"])
+    assert isinstance(router._live, core.ReplayEngine)  # warm, not re-plan
+
+
+def test_rate_estimator_window_evicts():
+    est = RateEstimator(1, 1, window=10.0)
+    est.observe(0, 0, 5.0, t=1.0)
+    est.observe(0, 0, 5.0, t=2.0)
+    assert est.rates()[0, 0] == pytest.approx(1.0)
+    assert est.rates(t=11.5)[0, 0] == pytest.approx(0.5)  # first evicted
+    with pytest.raises(ValueError):
+        est.observe(0, 0, 1.0, t=0.5)
+
+
+def test_rateset_event_warm_rebaseline():
+    """core-level: RateSet through ReplayEngine keeps the warm iterate
+    (kind 'routing' → repaired, not re-solved) and lands on the new
+    rates exactly."""
+    net = core.make_scenario(core.TABLE_II["abilene"])
+    eng = core.ReplayEngine(net, invariant_checks=False)
+    eng.iterate(10)
+    r_new = np.asarray(net.r) * 1.7
+    rec = eng.rebaseline_rates(r_new, n_iters=10)
+    assert rec.kind == "routing"
+    np.testing.assert_allclose(np.asarray(eng.net.r), r_new)
+    assert np.isfinite(eng.cost)
+    core.check_invariants(eng.net, eng.phi, eng.nbrs)
+
+
+# ------------------------------------------------------------ slow: real LM
 @pytest.fixture(scope="module")
 def engine():
     cfg = configs.get_reduced("qwen3-0.6b")
@@ -31,7 +297,8 @@ def test_engine_completes_requests(engine):
                     .astype(np.int32)) for i in range(5)]
     eng.run(reqs, max_steps=200)
     assert all(r.done for r in reqs)
-    assert all(1 <= len(r.out) <= 8 for r in reqs)
+    # prefill token + at most 8 decode tokens
+    assert all(1 <= len(r.out) <= 9 for r in reqs)
     assert all(0 <= t < cfg.vocab for r in reqs for t in r.out)
 
 
@@ -48,16 +315,12 @@ def test_engine_continuous_batching(engine):
 
 @pytest.mark.slow
 def test_router_plan_and_residual():
-    pods = [PodSpec(30.0), PodSpec(20.0, speed=0.8), PodSpec(40.0, 1.2)]
-    demand = np.array([[2.0, 1.0], [1.0, 2.0]])
-    router = RequestRouter(pods, n_frontends=2,
-                           classes={"chat": 1.5, "sum": 0.3},
-                           demand=demand)
+    router = _small_router()
     s = router.plan()
     assert s["residual"]["theorem1"] < 0.05
     assert s["residual"]["loop_free"]
     # demand is served: dispatched compute equals offered load
-    assert s["dispatch"].sum() > 0.99 * demand.sum()
+    assert s["dispatch"].sum() > 0.99 * np.asarray(router.net.r).sum()
     # frontends do no compute (their capacity is negligible)
     assert s["pod_utilization"].max() < 1.0
 
