@@ -21,7 +21,10 @@ quality rows where higher is worse, so the same slower-than gate
 applies) and the regret-vs-drift rows (``regret_event_us_*``: churn
 events-per-second wall-clock through the event-loop engine and the
 fused stream; the speedup ratio and the cost-gap payloads are ungated
-context) and the serving + fleet rows (``serving_*``: warm plan
+context) and the task-churn rows (``taskchurn_*``: arrival/departure
+events-per-second through the pooled engine, loop and fused stream —
+the ``taskchurn_speedup_*`` ratio and the admission-count payloads are
+ungated context) and the serving + fleet rows (``serving_*``: warm plan
 wall-clock and us-per-request served from the live φ vs the greedy
 static assignment; ``fleet_*``: per-scenario wall-clock of the B=8
 vmap-batched fleet solve and its solo-loop counterpart — the
@@ -54,7 +57,7 @@ GATED_PREFIXES = ("scale_flows_sparse", "scale_step_sparse",
                   "scale_run_sparse", "scale_fusedrun_V", "scale_rounds_",
                   "scale_bucketed_", "scale_wasted_lanes_",
                   "replay_", "robustness_", "regret_",
-                  "serving_", "fleet_")
+                  "serving_", "fleet_", "taskchurn_")
 # ...except the cold-restart iteration counts: cold shares its
 # iterations-to-target TARGET with the warm run (min of the two finals),
 # so a warm-start IMPROVEMENT inflates the cold count — it is context
@@ -64,13 +67,14 @@ GATED_PREFIXES = ("scale_flows_sparse", "scale_step_sparse",
 # is an improvement, and a speedup would read as a "regression" — the
 # per-event/flows/step TIMING rows carry the actual promise
 UNGATED_PREFIXES = ("replay_cold_iters_", "scale_bucketed_speedup_",
-                    "regret_speedup_", "fleet_speedup_")
+                    "regret_speedup_", "fleet_speedup_",
+                    "taskchurn_speedup_")
 
 # gated row families: a fresh report missing an ENTIRE family the
 # committed baseline has means that sweep never ran — overwriting the
 # baseline would silently un-gate the family forever (see report())
 FAMILIES = ("scale_", "replay_", "robustness_", "regret_",
-            "serving_", "fleet_")
+            "serving_", "fleet_", "taskchurn_")
 
 
 def rows_to_dict(rows) -> dict:

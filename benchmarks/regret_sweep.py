@@ -37,6 +37,17 @@ Rows (per scenario `<name>`):
   regret_seg_<name>              derived-only (us=0): per-event final
                                  relative gap curve
                                  `Event:(c_final − T*)/T*`
+  regret_fault_cum_<name>        derived-only (us=0): the SAME canned
+                                 churn replay with the fault layer
+                                 armed (`core.FaultPlan`: participation
+                                 p, staleness k, broadcast dropout) —
+                                 cumulative regret against the SAME
+                                 fault-free per-instant optima, fault
+                                 knobs carried as p=/k=/dropout= columns
+  regret_fault_event_us_<name>   us per churn event through the fused
+                                 stream with the fault layer armed,
+                                 same mobility burst (gated — the
+                                 fault-composed churn absorption cost)
 
 The `regret_event_us_*` rows are gated by benchmarks/check_regression.py
 like every other `regret_`/`replay_` timing row; the derived-only rows
@@ -47,12 +58,20 @@ convergence once per churn event).
 """
 import time
 
+import jax
+
 from repro import core
 
 from .common import emit
 
 NAMES = ("sw_queue", "sw_1000")          # --full adds grid_1024
 N_BURST = 16                             # mobility-burst events
+# the fault composition the regret_fault_* rows arm: half the nodes
+# update per iteration, marginals up to 3 iterations stale, 10% of
+# broadcasts lost — the robustness_sweep's mid-severity point
+FAULT_PLAN = core.FaultPlan(participation_p=0.5, staleness_k=3,
+                            dropout_p=0.1)
+FAULT_SEED = 7
 # cold-solve budget for the per-instant optimum: chunks until the tol
 # early-exit fires (off the hot path, so generous)
 COLD_CHUNK = 40
@@ -87,9 +106,21 @@ def cold_optimum(net: core.CECNetwork) -> float:
     return min(state.costs)
 
 
+def _cum_regret(hist: dict, opts: list) -> float:
+    """Cumulative regret of a replay's accepted-cost series against the
+    per-segment optima."""
+    cum = 0.0
+    for rec, opt in zip(hist["records"], opts):
+        series = [rec.cost_after] + list(rec.segment_costs)
+        cum += sum(c - opt for c in series)
+    return cum
+
+
 def _regret_rows(name: str, net: core.CECNetwork) -> None:
     """Replay the canned churn schedule, then score each post-event
-    segment against its cold per-instant optimum."""
+    segment against its cold per-instant optimum — once fault-free,
+    once with the fault layer armed (regret_fault_* rows: the SAME
+    optima, so the fault columns isolate what the faults cost)."""
     sched = core.churn_schedule(f"{name}_churn", net)
     eng = core.ReplayEngine(net, invariant_checks=False)
     hist = eng.play(sched, tail_iters=5)
@@ -100,18 +131,28 @@ def _regret_rows(name: str, net: core.CECNetwork) -> None:
     for (_t, event) in sched.events:
         churn.apply(event)
         nets.append(churn.network())
+    opts = [cold_optimum(net_k) for net_k in nets]
 
-    cum = 0.0
+    cum = _cum_regret(hist, opts)
     curve = []
-    for rec, net_k in zip(hist["records"], nets):
-        opt = cold_optimum(net_k)
+    for rec, opt in zip(hist["records"], opts):
         series = [rec.cost_after] + list(rec.segment_costs)
-        cum += sum(c - opt for c in series)
         gap = (series[-1] - opt) / opt if opt > 0 else 0.0
         curve.append(f"{type(rec.event).__name__}:{gap:+.4f}")
     emit(f"regret_cum_{name}", 0.0,
          f"cum={cum:.3f};n_events={len(nets)}")
     emit(f"regret_seg_{name}", 0.0, "|".join(curve))
+
+    # fault-composed pass: same schedule, same optima, faults armed
+    eng_f = core.ReplayEngine(net, invariant_checks=False,
+                              fault_plan=FAULT_PLAN,
+                              fault_rng=jax.random.PRNGKey(FAULT_SEED))
+    hist_f = eng_f.play(sched, tail_iters=5)
+    cum_f = _cum_regret(hist_f, opts)
+    emit(f"regret_fault_cum_{name}", 0.0,
+         f"cum={cum_f:.3f};n_events={len(nets)}",
+         p=FAULT_PLAN.participation_p, k=FAULT_PLAN.staleness_k,
+         dropout=FAULT_PLAN.dropout_p)
 
 
 def _throughput_rows(name: str, net: core.CECNetwork) -> None:
@@ -138,6 +179,24 @@ def _throughput_rows(name: str, net: core.CECNetwork) -> None:
     emit(f"regret_speedup_{name}", walls[False] / walls[True],
          f"loop_ev_per_s={n_ev / walls[False] * 1e6:.2f};"
          f"fused_ev_per_s={n_ev / walls[True] * 1e6:.2f}")
+
+    # fault-composed absorption: the same burst through the fused
+    # stream with the fault layer armed (per-segment fault-rng splits
+    # ride the rebaseline, so this times the full composed path)
+    def _faulted():
+        return core.ReplayEngine(
+            net, invariant_checks=False, fault_plan=FAULT_PLAN,
+            fault_rng=jax.random.PRNGKey(FAULT_SEED),
+        ).play(sched, tail_iters=1, stream=True)
+
+    _faulted()                                        # warm-up
+    t0 = time.perf_counter()
+    hist_f = _faulted()
+    wall_f = (time.perf_counter() - t0) * 1e6
+    emit(f"regret_fault_event_us_{name}", wall_f / n_ev,
+         f"V={net.V};n_events={n_ev};final={hist_f['final_cost']:.4f}",
+         p=FAULT_PLAN.participation_p, k=FAULT_PLAN.staleness_k,
+         dropout=FAULT_PLAN.dropout_p)
 
 
 def _bench_regret(name: str) -> None:

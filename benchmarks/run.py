@@ -25,7 +25,7 @@ def main(argv=None) -> int:
                          "(dense at V=1000 takes hours on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL)
-                         + ",replay,robustness,regret,serving")
+                         + ",replay,robustness,regret,serving,taskchurn")
     ap.add_argument("--replay", action="store_true",
                     help="also run the streaming churn replay sweep "
                          "(benchmarks.replay_sweep) and emit its "
@@ -56,6 +56,14 @@ def main(argv=None) -> int:
                          "vmap-batched fleet solve vs B solo runs, "
                          "part of the committed BENCH_report.json "
                          "baseline")
+    ap.add_argument("--taskchurn", action="store_true",
+                    help="also run the task-churn sweep "
+                         "(benchmarks.taskchurn_sweep) and emit its "
+                         "taskchurn_* rows — arrival/departure "
+                         "events/sec through the dynamic task-slot "
+                         "pool (loop vs fused stream) and the "
+                         "admission ledger, part of the committed "
+                         "BENCH_report.json baseline")
     ap.add_argument("--sizes", default=None,
                     help="comma-separated V list for the scale sweep "
                          "(e.g. 20,100 — the quick CI subset); default "
@@ -84,6 +92,8 @@ def main(argv=None) -> int:
         names.append("regret")
     if args.serving and "serving" not in names:
         names.append("serving")
+    if args.taskchurn and "taskchurn" not in names:
+        names.append("taskchurn")
 
     committed_rows = None
     if args.check_against:
@@ -136,6 +146,9 @@ def main(argv=None) -> int:
             elif name == "serving":
                 from . import serving_sweep
                 serving_sweep.run(full=args.full)
+            elif name == "taskchurn":
+                from . import taskchurn_sweep
+                taskchurn_sweep.run(full=args.full)
             elif name == "roofline":
                 from . import roofline
                 roofline.run(args.report)

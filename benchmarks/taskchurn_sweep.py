@@ -1,0 +1,90 @@
+"""Task-churn sweep — arrival/departure absorption through the
+dynamic task-slot pool (`core.TaskPool`).
+
+The replay/regret sweeps time SAME-SHAPE churn (rate scaling, source or
+destination re-draws: S never changes).  This sweep times the churn
+those rows can't express: tasks ARRIVING and DEPARTING.  The pool pads
+S to a power-of-two rung (S_cap) and threads an active-slot mask
+through the engine, so an arrival at constant S_cap is a value-only
+update — slot seeded from the memoized SPT rows, zero new jit
+compilations (locked by tests/test_taskpool.py) — instead of a
+recompile of every S-shaped executable.
+
+Rows (per scenario `<name>`, canned `<name>_taskchurn` schedule:
+arrivals, a departure, a slot recycle, interleaved with rate/routing
+churn — see core.scenarios):
+
+  taskchurn_event_us_loop_<name>   us per event, pooled event-loop
+                                   engine (gated)
+  taskchurn_event_us_fused_<name>  us per event through the fused
+                                   stream, same schedule (gated)
+  taskchurn_speedup_<name>         loop/fused ratio (ungated: higher is
+                                   better — the two *_us rows above are
+                                   the gate)
+  taskchurn_admissions_<name>      derived-only (us=0): the admission
+                                   ledger — admits/rejects/queued/grown
+                                   counts, final n_active, S_cap
+
+Both trajectories are bitwise identical (tests/test_taskpool.py), so
+the timing rows time the same computation.  Emitted by
+``benchmarks.run --taskchurn`` (opt-in like --regret).
+"""
+import time
+
+from repro import core
+
+from .common import emit
+
+NAMES = ("sw_queue", "sw_1000")          # --full adds ba_1000
+FREE_SLOTS = 4                           # pool headroom per scenario
+
+
+def _bench_taskchurn(name: str) -> None:
+    net, pool = core.taskchurn_scenario(name, free=FREE_SLOTS,
+                                        policy="queue")
+    sched = core.churn_schedule(f"{name}_taskchurn", net)
+    n_ev = len(sched.events)
+    walls = {}
+    for stream in (False, True):
+        core.ReplayEngine(net, pool=pool.clone(),
+                          invariant_checks=False).play(
+            sched, tail_iters=1, stream=stream)       # warm-up
+        eng = core.ReplayEngine(net, pool=pool.clone(),
+                                invariant_checks=False)
+        t0 = time.perf_counter()
+        hist = eng.play(sched, tail_iters=1, stream=stream)
+        walls[stream] = (time.perf_counter() - t0) * 1e6
+    final = hist["final_cost"]
+    emit(f"taskchurn_event_us_loop_{name}", walls[False] / n_ev,
+         f"V={net.V};S_cap={net.S};n_events={n_ev};final={final:.4f}")
+    emit(f"taskchurn_event_us_fused_{name}", walls[True] / n_ev,
+         f"V={net.V};S_cap={net.S};n_events={n_ev};final={final:.4f}")
+    emit(f"taskchurn_speedup_{name}", walls[False] / walls[True],
+         f"loop_ev_per_s={n_ev / walls[False] * 1e6:.2f};"
+         f"fused_ev_per_s={n_ev / walls[True] * 1e6:.2f}")
+    adm = hist["admission_events"]
+    counts = {a: sum(1 for e in adm if e.action == a)
+              for a in ("admit", "reject", "queue", "dequeue", "grow")}
+    emit(f"taskchurn_admissions_{name}", 0.0,
+         ";".join(f"{k}={v}" for k, v in counts.items())
+         + f";n_active={eng.pool.n_active};S_cap={int(eng.net.S)}")
+
+
+def run(full: bool = False, names=None):
+    if names is None:
+        names = NAMES + ("ba_1000",) if full else NAMES
+    for name in names:
+        _bench_taskchurn(name)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also sweep the ba_1000 task-churn schedule")
+    ap.add_argument("--names", default=None,
+                    help="comma-separated TABLE_II scenario names")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(full=a.full,
+        names=tuple(a.names.split(",")) if a.names else None)

@@ -1,0 +1,64 @@
+"""Task churn: arrivals and departures through the dynamic task-slot
+pool, without recompiles.
+
+The replay_churn example keeps the task SET fixed (rate/topology churn
+only); this one changes it.  A `core.TaskPool` pads S to a
+power-of-two capacity rung and recycles free slots like a serving
+engine's batch slots, so
+
+  * a `TaskArrive` claims the lowest free slot, seeds its φ row from
+    the memoized SPT, and continues WARM — at constant S_cap it is a
+    value-only update: zero new jit compilations,
+  * a `TaskDepart` clears the slot back to inert (zero rate, zero
+    cost, φ row frozen) and makes it available for recycling,
+  * pool exhaustion is a POLICY (here: "queue" — the overflow arrival
+    waits and dequeues into the next freed slot), every decision
+    logged as a structured `AdmissionEvent`.
+
+    PYTHONPATH=src python examples/task_churn.py
+"""
+import numpy as np
+
+from repro import core
+
+# the scenario helper keeps S_cap at the scenario's own S (120) and
+# frees the last `free` slots, so the pool starts with real headroom
+net, pool = core.taskchurn_scenario("sw_queue", free=2, policy="queue")
+print(f"== task churn on sw_queue (V={net.V}, S_cap={int(net.S)}, "
+      f"active={pool.n_active}, policy={pool.policy}) ==")
+
+
+def arrival(seed: int) -> core.TaskArrive:
+    rng = np.random.RandomState(seed)
+    r = np.zeros(int(net.V))
+    r[rng.choice(int(net.V), 2, replace=False)] = rng.uniform(0.3, 0.8, 2)
+    return core.TaskArrive(r=r, dest=int(rng.randint(int(net.V))),
+                           a=float(rng.uniform(0.3, 0.9)))
+
+
+schedule = core.ChurnSchedule((
+    (3,  arrival(0)),            # claims free slot 118
+    (6,  arrival(1)),            # claims free slot 119 — pool now full
+    (9,  arrival(2)),            # exhausted -> queued (policy)
+    (12, core.TaskDepart(5)),    # frees slot 5 -> the queued task lands
+    (15, core.RateScale(1.2)),   # ordinary churn composes freely
+), name="sw_queue_arrivals")
+
+engine = core.ReplayEngine(net, pool=pool)
+hist = engine.play(schedule, tail_iters=10, stream=True)
+
+print(f"\n{'event':<14}{'t':>4}{'before':>10}{'after':>10}{'settled':>10}")
+for rec in hist["records"]:
+    settled = (rec.segment_costs or [rec.cost_after])[-1]
+    print(f"{type(rec.event).__name__:<14}{rec.it:>4}"
+          f"{rec.cost_before:>10.3f}{rec.cost_after:>10.3f}"
+          f"{settled:>10.3f}")
+
+print(f"\n{len(hist['admission_events'])} admission event(s):")
+for ev in hist["admission_events"]:
+    print(f"  it={ev.it:<4} {ev.action:<8} slot={ev.slot:<4} "
+          f"n_active={ev.n_active}/{ev.S_cap}")
+
+print(f"\nfinal: cost={hist['final_cost']:.3f}, "
+      f"active={engine.pool.n_active}/{engine.pool.S_cap}, "
+      f"queue depth={len(engine.pool.queue)}")

@@ -17,12 +17,15 @@ from .costs import Cost, CostFamily, FAMILIES, LINEAR, QUEUE, SAT
 from .network import (CECNetwork, EdgeBuckets, Flows, FlowsCarry,
                       NeighborBuckets, Neighbors, Phi,
                       PhiSparse, as_dense_phi, build_buckets,
-                      build_neighbors,
+                      build_neighbors, clear_task_slot,
                       compute_flows, cost_of_flows, flows_carry_and_cost,
-                      gather_edges, is_loop_free, mask_slots, offload_phi,
+                      gather_edges, is_loop_free, mask_inactive_slots,
+                      mask_slots, next_pow2, offload_phi, pad_phi_sparse,
+                      pad_tasks,
                       phi_to_sparse, refeasibilize, refeasibilize_sparse,
                       refeasibilize_sparse_samegraph,
-                      sanitize_phi_sparse, scatter_edges, sparse_to_phi,
+                      sanitize_phi_sparse, scatter_edges, seed_task_slot,
+                      sparse_to_phi,
                       spt_phi, spt_phi_sparse, total_cost, uniform_phi)
 from .marginals import Marginals, compute_marginals, phi_gradients
 from .faults import (FaultPlan, FaultState, fault_state_specs,
@@ -39,14 +42,15 @@ from .optimality import (flow_domain_optimum, marginals_vs_autodiff,
                          theorem1_residual)
 from .scenarios import (TABLE_II, ScenarioSpec, churn_hub, churn_schedule,
                         enforce_feasibility, fail_node, hub_node,
-                        make_scenario)
+                        make_scenario, taskchurn_scenario)
 from .distributed import (DistributedRunState, NodePartition,
                           build_node_partition, init_distributed_state,
                           node_flows_carry_and_cost, run_distributed,
                           run_distributed_chunk, task_mesh, task_node_mesh)
-from .events import (ChurnSchedule, ChurnState, DestRedraw, LinkCut,
-                     LinkRestore, NodeFail, NodeRecover, RateScale,
-                     RateSet, SourceRedraw, event_kind, random_schedule)
+from .events import (AdmissionEvent, ChurnSchedule, ChurnState, DestRedraw,
+                     LinkCut, LinkRestore, NodeFail, NodeRecover, RateScale,
+                     RateSet, SourceRedraw, TaskArrive, TaskDepart,
+                     TaskPool, event_kind, random_schedule)
 from .replay import (EventRecord, ReplayEngine, check_feasible,
                      check_invariants, iters_or_budget, iters_to_target)
 from . import moe_bridge, topologies
@@ -84,6 +88,9 @@ __all__ = [
     "ChurnSchedule", "ChurnState", "DestRedraw", "LinkCut", "LinkRestore",
     "NodeFail", "NodeRecover", "RateScale", "RateSet", "SourceRedraw",
     "event_kind", "random_schedule",
+    "AdmissionEvent", "TaskArrive", "TaskDepart", "TaskPool",
+    "clear_task_slot", "mask_inactive_slots", "next_pow2",
+    "pad_phi_sparse", "pad_tasks", "seed_task_slot", "taskchurn_scenario",
     "EventRecord", "ReplayEngine", "check_feasible", "check_invariants",
     "iters_or_budget", "iters_to_target",
 ]

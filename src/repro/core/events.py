@@ -41,7 +41,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .network import CECNetwork
+from .network import CECNetwork, next_pow2
 
 
 # ------------------------------------------------------------------ events
@@ -122,15 +122,213 @@ class LinkRestore:
     both: bool = True
 
 
+@dataclasses.dataclass(frozen=True)
+class TaskArrive:
+    """A new task enters the live system and claims a recycled slot from
+    the `TaskPool` (streamable: the adjacency is unchanged, so the slot
+    is seeded from the SPT and folded into the fused dispatch stream
+    like any other same-graph segment).  When the pool is exhausted the
+    admission policy decides: reject, queue until a departure frees a
+    slot, or grow the capacity ladder to the next rung.
+
+    r: [V] array-like exogenous rates; dest: destination node; a:
+    result-to-data ratio; w: compute weight (scalar or [V]); task_type:
+    compute-cost family index.
+    """
+    r: object
+    dest: int
+    a: float = 1.0
+    w: object = 1.0
+    task_type: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskDepart:
+    """Task slot `task` leaves the live system: its rates stop, its φ
+    rows return to the inert-slot convention, and the slot goes back to
+    the pool's free list (under the "queue" policy a deferred arrival is
+    admitted into the freed slot immediately)."""
+    task: int
+
+
 _KIND = {RateScale: "rate", RateSet: "routing",
          SourceRedraw: "routing", DestRedraw: "routing",
          NodeFail: "topology", NodeRecover: "topology",
-         LinkCut: "topology", LinkRestore: "topology"}
+         LinkCut: "topology", LinkRestore: "topology",
+         TaskArrive: "task", TaskDepart: "task"}
 
 
 def event_kind(event) -> str:
-    """"rate" | "topology" | "routing" (see module docstring)."""
+    """"rate" | "topology" | "routing" | "task" (see module docstring).
+
+    "task" events need a `ChurnState(pool=...)`; `ChurnState.apply`
+    upgrades an arrival that grew the capacity ladder to kind "grow"
+    (S changed — an unavoidable, logged recompile) at apply time.
+    """
     return _KIND[type(event)]
+
+
+# ------------------------------------------------------ task pool/admission
+@dataclasses.dataclass(frozen=True)
+class AdmissionEvent:
+    """One structured admission decision, mirroring `guards.GuardEvent`:
+    what the pool did when a task arrived or departed, under which
+    policy, and the pool occupancy after the action.  `it` is stamped by
+    the replay engine when it drains the pool's log (the engine's global
+    iteration count at drain time; -1 while still in the pool)."""
+    action: str                     # admit | reject | queue | grow | dequeue
+    slot: int                       # claimed slot (-1 for reject/queue)
+    policy: str
+    n_active: int                   # pool occupancy AFTER the action
+    S_cap: int
+    it: int = -1
+
+
+class TaskPool:
+    """Dynamic task-slot pool: a free-slot recycler over a padded task
+    axis, so arrivals and departures never change the compiled shapes.
+
+    The network's task axis is padded to `S_cap` (the capacity ladder —
+    a power of two by default, so repeated growth settles into a
+    geometric rung sequence) and a boolean [S_cap] `active` mask says
+    which slots hold live tasks.  Inactive slots follow the inert-slot
+    convention (r row 0, a 0, w 1, φ all-local with empty result rows):
+    their traffic, flows and cost contributions are exactly zero, and
+    the masked SGP step freezes their φ rows bitwise, so the engine
+    carries them for free.
+
+    Admission (`policy`): "reject" drops an arrival when no slot is
+    free, "queue" defers it until a departure frees one, "grow" moves to
+    the next rung `next_pow2(S_cap + 1)` — the one case that changes
+    shapes and therefore recompiles (logged, never silent).  Every
+    decision is appended to `self.log` as an `AdmissionEvent`.
+
+    Compilation contract (`ever_padded`): a pool constructed fully
+    active with `S_cap == n_tasks` hands the engine `active=None` — a
+    literal pass-through that makes the pooled engine BITWISE the
+    fixed-S engine (an all-True mask would trace a different program and
+    only be ulp-equal).  The moment any slot is or ever was inactive
+    (construction headroom, a release, a grow) the engine gets the
+    dynamic mask forever — even if momentarily all-True — so admitting a
+    task changes array VALUES only and triggers zero new compilations.
+    The one documented recompile is the first departure from a
+    constructed-full pool (None -> mask switch).
+
+    `active` is rebound copy-on-write, never mutated in place: the
+    engine uploads it with `jnp.asarray`, which may zero-copy-alias the
+    numpy buffer, and the fused churn stream defers device reads past
+    the next apply (same discipline as `ChurnState.apply`).
+    """
+
+    POLICIES = ("reject", "queue", "grow")
+
+    def __init__(self, n_tasks: int, S_cap: Optional[int] = None,
+                 policy: str = "reject"):
+        if policy not in self.POLICIES:
+            raise ValueError(f"policy={policy!r} not in {self.POLICIES}")
+        n_tasks = int(n_tasks)
+        S_cap = next_pow2(n_tasks) if S_cap is None else int(S_cap)
+        if S_cap < n_tasks:
+            raise ValueError(f"S_cap={S_cap} < n_tasks={n_tasks}")
+        self.policy = policy
+        self.S_cap = S_cap
+        active = np.zeros(S_cap, dtype=bool)
+        active[:n_tasks] = True
+        self.active = active
+        self.queue: list = []           # deferred TaskArrive events (FIFO)
+        self.log: list = []             # AdmissionEvents not yet drained
+        self.ever_padded = n_tasks < S_cap
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    def free_slot(self) -> Optional[int]:
+        """Lowest inactive slot index, or None when the pool is full."""
+        idx = np.nonzero(~self.active)[0]
+        return int(idx[0]) if idx.size else None
+
+    def would_grow(self, event) -> bool:
+        """True iff admitting `event` NOW would grow the ladder (used by
+        the streaming replay to break the window before a recompile)."""
+        return (isinstance(event, TaskArrive) and self.policy == "grow"
+                and self.free_slot() is None)
+
+    def clone(self) -> "TaskPool":
+        """Independent copy — cheap enough for generator/stream probes."""
+        c = TaskPool.__new__(TaskPool)
+        c.policy = self.policy
+        c.S_cap = self.S_cap
+        c.active = self.active.copy()
+        c.queue = list(self.queue)
+        c.log = list(self.log)
+        c.ever_padded = self.ever_padded
+        return c
+
+    def admit(self, event: TaskArrive) -> Tuple[str, int]:
+        """Admit (or defer/reject) one arrival; returns (action, slot)
+        with slot=-1 when no slot was claimed."""
+        slot = self.free_slot()
+        if slot is not None:
+            active = self.active.copy()
+            active[slot] = True
+            self.active = active
+            self._log("admit", slot)
+            return "admit", slot
+        if self.policy == "reject":
+            self._log("reject", -1)
+            return "reject", -1
+        if self.policy == "queue":
+            self.queue.append(event)
+            self._log("queue", -1)
+            return "queue", -1
+        # grow: next rung of the capacity ladder (handles a pinned
+        # non-power-of-two S_cap too) — the one shape-changing path
+        new_cap = next_pow2(self.S_cap + 1)
+        active = np.zeros(new_cap, dtype=bool)
+        active[:self.S_cap] = self.active
+        slot = self.S_cap
+        active[slot] = True
+        self.S_cap = new_cap
+        self.active = active
+        self.ever_padded = True
+        self._log("grow", slot)
+        return "grow", slot
+
+    def release(self, slot: int) -> Tuple[str, int, Optional[TaskArrive]]:
+        """Return `slot` to the free list; under the "queue" policy the
+        oldest deferred arrival is dequeued straight into it.  Returns
+        (action, slot, dequeued_event_or_None)."""
+        slot = int(slot)
+        if not (0 <= slot < self.S_cap) or not self.active[slot]:
+            raise ValueError(f"TaskDepart of inactive slot {slot}")
+        active = self.active.copy()
+        active[slot] = False
+        self.active = active
+        self.ever_padded = True
+        if self.policy == "queue" and self.queue:
+            event = self.queue.pop(0)
+            active = self.active.copy()
+            active[slot] = True
+            self.active = active
+            self._log("dequeue", slot)
+            return "dequeue", slot, event
+        return "release", slot, None
+
+    def active_for_engine(self) -> Optional[np.ndarray]:
+        """The mask the SGP drivers should thread (None = fixed-S
+        bitwise pass-through; see the compilation contract above)."""
+        return self.active if self.ever_padded else None
+
+    def drain_log(self) -> list:
+        """Hand the un-drained AdmissionEvents to the caller (engine)."""
+        out, self.log = self.log, []
+        return out
+
+    def _log(self, action: str, slot: int) -> None:
+        self.log.append(AdmissionEvent(
+            action=action, slot=slot, policy=self.policy,
+            n_active=self.n_active, S_cap=self.S_cap))
 
 
 # ---------------------------------------------------------------- schedule
@@ -173,12 +371,28 @@ class ChurnState:
     knows whether the iterate needs repair.
     """
 
-    def __init__(self, base: CECNetwork):
+    def __init__(self, base: CECNetwork, pool: Optional[TaskPool] = None):
         self.base = base
         self.failed: set = set()
         self.cut: set = set()                       # directed (u, v) pairs
         self.r = np.asarray(base.r).copy()          # logical rates
         self.dest = np.asarray(base.dest).copy()
+        # task-churn support: with a pool, the whole task pattern
+        # (a/w/task_type too) is churn state, since arrivals write it
+        self.pool = pool
+        if pool is not None:
+            if int(base.dest.shape[0]) != pool.S_cap:
+                raise ValueError(
+                    f"network has S={int(base.dest.shape[0])} task slots "
+                    f"but the pool's S_cap={pool.S_cap}; pad the network "
+                    "with network.pad_tasks first")
+            self.a = np.asarray(base.a).copy()
+            self.w = np.asarray(base.w).copy()
+            self.task_type = np.asarray(base.task_type).copy()
+        else:
+            self.a = self.w = self.task_type = None
+        # φ-repair ops of the LAST task event: (("seed"|"clear", slot), ...)
+        self.last_task_repairs: Tuple[Tuple[str, int], ...] = ()
 
     def clone(self) -> "ChurnState":
         """Independent copy sharing the (immutable) base network —
@@ -189,6 +403,12 @@ class ChurnState:
         c.cut = set(self.cut)
         c.r = self.r.copy()
         c.dest = self.dest.copy()
+        c.pool = self.pool.clone() if self.pool is not None else None
+        c.a = self.a.copy() if self.a is not None else None
+        c.w = self.w.copy() if self.w is not None else None
+        c.task_type = (self.task_type.copy()
+                       if self.task_type is not None else None)
+        c.last_task_repairs = self.last_task_repairs
         return c
 
     # -------------------------------------------------------------- events
@@ -201,7 +421,39 @@ class ChurnState:
         stream (replay._flush_stream) defers every device read past the
         NEXT apply — an in-place write here would race with the queued
         computations still reading the previous network's buffer.
+        (`pool.active` and the a/w/task_type copies follow the same
+        discipline.)
+
+        Task events additionally record the iterate repairs the replay
+        engine must run in `self.last_task_repairs`, and an arrival
+        that grew the capacity ladder returns kind "grow" instead of
+        "task" — S changed, so the engine rebuilds (one documented
+        recompile) instead of streaming.
         """
+        self.last_task_repairs = ()
+        if isinstance(event, TaskArrive):
+            if self.pool is None:
+                raise ValueError("TaskArrive/TaskDepart need a "
+                                 "ChurnState(pool=TaskPool(...))")
+            action, slot = self.pool.admit(event)
+            if action == "grow":
+                self._grow_to(self.pool.S_cap)
+            if slot >= 0:
+                self._write_task(slot, event)
+                self.last_task_repairs = (("seed", slot),)
+            return "grow" if action == "grow" else "task"
+        if isinstance(event, TaskDepart):
+            if self.pool is None:
+                raise ValueError("TaskArrive/TaskDepart need a "
+                                 "ChurnState(pool=TaskPool(...))")
+            action, slot, dequeued = self.pool.release(int(event.task))
+            self._clear_task(slot)
+            if dequeued is not None:
+                self._write_task(slot, dequeued)
+                self.last_task_repairs = (("seed", slot),)
+            else:
+                self.last_task_repairs = (("clear", slot),)
+            return "task"
         if isinstance(event, RateScale):
             if event.task is None:
                 self.r = self.r * event.factor
@@ -270,6 +522,64 @@ class ChurnState:
             raise TypeError(f"unknown churn event {event!r}")
         return event_kind(event)
 
+    # ---------------------------------------------------------- task slots
+    def _write_task(self, slot: int, ev: TaskArrive) -> None:
+        """Write an admitted arrival's task pattern into `slot`
+        (copy-on-write, like every other churn fact)."""
+        V = self.r.shape[1]
+        row = np.zeros(V, dtype=self.r.dtype)
+        row[:] = np.asarray(ev.r, dtype=self.r.dtype)
+        r = self.r.copy()
+        r[slot] = row
+        self.r = r
+        dest = self.dest.copy()
+        dest[slot] = int(ev.dest)
+        self.dest = dest
+        a = self.a.copy()
+        a[slot] = float(ev.a)
+        self.a = a
+        w = self.w.copy()
+        w[slot] = np.asarray(ev.w, dtype=self.w.dtype)   # scalar broadcasts
+        self.w = w
+        tt = self.task_type.copy()
+        tt[slot] = int(ev.task_type)
+        self.task_type = tt
+
+    def _clear_task(self, slot: int) -> None:
+        """Return `slot` to the inert-slot convention: zero rate, zero
+        result ratio, unit weight.  dest/task_type are left stale on
+        purpose — they are inert with r=a=0, and keeping the dest vector
+        stable keeps the replay engine's SPT memo key stable."""
+        r = self.r.copy()
+        r[slot] = 0.0
+        self.r = r
+        a = self.a.copy()
+        a[slot] = 0.0
+        self.a = a
+        w = self.w.copy()
+        w[slot] = 1.0
+        self.w = w
+
+    def _grow_to(self, S_cap: int) -> None:
+        """Pad every task-axis churn fact to `S_cap` rows (the pool just
+        grew the capacity ladder).  New rows are inert slots."""
+        S, V = self.r.shape
+        r = np.zeros((S_cap, V), dtype=self.r.dtype)
+        r[:S] = self.r
+        self.r = r
+        dest = np.zeros(S_cap, dtype=self.dest.dtype)
+        dest[:S] = self.dest
+        self.dest = dest
+        a = np.zeros(S_cap, dtype=self.a.dtype)
+        a[:S] = self.a
+        self.a = a
+        w = np.ones((S_cap,) + self.w.shape[1:], dtype=self.w.dtype)
+        w[:S] = self.w
+        self.w = w
+        tt = np.zeros(S_cap, dtype=self.task_type.dtype)
+        tt[:S] = self.task_type
+        self.task_type = tt
+
     # ------------------------------------------------------------- network
     def network(self) -> CECNetwork:
         """Assemble the CURRENT network (numpy, outside jit).
@@ -282,10 +592,16 @@ class ChurnState:
         pristine base every time, so recovery is exact.
         """
         from .scenarios import fail_node
-        net = dataclasses.replace(
-            self.base,
-            r=jnp.asarray(self.r),
-            dest=jnp.asarray(self.dest, dtype=jnp.int32))
+        repl = dict(r=jnp.asarray(self.r),
+                    dest=jnp.asarray(self.dest, dtype=jnp.int32))
+        if self.pool is not None:
+            # the whole task pattern is churn state under a pool (and
+            # may have GROWN past the base's task axis — replace handles
+            # the wider arrays; adjacency/costs are untouched)
+            repl.update(a=jnp.asarray(self.a), w=jnp.asarray(self.w),
+                        task_type=jnp.asarray(self.task_type,
+                                              dtype=jnp.int32))
+        net = dataclasses.replace(self.base, **repl)
         for node in sorted(self.failed):
             net = fail_node(net, node)
         if self.cut:
@@ -329,7 +645,7 @@ def _all_delivered(state: "ChurnState") -> bool:
 def random_schedule(net: CECNetwork, n_events: int, seed: int = 0,
                     start: int = 1, gap: Tuple[int, int] = (1, 3),
                     max_failed: int = 2, max_cut: int = 2,
-                    name: str = "") -> ChurnSchedule:
+                    name: str = "", pool: Optional[TaskPool] = None) -> ChurnSchedule:
     """A seeded, self-consistent random churn schedule.
 
     Recoveries/restores only target currently-failed nodes / cut links,
@@ -347,12 +663,20 @@ def random_schedule(net: CECNetwork, n_events: int, seed: int = 0,
     delivery degrade to a `RateScale`.  Event times advance by uniform
     gaps from `gap` — the property-test layer replays one of these
     after EVERY event and asserts the iterate invariants.
+
+    With `pool` given (a clone is consumed — the caller's pool is not
+    advanced), the mix gains "arrive"/"depart" kinds: arrivals draw a
+    few alive sources and an alive destination (delivery-checked like
+    every other event, arrivals on a full pool exercising the admission
+    policy), departures pick a random currently-active slot.  Admission
+    is deterministic, so the engine replaying the schedule claims the
+    exact slots the generator probe did.
     """
     rng = np.random.RandomState(seed)
     base_adj = np.asarray(net.adj)
     V = base_adj.shape[0]
     S = int(net.dest.shape[0])
-    probe = ChurnState(net)           # generator-side replay of the events
+    probe = ChurnState(net, pool=pool.clone() if pool is not None else None)
     events = []
     t = start
 
@@ -366,6 +690,8 @@ def random_schedule(net: CECNetwork, n_events: int, seed: int = 0,
 
     for _ in range(n_events):
         choices = ["rate", "rate", "source", "dest", "fail", "cut"]
+        if probe.pool is not None:
+            choices += ["arrive", "depart"]
         if probe.failed:
             choices += ["recover", "recover"]
         # probe.cut holds both directions of every both-way LinkCut
@@ -375,6 +701,13 @@ def random_schedule(net: CECNetwork, n_events: int, seed: int = 0,
             choices.append("restore")
         kind = choices[rng.randint(len(choices))]
         ev = None
+        # under a pool, source/dest re-draws target ACTIVE slots only —
+        # redrawing an inert slot is a no-op (source) or pointless SPT
+        # churn on a zero-rate row (dest)
+        if probe.pool is not None:
+            active_slots = np.nonzero(probe.pool.active)[0]
+        else:
+            active_slots = np.arange(S)
         if kind == "fail":
             protected = set(int(d) for d in probe.dest)
             cand = [i for i in range(V)
@@ -401,19 +734,36 @@ def random_schedule(net: CECNetwork, n_events: int, seed: int = 0,
             u, v = canonical_cut[rng.randint(len(canonical_cut))]
             if try_event(LinkRestore(u, v)):
                 ev = LinkRestore(u, v)
-        elif kind == "source":
-            task = int(rng.randint(S))
+        elif kind == "source" and active_slots.size:
+            task = int(active_slots[rng.randint(active_slots.size)])
             cand = SourceRedraw(task, int(rng.randint(1 << 16)))
             if try_event(cand):
                 ev = cand
-        elif kind == "dest":
-            task = int(rng.randint(S))
+        elif kind == "dest" and active_slots.size:
+            task = int(active_slots[rng.randint(active_slots.size)])
             alive = [i for i in range(V) if i not in probe.failed
                      and i != int(probe.dest[task])]
             if alive:
                 node = int(alive[rng.randint(len(alive))])
                 if try_event(DestRedraw(task, node=node)):
                     ev = DestRedraw(task, node=node)
+        elif kind == "arrive":
+            alive = [i for i in range(V) if i not in probe.failed]
+            n_src = min(1 + int(rng.randint(3)), max(len(alive) - 1, 1))
+            src = rng.choice(alive, size=n_src, replace=False)
+            row = np.zeros(V, dtype=float)
+            row[src] = rng.uniform(0.4, 1.2, size=n_src)
+            dest_node = int(alive[rng.randint(len(alive))])
+            cand = TaskArrive(row, dest_node,
+                              a=float(rng.uniform(0.2, 1.0)))
+            if try_event(cand):
+                ev = cand
+        elif kind == "depart":
+            act = np.nonzero(probe.pool.active)[0]
+            if act.size > 1:       # never drain the system entirely here
+                cand = TaskDepart(int(act[rng.randint(act.size)]))
+                if try_event(cand):
+                    ev = cand
         if ev is None:                    # "rate", or an infeasible pick
             ev = RateScale(float(rng.uniform(0.6, 1.6)),
                            task=None if rng.rand() < 0.5

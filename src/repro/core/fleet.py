@@ -52,13 +52,20 @@ from .network import (CECNetwork, Neighbors, PhiSparse, build_neighbors,
 
 
 # ----------------------------------------------------------- warm cache
-def fleet_cache_key(net: CECNetwork) -> tuple:
+def fleet_cache_key(net: CECNetwork, active=None) -> tuple:
     """(adjacency bytes, task-pattern sha1) for one scenario.
 
     The pattern hash covers every field that distinguishes lanes on a
     shared topology (dest/task_type/a/r/w and the cost params); two
     scenarios with equal keys are the same optimization problem, so a
     converged φ transfers exactly.
+
+    `active` (the [S_cap] slot mask of a dynamic task-slot pool) is
+    part of the problem identity too: inert slots carry stale
+    dest/task_type, so two pool states can share every hashed field
+    yet differ in WHICH slots are live — the mask (and with it S_cap,
+    via the hashed shapes) keeps a warm φ from leaking across pool
+    reconfigurations.
     """
     adj = np.ascontiguousarray(np.asarray(net.adj))
     h = hashlib.sha1()
@@ -70,6 +77,12 @@ def fleet_cache_key(net: CECNetwork) -> tuple:
         h.update(arr.tobytes())
     h.update(net.link_cost.family.encode())
     h.update(net.comp_cost.family.encode())
+    if active is None:
+        h.update(b"|fixed-S")
+    else:
+        act = np.ascontiguousarray(np.asarray(active, dtype=bool))
+        h.update(b"|pool:" + str(act.shape[0]).encode())
+        h.update(act.tobytes())
     return (adj.tobytes(), h.hexdigest())
 
 
@@ -89,8 +102,8 @@ class FleetCache:
     def __len__(self) -> int:
         return len(self._d)
 
-    def get(self, net: CECNetwork) -> Optional[PhiSparse]:
-        key = fleet_cache_key(net)
+    def get(self, net: CECNetwork, active=None) -> Optional[PhiSparse]:
+        key = fleet_cache_key(net, active=active)
         hit = self._d.get(key)
         if hit is None:
             self.misses += 1
@@ -99,8 +112,8 @@ class FleetCache:
         self.hits += 1
         return PhiSparse(*[jnp.asarray(x) for x in hit])
 
-    def put(self, net: CECNetwork, phi: PhiSparse) -> None:
-        key = fleet_cache_key(net)
+    def put(self, net: CECNetwork, phi: PhiSparse, active=None) -> None:
+        key = fleet_cache_key(net, active=active)
         self._d[key] = tuple(np.asarray(x) for x in
                              (phi.data, phi.local, phi.result))
         self._d.move_to_end(key)

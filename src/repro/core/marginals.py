@@ -62,13 +62,28 @@ def _solve_downstream(phi_nbr: jnp.ndarray, b: jnp.ndarray,
     raise ValueError(method)
 
 
+def _mask_inactive(mg: Marginals, active: jnp.ndarray) -> Marginals:
+    """Zero ρ rows of inactive task slots (defensive: inert slots carry
+    zero rate, so their marginals are never *read*, but padded pools
+    should never leak garbage through the public Marginals)."""
+    am = active[:, None]
+    return dataclasses.replace(
+        mg,
+        rho_data=jnp.where(am, mg.rho_data, 0.0),
+        rho_result=jnp.where(am, mg.rho_result, 0.0))
+
+
 def compute_marginals(net: CECNetwork, phi, fl: Flows,
                       method: str = "dense",
                       nbrs: Neighbors | None = None,
                       engine_impl: str | None = None,
-                      slot_F: bool = False, buckets=None) -> Marginals:
+                      slot_F: bool = False, buckets=None,
+                      active: jnp.ndarray | None = None) -> Marginals:
     """`phi` is a dense `Phi`, or (method="sparse" only) an edge-slot
     `PhiSparse` consumed in place — no gather, no dense intermediate.
+
+    `active` ([S] bool, task-pool padding) zeroes ρ rows of inactive
+    slots; inert slots contribute no flow, so δ/D'/C' are unaffected.
 
     slot_F=True (sparse drivers) declares that `fl.F` is already the
     [V, Dmax] edge-slot link flow (a driver `FlowsCarry`): D' is then
@@ -81,10 +96,11 @@ def compute_marginals(net: CECNetwork, phi, fl: Flows,
     if isinstance(phi, PhiSparse) and method != "sparse":
         raise ValueError("PhiSparse requires method='sparse'")
     if method == "sparse":
-        return _compute_marginals_sparse(
+        mg = _compute_marginals_sparse(
             net, phi, fl,
             nbrs if nbrs is not None else build_neighbors(net.adj),
             engine_impl, slot_F=slot_F, buckets=buckets)
+        return mg if active is None else _mask_inactive(mg, active)
     adjf = net.adj.astype(phi.data.dtype)
     Dp = jnp.where(net.adj, net.link_cost.d1(fl.F), 0.0)
     Cp = net.comp_cost.d1(fl.G)
@@ -108,7 +124,8 @@ def compute_marginals(net: CECNetwork, phi, fl: Flows,
     delta_data_nbr = Dp[None] + rho_data[:, None, :] + ninf
     delta_data = jnp.concatenate(
         [delta_data_nbr, delta_local[..., None]], axis=-1)
-    return Marginals(rho_data, rho_result, delta_data, delta_result, Dp, Cp)
+    mg = Marginals(rho_data, rho_result, delta_data, delta_result, Dp, Cp)
+    return mg if active is None else _mask_inactive(mg, active)
 
 
 def _compute_marginals_sparse(net: CECNetwork, phi, fl: Flows,

@@ -651,7 +651,8 @@ def flows_carry_and_cost(net: "CECNetwork", phi, method: str = "dense",
                          nbrs: Neighbors | None = None,
                          engine_impl: str | None = None,
                          psum_axis: str | None = None,
-                         buckets: NeighborBuckets | None = None):
+                         buckets: NeighborBuckets | None = None,
+                         active: jnp.ndarray | None = None):
     """(FlowsCarry, total cost) of one iterate — the drivers' flow
     evaluation, run exactly once per iterate (when it is the candidate,
     or at the boundary for φ⁰).
@@ -661,7 +662,18 @@ def flows_carry_and_cost(net: "CECNetwork", phi, method: str = "dense",
     them, so no [V, V] array is materialized anywhere in the sparse
     iteration loop (completing what the PhiSparse layout did for φ).
     `psum_axis` all-reduces F/G for the shard_mapped distributed step.
+
+    `active` ([S] bool, dynamic task-slot pools — events.TaskPool) is a
+    belt-and-braces mask of inactive task rows.  The pool contract
+    already keeps their r/a rows exactly zero (so their traffic, flows
+    and cost contributions vanish without any masking), and the hot
+    drivers therefore never pass it; it exists for padded-vs-compact
+    audits where r may deliberately hold stale rates.
     """
+    if active is not None:
+        net = dataclasses.replace(
+            net, r=net.r * active[:, None].astype(net.r.dtype),
+            a=net.a * active.astype(net.a.dtype))
     if method != "sparse":
         fl = compute_flows(net, phi, method, nbrs=nbrs,
                            engine_impl=engine_impl)
@@ -1266,3 +1278,116 @@ def refeasibilize_sparse_samegraph(net: CECNetwork, phi_sp: PhiSparse,
     result = jnp.where(broken[:, None, None], spt_sp, result)
     result = jnp.where(is_dest[..., None], 0.0, result)
     return PhiSparse(data, local[..., None], result)
+
+# ----------------------------------------------------- dynamic task pool
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1) — the task-pool capacity
+    ladder (events.TaskPool), so repeated growth settles into a
+    geometric rung sequence instead of a recompile per arrival."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def pad_tasks(net: CECNetwork, S_cap: int,
+              n_active: int | None = None) -> CECNetwork:
+    """Pad the task axis to `S_cap` slots for a dynamic task-slot pool
+    (events.TaskPool), optionally deactivating the tail at `n_active`.
+
+    Padding/deactivated rows follow the pool's inert-slot convention —
+    zero exogenous rate, zero result ratio, unit weight (dest/task_type
+    of deactivated original rows are left stale on purpose; they are
+    inert with r = a = 0).  Rows the flow model maps to exactly-zero
+    traffic, flows and cost, so a padded pool measures the active
+    system and nothing else.  Adjacency and cost families are untouched.
+    """
+    S, V = net.S, net.V
+    S_cap = int(S_cap)
+    if S_cap < S:
+        raise ValueError(f"S_cap={S_cap} < S={S}: cannot drop tasks")
+    n_active = S if n_active is None else int(n_active)
+    if not (0 <= n_active <= S):
+        raise ValueError(f"n_active={n_active} outside [0, {S}]")
+    r = np.zeros((S_cap, V), dtype=np.asarray(net.r).dtype)
+    r[:S] = np.asarray(net.r)
+    dest = np.zeros(S_cap, dtype=np.int32)
+    dest[:S] = np.asarray(net.dest)
+    a = np.zeros(S_cap, dtype=np.asarray(net.a).dtype)
+    a[:S] = np.asarray(net.a)
+    w_np = np.asarray(net.w)
+    w = np.ones((S_cap,) + w_np.shape[1:], dtype=w_np.dtype)
+    w[:S] = w_np
+    task_type = np.zeros(S_cap, dtype=np.int32)
+    task_type[:S] = np.asarray(net.task_type)
+    if n_active < S:
+        r[n_active:S] = 0.0
+        a[n_active:S] = 0.0
+        w[n_active:S] = 1.0
+    return dataclasses.replace(
+        net, r=jnp.asarray(r), dest=jnp.asarray(dest), a=jnp.asarray(a),
+        w=jnp.asarray(w), task_type=jnp.asarray(task_type))
+
+
+def pad_phi_sparse(phi_sp: PhiSparse, S_cap: int) -> PhiSparse:
+    """Pad the task axis of an edge-slot iterate to `S_cap` rows with
+    inert-slot rows (all-local data, empty result — what
+    `clear_task_slot` writes): feasible, zero-traffic, and frozen
+    bitwise by the masked SGP step."""
+    S = phi_sp.data.shape[0]
+    S_cap = int(S_cap)
+    if S_cap < S:
+        raise ValueError(f"S_cap={S_cap} < S={S}: cannot drop tasks")
+    if S_cap == S:
+        return phi_sp
+    pad = S_cap - S
+    return PhiSparse(
+        data=jnp.concatenate(
+            [phi_sp.data,
+             jnp.zeros((pad,) + phi_sp.data.shape[1:], phi_sp.data.dtype)]),
+        local=jnp.concatenate(
+            [phi_sp.local,
+             jnp.ones((pad,) + phi_sp.local.shape[1:], phi_sp.local.dtype)]),
+        result=jnp.concatenate(
+            [phi_sp.result,
+             jnp.zeros((pad,) + phi_sp.result.shape[1:],
+                       phi_sp.result.dtype)]))
+
+
+def seed_task_slot(phi_sp: PhiSparse, slot: int,
+                   spt_rows: jnp.ndarray) -> PhiSparse:
+    """Seed one recycled task slot from the SPT: all-local data routing
+    plus the slot's `spt_result_slots` row — the same φ⁰ row a cold
+    start gives a task.  Written with eager `.at` updates (no host
+    sync), so a fused churn stream folds an arrival into its dispatch
+    pipeline like any other same-graph repair."""
+    return PhiSparse(
+        data=phi_sp.data.at[slot].set(0.0),
+        local=phi_sp.local.at[slot].set(1.0),
+        result=phi_sp.result.at[slot].set(
+            spt_rows[slot].astype(phi_sp.result.dtype)))
+
+
+def clear_task_slot(phi_sp: PhiSparse, slot: int) -> PhiSparse:
+    """Return a departed task's slot to the inert-slot convention
+    (all-local data, empty result): feasible, exactly-zero traffic, and
+    frozen bitwise by the masked SGP step until the slot is reused."""
+    return PhiSparse(
+        data=phi_sp.data.at[slot].set(0.0),
+        local=phi_sp.local.at[slot].set(1.0),
+        result=phi_sp.result.at[slot].set(0.0))
+
+
+def mask_inactive_slots(phi_sp: PhiSparse, active: jnp.ndarray) -> PhiSparse:
+    """Force every inactive slot of `phi_sp` back to the inert-slot
+    convention in one vectorized pass (eager device ops, no host sync).
+
+    The replay engine runs this after any repair that touched the whole
+    iterate (`refeasibilize_sparse*`): the repair's damage rule cannot
+    damage a zero-mass row, but a schedule CAN aim routing churn at an
+    inert slot (e.g. a DestRedraw of a departed task), and the rebuild
+    would then write SPT rows into a slot the pool considers empty.
+    """
+    act = active[:, None, None]
+    return PhiSparse(
+        data=jnp.where(act, phi_sp.data, 0.0),
+        local=jnp.where(act, phi_sp.local, 1.0),
+        result=jnp.where(act, phi_sp.result, 0.0))

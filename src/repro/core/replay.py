@@ -48,18 +48,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from .events import (ChurnSchedule, ChurnState, DestRedraw, RateSet,
-                     event_kind)
+                     TaskArrive, TaskPool, event_kind)
 from .network import (CECNetwork, Neighbors, PhiSparse, build_buckets,
-                      build_neighbors, is_loop_free, refeasibilize_sparse,
-                      refeasibilize_sparse_samegraph, sparse_to_phi,
-                      spt_phi_sparse, spt_result_slots)
+                      build_neighbors, clear_task_slot, is_loop_free,
+                      mask_inactive_slots, pad_phi_sparse,
+                      refeasibilize_sparse, refeasibilize_sparse_samegraph,
+                      seed_task_slot, sparse_to_phi, spt_phi_sparse,
+                      spt_result_slots)
 from .sgp import FusedStream, init_run_state, run_chunk
 from . import distributed as dist
 
 
 # ------------------------------------------------------------ invariants
 def check_feasible(phi_sp: PhiSparse, nbrs: Neighbors,
-                   dest=None, atol: float = 1e-5) -> None:
+                   dest=None, atol: float = 1e-5, active=None) -> None:
     """Assert the edge-slot iterate is feasible.
 
     Data rows (slots + local column) lie on the simplex at every node;
@@ -73,10 +75,28 @@ def check_feasible(phi_sp: PhiSparse, nbrs: Neighbors,
     replay engine pins that so any new producer that starts leaving
     scratch values in dead slots is flagged here instead of surfacing
     as a confusing downstream diff.
+
+    `active` ([S] bool, dynamic task-slot pools) splits the check:
+    INACTIVE task rows are pinned to the inert-slot convention EXACTLY
+    (zero data mass, all-local, empty result rows — any drift means a
+    producer leaked mass into a slot the pool considers empty), and the
+    simplex/destination checks then run on the active rows only.
     """
     data = np.asarray(phi_sp.data)
     local = np.asarray(phi_sp.local[..., 0])
     result = np.asarray(phi_sp.result)
+    if active is not None:
+        act = np.asarray(active, dtype=bool)
+        ina = ~act
+        if not (data[ina] == 0.0).all():
+            raise AssertionError("inactive task rows carry data mass")
+        if not (result[ina] == 0.0).all():
+            raise AssertionError("inactive task rows carry result mass")
+        if not (local[ina] == 1.0).all():
+            raise AssertionError("inactive task rows are not all-local")
+        data, local, result = data[act], local[act], result[act]
+        if dest is not None:
+            dest = np.asarray(dest)[act]
     pad = ~np.asarray(nbrs.out_mask)[None]
     if not (data[np.broadcast_to(pad, data.shape)] == 0.0).all():
         raise AssertionError("nonzero mass on dead data slots")
@@ -103,14 +123,17 @@ def check_feasible(phi_sp: PhiSparse, nbrs: Neighbors,
 
 def check_invariants(net: CECNetwork, phi_sp: PhiSparse, nbrs: Neighbors,
                      n_loop_tasks: Optional[int] = None,
-                     atol: float = 1e-5) -> None:
+                     atol: float = 1e-5, active=None) -> None:
     """`check_feasible` + loop-freedom.
 
     The boolean-closure loop-free check is O(S·V²·log V), so at V ~ 10³
     pass `n_loop_tasks` to spot-check a task slice (the invariant is
     per-task, slicing loses no soundness for the checked tasks).
+    `active` forwards the task-pool mask to `check_feasible`; the
+    loop-freedom closure runs on all rows either way (inactive rows are
+    support-free — all-local — so they are trivially loop-free).
     """
-    check_feasible(phi_sp, nbrs, dest=net.dest, atol=atol)
+    check_feasible(phi_sp, nbrs, dest=net.dest, atol=atol, active=active)
     if n_loop_tasks is not None and n_loop_tasks < net.S:
         sl = slice(0, n_loop_tasks)
         net = dataclasses.replace(
@@ -150,7 +173,8 @@ class EventRecord:
     """What one churn event did to the live iterate."""
     it: int                      # global iteration the event fired at
     event: object
-    kind: str                    # "rate" | "topology" | "routing"
+    kind: str                    # "rate" | "topology" | "routing" |
+                                 # "task" | "grow" (pool ladder grew)
     cost_before: float           # last accepted cost on the old network
     cost_after: float            # repaired iterate's cost on the new one
     segment_costs: list = dataclasses.field(default_factory=list)
@@ -212,7 +236,7 @@ class ReplayEngine:
                  invariant_checks: bool = True,
                  invariant_loop_tasks: Optional[int] = 4,
                  fault_plan=None, fault_rng=None, guards=None,
-                 rng=None):
+                 rng=None, pool: Optional[TaskPool] = None):
         if driver not in ("run", "distributed"):
             raise ValueError(f"unknown replay driver {driver!r}")
         if bucketed and driver != "run":
@@ -222,7 +246,19 @@ class ReplayEngine:
             raise ValueError("the Theorem-2 async rng (rng=) drives "
                              "run_chunk's row masks; driver="
                              "'distributed' does not consume it")
-        self.churn = ChurnState(net)
+        if pool is not None:
+            if driver != "run":
+                raise ValueError(
+                    "a dynamic task pool needs driver='run': the "
+                    "distributed step does not thread the active mask")
+            if int(net.S) != pool.S_cap:
+                raise ValueError(
+                    f"network has S={int(net.S)} task slots but the "
+                    f"pool's S_cap={pool.S_cap}; pad the network with "
+                    "network.pad_tasks(net, pool.S_cap) first")
+        self.pool = pool
+        self.admission_log: list = []        # drained, it-stamped pool log
+        self.churn = ChurnState(net, pool=pool)
         self.net = net
         self.nbrs = build_neighbors(net.adj)
         # degree-bucketed mode: rebuilt beside nbrs on every topology
@@ -277,6 +313,12 @@ class ReplayEngine:
         if not isinstance(phi0, PhiSparse):
             raise TypeError("ReplayEngine iterates natively: pass a "
                             "PhiSparse phi0 (e.g. spt_phi_sparse)")
+        self._refresh_active()
+        if self.pool is not None and self._active_dev is not None:
+            # never trust the caller's φ⁰ on slots the pool says are
+            # empty (e.g. an SPT φ⁰ built on a padded net seeds EVERY
+            # row, inert slots included)
+            phi0 = mask_inactive_slots(phi0, self._active_dev)
         self._init_state(phi0)
 
     # ------------------------------------------------------------- driver
@@ -296,6 +338,30 @@ class ReplayEngine:
         self._rng, sub = jax.random.split(self._rng)
         return sub
 
+    def _refresh_active(self) -> None:
+        """Re-upload the pool's active-slot mask as the device array the
+        drivers thread (`TaskPool.active_for_engine` decides None — the
+        fixed-S bitwise pass-through — vs the dynamic mask; see the
+        pool's compilation contract).  Called after every task event;
+        admitting a task at constant S_cap changes array VALUES only,
+        so the compiled step executables are all reused."""
+        if self.pool is None:
+            self._active_dev = None
+            return
+        host = self.pool.active_for_engine()
+        self._active_dev = None if host is None else jnp.asarray(host)
+
+    def _drain_admissions(self) -> None:
+        """Move the pool's un-drained `AdmissionEvent`s into the
+        engine's log, stamped with the global iteration count (stream
+        windows apply their events before folding iterations, so there
+        the stamp is the window-entry count)."""
+        if self.pool is None:
+            return
+        for ev in self.pool.drain_log():
+            self.admission_log.append(
+                dataclasses.replace(ev, it=self.total_iters))
+
     def _init_state(self, phi_sp: PhiSparse) -> None:
         robust = {}
         if self.fault_plan is not None:
@@ -312,7 +378,7 @@ class ReplayEngine:
                 nbrs=self.nbrs, bucketed=self.bucketed,
                 buckets=self.buckets,
                 rng=None if self._rng is None else self._segment_rng(),
-                **robust)
+                active=self._active_dev, **robust)
         else:
             self.state = dist.init_distributed_state(
                 self.net, phi_sp, mesh=self.mesh, method="sparse",
@@ -381,6 +447,16 @@ class ReplayEngine:
         kind = self.churn.apply(event)
         net_new = self.churn.network()
         phi = self.phi
+        if kind in ("task", "grow"):
+            # arrival/departure on the task pool: same graph, so the
+            # repair is per-slot — clear a departed slot back to inert,
+            # seed a claimed slot from the SPT (eager .at ops).  "grow"
+            # first pads the iterate to the new rung (S changed: the
+            # one admission outcome that recompiles, by design).
+            self._refresh_active()
+            if kind == "grow":
+                phi = pad_phi_sparse(phi, int(net_new.S))
+            phi = self._apply_task_repairs(net_new, phi)
         if kind in ("topology", "routing"):
             rebuild = None
             if isinstance(event, DestRedraw):
@@ -389,6 +465,11 @@ class ReplayEngine:
                 rebuild = jnp.asarray(rebuild)
             phi, self.nbrs = refeasibilize_sparse(net_new, phi, self.nbrs,
                                                   rebuild_tasks=rebuild)
+            if self._active_dev is not None:
+                # a whole-iterate repair may write SPT rows into a slot
+                # the pool considers empty (e.g. routing churn aimed at
+                # a departed task) — pin the convention back
+                phi = mask_inactive_slots(phi, self._active_dev)
             if self.bucketed:
                 self.buckets = build_buckets(net_new.adj)
         if kind == "topology":
@@ -414,17 +495,32 @@ class ReplayEngine:
                            if self.fault_plan is not None else None))
         else:
             self._init_state(phi)             # warm re-baseline
+        self._drain_admissions()
         if self.invariant_checks:
             # post-event feasibility/loop-freedom spot check (see
             # __init__: benches disable this host sync)
             check_invariants(self.net, self.phi, self.nbrs,
-                             n_loop_tasks=self.invariant_loop_tasks)
+                             n_loop_tasks=self.invariant_loop_tasks,
+                             active=(None if self.pool is None
+                                     else self.pool.active))
         rec = EventRecord(it=self.total_iters, event=event, kind=kind,
                           cost_before=cost_before,
                           cost_after=float(self.state.costs[-1]))
         self.records.append(rec)
         self._segment_open = True
         return rec
+
+    def _apply_task_repairs(self, net_new: CECNetwork,
+                            phi: PhiSparse) -> PhiSparse:
+        """Run the per-slot φ repairs the last task event recorded on
+        `self.churn` (seed an admitted slot from the memoized SPT rows,
+        clear a departed one) — all eager device ops."""
+        for op, slot in self.churn.last_task_repairs:
+            if op == "seed":
+                phi = seed_task_slot(phi, slot, self._spt_rows(net_new))
+            else:
+                phi = clear_task_slot(phi, slot)
+        return phi
 
     def rebaseline_rates(self, r, task: Optional[int] = None,
                          n_iters: int = 0) -> EventRecord:
@@ -446,8 +542,15 @@ class ReplayEngine:
         — never on φ — and same-graph churn leaves the first two fixed,
         so the per-unique-destination Dijkstra (the dominant per-
         routing-event host cost at scale) runs once per distinct dest
-        vector.  `apply_event` clears the cache on topology events."""
+        vector.  `apply_event` clears the cache on topology events.
+
+        Under a pool the key also carries (S_cap, active-mask bytes): a
+        recycled slot's rows must never warm-start from the assignment
+        a PREVIOUS tenant of the slot memoized, even when the stale
+        dest vector happens to coincide."""
         key = np.asarray(net_new.dest).tobytes()
+        if self.pool is not None:
+            key = (key, int(net_new.S), self.pool.active.tobytes())
         rows = self._spt_cache.get(key)
         if rows is None:
             rows = spt_result_slots(net_new, self.nbrs)
@@ -484,37 +587,62 @@ class ReplayEngine:
         for (t_ev, event) in window:
             stream.advance(t_ev - t_prev)
             kind = self.churn.apply(event)
+            assert kind != "grow", \
+                "_play_stream's pool probe must break the window " \
+                "before a ladder-growing arrival"
             net_new = self.churn.network()
             repair = None
-            if kind == "routing":
+            if kind == "task":
+                # per-slot repairs (seed admitted / clear departed):
+                # eager .at ops, streamable like the same-graph repair
+                self._refresh_active()
+                repairs = self.churn.last_task_repairs
+                spt = (self._spt_rows(net_new)
+                       if any(op == "seed" for op, _ in repairs) else None)
+
+                def repair(p, _ops=repairs, _spt=spt):
+                    for op, slot in _ops:
+                        p = (seed_task_slot(p, slot, _spt) if op == "seed"
+                             else clear_task_slot(p, slot))
+                    return p
+            elif kind == "routing":
                 rebuild = None
                 if isinstance(event, DestRedraw):
                     rb = np.zeros(net_new.S, bool)
                     rb[event.task] = True
                     rebuild = jnp.asarray(rb)
                 spt = self._spt_rows(net_new)
+                active_dev = self._active_dev
 
-                def repair(p, _net=net_new, _rb=rebuild, _spt=spt):
-                    return refeasibilize_sparse_samegraph(
+                def repair(p, _net=net_new, _rb=rebuild, _spt=spt,
+                           _act=active_dev):
+                    p = refeasibilize_sparse_samegraph(
                         _net, p, self.nbrs, rebuild_tasks=_rb, spt_sp=_spt)
+                    # pin inert slots the whole-iterate repair may have
+                    # re-seeded (mirrors apply_event's pool path)
+                    return p if _act is None else mask_inactive_slots(p, _act)
             stream.rebaseline(
                 net_new, repair=repair,
                 fault_rng=(self._segment_fault_rng()
                            if self.fault_plan is not None else None),
                 rng=(self._segment_rng() if self._rng is not None
-                     else None))
+                     else None),
+                active=self._active_dev if kind == "task" else None)
             self.net = net_new
             pending.append((event, kind))
             t_prev = t_ev
         segments = stream.finish()
         self._fold_stream(segments, pending, entering_costs,
                           entering_guards)
+        self._drain_admissions()
         if self.invariant_checks:
             # deferred to the window's end: the per-event check is the
             # host sync the stream exists to avoid (the event loop still
             # checks every event)
             check_invariants(self.net, self.phi, self.nbrs,
-                             n_loop_tasks=self.invariant_loop_tasks)
+                             n_loop_tasks=self.invariant_loop_tasks,
+                             active=(None if self.pool is None
+                                     else self.pool.active))
         return t_prev
 
     def _fold_stream(self, segments: list, pending: list,
@@ -557,13 +685,28 @@ class ReplayEngine:
         the stream and go through the ordinary `apply_event` path."""
         t_prev = 0
         window: list = []
+        # grow pre-check probe: a cloned pool replays each window's
+        # admissions ahead of the stream so a ladder-growing arrival
+        # (S changes — shapes change — must recompile) breaks the
+        # window BEFORE it is deferred behind the dispatch pipeline
+        probe = self.pool.clone() if self.pool is not None else None
         for (t_ev, event) in schedule.events:
-            if event_kind(event) == "topology":
+            breaks = event_kind(event) == "topology"
+            if not breaks and probe is not None:
+                if probe.would_grow(event):
+                    breaks = True
+                elif isinstance(event, TaskArrive):
+                    probe.admit(event)
+                elif event_kind(event) == "task":
+                    probe.release(int(event.task))
+            if breaks:
                 t_prev = self._flush_stream(window, t_prev)
                 window = []
                 self.iterate(t_ev - t_prev)
                 self.apply_event(event)
                 t_prev = t_ev
+                if probe is not None:
+                    probe = self.pool.clone()   # resync after the flush
             else:
                 window.append((t_ev, event))
         t_prev = self._flush_stream(window, t_prev)
@@ -670,4 +813,5 @@ class ReplayEngine:
     def history(self) -> dict:
         return {"costs": self.costs, "final_cost": self.cost,
                 "records": self.records, "n_iters": self.total_iters,
-                "guard_events": self.guard_log}
+                "guard_events": self.guard_log,
+                "admission_events": list(self.admission_log)}

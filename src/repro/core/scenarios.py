@@ -195,10 +195,14 @@ def churn_schedule(name: str, net: CECNetwork):
     cold numbers measure routing adaptation, not disappearing demand.
 
     Names: "<scenario>_churn" for every TABLE_II row, e.g.
-    "sw_1000_churn" / "grid_1024_churn".
+    "sw_1000_churn" / "grid_1024_churn", and "<scenario>_taskchurn" for
+    the task-pool arrival/departure mixes (whose `net` must be the
+    padded pool network `taskchurn_scenario` returns).
     """
     from .events import (ChurnSchedule, LinkCut, LinkRestore, NodeFail,
                          NodeRecover, RateScale, SourceRedraw)
+    if name.endswith("_taskchurn"):
+        return _taskchurn_schedule(name, net)
     base = name[:-len("_churn")] if name.endswith("_churn") else name
     if base not in TABLE_II:
         raise KeyError(f"no churn schedule for scenario {name!r}")
@@ -228,6 +232,64 @@ def churn_schedule(name: str, net: CECNetwork):
         (19, RateScale(0.75)),                # load drops back off
     )
     return ChurnSchedule(events, name=f"{base}_churn")
+
+
+def taskchurn_scenario(name: str, free: int = 4, policy: str = "reject",
+                       rate_scale: float = 1.0):
+    """(net, pool) for task-churn replay: the TABLE_II scenario `name`
+    with its LAST `free` task slots deactivated into pool headroom.
+
+    S_cap is pinned to the spec's S — per-iterate compute matches the
+    fixed scenario exactly — and the deactivated tail gives the
+    `TaskPool` recycled slots for arrivals to claim, so the canned
+    `*_taskchurn` schedules run admission/recycling without ever
+    changing compiled shapes.  The pool is constructed with headroom,
+    so the engine threads the dynamic active mask from iteration 0
+    (`TaskPool.ever_padded`) and arrivals are value-only updates.
+    """
+    from .events import TaskPool
+    from .network import pad_tasks
+    base = make_scenario(TABLE_II[name], rate_scale=rate_scale)
+    S = int(base.S)
+    if not (0 < free < S):
+        raise ValueError(f"free={free} outside (0, {S})")
+    net = pad_tasks(base, S, n_active=S - free)
+    pool = TaskPool(S - free, S_cap=S, policy=policy)
+    return net, pool
+
+
+def _taskchurn_schedule(name: str, net: CECNetwork):
+    """Canned task-pool churn mix behind `churn_schedule`
+    ("<scenario>_taskchurn"): seeded arrivals (one claiming a freshly
+    recycled slot), a departure, and rate/source churn riding along —
+    every event same-graph, so the whole schedule folds into one fused
+    dispatch stream.  `net` must be the padded pool network from
+    `taskchurn_scenario` (the arrivals assume its headroom slots)."""
+    from .events import (ChurnSchedule, RateScale, SourceRedraw,
+                         TaskArrive, TaskDepart)
+    base = name[:-len("_taskchurn")]
+    if base not in TABLE_II:
+        raise KeyError(f"no task-churn schedule for scenario {name!r}")
+    V = int(net.V)
+    rng = np.random.RandomState(V + 7)
+
+    def arrival():
+        src = rng.choice(V, size=2, replace=False)
+        row = np.zeros(V)
+        row[src] = rng.uniform(0.3, 0.8, size=2)
+        return TaskArrive(row, dest=int(rng.randint(V)),
+                          a=float(rng.uniform(0.3, 0.9)))
+
+    events = (
+        (2, RateScale(1.2)),                # load surge
+        (4, arrival()),                     # claims the first free slot
+        (6, TaskDepart(0)),                 # slot 0 leaves...
+        (8, arrival()),                     # ...and is recycled here
+        (10, SourceRedraw(1, seed=V)),      # a surviving task drifts
+        (12, arrival()),                    # more headroom claimed
+        (14, RateScale(0.85)),              # load backs off
+    )
+    return ChurnSchedule(events, name=f"{base}_taskchurn")
 
 
 def fail_node(net: CECNetwork, node: int) -> CECNetwork:

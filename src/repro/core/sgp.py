@@ -657,7 +657,8 @@ def _sgp_step_flows_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
                          engine_impl: Optional[str] = None,
                          nbrs: Optional[Neighbors] = None,
                          buckets=None, with_aux: bool = False,
-                         fault_plan=None, fault_state=None):
+                         fault_plan=None, fault_state=None,
+                         active: Optional[jnp.ndarray] = None):
     """One DRIVER iteration: propose the candidate from the current
     iterate's carried flows, then measure the candidate (flows + cost).
 
@@ -695,6 +696,17 @@ def _sgp_step_flows_impl(net: CECNetwork, phi, fl, consts: SGPConsts,
             mask_data = pmask if mask_data is None else mask_data & pmask
             mask_result = (pmask if mask_result is None
                            else mask_result & pmask)
+    if active is not None:
+        # dynamic task-slot pool (events.TaskPool): fold the [S] active
+        # mask into the Theorem-2 row masks exactly like the fault
+        # participation mask above — but unconditionally, faults or not
+        # — so inactive slots' φ rows are frozen bitwise.  Their r/a
+        # rows are zero under the pool contract, so their flows, cost
+        # and accept contributions are exactly zero without any
+        # masking of the measurement itself.
+        am = active[:, None]                                # [S, 1] -> [S, V]
+        mask_data = am if mask_data is None else mask_data & am
+        mask_result = am if mask_result is None else mask_result & am
     phi_new, mg = _sgp_propose_impl(
         net, phi, fl, consts, variant=variant, beta=beta,
         mask_data=mask_data, mask_result=mask_result,
@@ -805,6 +817,10 @@ class RunState:
     guard_cfg: object = None         # guards.GuardConfig (static policy)
     guard_state: object = None       # guards.GuardState (device carry)
     guard_events: list = dataclasses.field(default_factory=list)
+    # [S] bool active-task mask of a dynamic task-slot pool
+    # (events.TaskPool), or None for the fixed-S bitwise pass-through —
+    # see TaskPool's compilation contract for when each is used
+    active: Optional[jax.Array] = None
 
 
 def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
@@ -813,7 +829,8 @@ def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
                    nbrs: Optional[Neighbors] = None,
                    bucketed: bool = False, buckets=None,
                    fault_plan=None, fault_rng: Optional[jax.Array] = None,
-                   guards=None) -> RunState:
+                   guards=None,
+                   active: Optional[jax.Array] = None) -> RunState:
     """Set up the resumable driver state exactly as `run` would: build
     (or accept) the neighbor lists, convert a dense φ⁰ to slots under
     method="sparse", evaluate φ⁰'s flows + T⁰ (one solve, both carried)
@@ -829,7 +846,12 @@ def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
     seeded by `fault_rng` (default PRNGKey(0), a stream separate from
     the Theorem-2 async `rng`); guards (guards.GuardConfig) arms the
     sentinel/rollback recovery layer anchored at φ⁰.  Either forces the
-    fused driver in `run_chunk`."""
+    fused driver in `run_chunk`.
+
+    active ([S] bool device array) threads a dynamic task-slot pool's
+    mask through every step: inactive slots' φ rows are frozen bitwise
+    and (their r/a rows being zero) contribute exactly zero traffic and
+    cost.  None is the fixed-S engine, bit for bit."""
     if method == "sparse":
         nbrs = build_neighbors(net.adj) if nbrs is None else nbrs
         if bucketed and buckets is None:
@@ -856,7 +878,8 @@ def init_run_state(net: CECNetwork, phi0, min_scale: float = 0.05,
                     costs=[float(T0)], min_scale=min_scale, rng=rng,
                     flows=fl0, buckets=buckets,
                     fault_plan=fault_plan, fault_state=fault_state,
-                    guard_cfg=guards, guard_state=guard_state)
+                    guard_cfg=guards, guard_state=guard_state,
+                    active=active)
 
 
 def _accept_update_impl(phi_new, fl_new, cost_new, phi, fl, sigma, prev,
@@ -1015,7 +1038,7 @@ def run_chunk(net: CECNetwork, state: RunState, n_iters: int,
             method=method, use_blocking=use_blocking, scaling=scaling,
             sigma=jnp.float32(sigma), kappa=kappa, proj_impl=proj_impl,
             engine_impl=engine_impl, nbrs=nbrs, buckets=state.buckets,
-            with_aux=callback is not None)
+            with_aux=callback is not None, active=state.active)
         phi_new, fl_new, cost_new = out[:3]
         new_cost = float(cost_new)   # the host driver's per-iteration sync
         accepted, sigma, stop = accept_step(new_cost, costs[-1], sigma,
@@ -1139,6 +1162,7 @@ class FusedStream:
         self._phi, self._consts = state.phi, state.consts
         self._fl = fl if fl is not None else _entry_flows(net, state,
                                                           engine_impl)
+        self._active = state.active   # task-pool mask (None = fixed S)
         self._rng = state.rng
         self._fs, self._gs = state.fault_state, state.guard_state
         self._sigma = jnp.float32(state.sigma)
@@ -1187,7 +1211,8 @@ class FusedStream:
                 scaling=o["scaling"], sigma=self._sigma, kappa=o["kappa"],
                 proj_impl=o["proj_impl"], engine_impl=o["engine_impl"],
                 nbrs=state.nbrs, buckets=state.buckets,
-                fault_plan=state.fault_plan, fault_state=self._fs)
+                fault_plan=state.fault_plan, fault_state=self._fs,
+                active=self._active)
             stopped_pre = self._stopped
             if self._faulted:
                 phi_new, fl_new, cost_new, fs_new = out
@@ -1231,7 +1256,7 @@ class FusedStream:
 
     # -------------------------------------------------------- rebaseline
     def rebaseline(self, net_new: CECNetwork, repair=None, *,
-                   fault_rng=None, rng=None) -> "FusedStream":
+                   fault_rng=None, rng=None, active=None) -> "FusedStream":
         """Fold one SAME-GRAPH churn event into the carry without a
         host sync: close the open segment (its boundary scalars are
         snapshotted as device refs and fetched in `finish`'s single
@@ -1245,9 +1270,16 @@ class FusedStream:
         state's `Neighbors` were built from; topology events must break
         the stream instead.  `fault_rng`/`rng` re-key the per-segment
         fault and Theorem-2 async-mask streams (the same splits
-        `ReplayEngine._init_state` would pass)."""
+        `ReplayEngine._init_state` would pass).  `active` swaps in a
+        task pool's updated slot mask (TaskArrive/TaskDepart events —
+        same [S] shape, so the step's compiled executable is reused;
+        None leaves the mask unchanged, it never reverts to fixed-S
+        mid-stream)."""
         assert not self._finished, "stream already finished"
         state = self.state
+        if active is not None:
+            self._active = active
+            state.active = active
         phi = self._phi if repair is None else repair(self._phi)
         fl, T0 = flows_carry_and_cost_jit(
             net_new, phi, state.method, nbrs=state.nbrs,

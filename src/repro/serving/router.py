@@ -103,14 +103,45 @@ class RateEstimator:
             self._evict()
         return np.maximum(self._sum, 0.0) / self.window
 
+    def ensure_rows(self, n_classes: int) -> None:
+        """Grow the per-class axis to `n_classes` rows (admission onto a
+        task-pool rung beyond the estimator's construction size)."""
+        extra = n_classes - self._sum.shape[0]
+        if extra > 0:
+            self._sum = np.vstack(
+                [self._sum, np.zeros((extra, self._sum.shape[1]))])
+
+    def ingest(self, s: int, f: int, tokens: float, t: float) -> None:
+        """Fold one request that was observed BEFORE the class had a
+        task slot (buffered during admission).  Unlike `observe`, `t`
+        may lie in the past; the event deque is re-sorted so window
+        eviction stays exact."""
+        self._t = max(self._t, t)
+        self._events.append((t, s, f, float(tokens)))
+        if len(self._events) > 1 and self._events[-2][0] > t:
+            self._events = deque(sorted(self._events))
+        self._sum[s, f] += tokens
+        self._evict()
+
 
 class RequestRouter:
     def __init__(self, pods: List[PodSpec], n_frontends: int,
                  classes: Dict[str, float],
                  demand: np.ndarray,
-                 cfg: RouterConfig = RouterConfig()):
+                 cfg: RouterConfig = RouterConfig(),
+                 class_slots: int = 0,
+                 admission_policy: str = "reject"):
         """classes: name -> a_m (output/input ratio).
-        demand: [n_classes, n_frontends] prompt token rates."""
+        demand: [n_classes, n_frontends] prompt token rates.
+
+        class_slots > 0 provisions a `core.TaskPool` with at least that
+        many spare task slots (padded to the next power-of-two rung):
+        observing a request for an UNKNOWN class name stages it, and the
+        next `maybe_rebaseline()` admits it as a `TaskArrive` through
+        the warm live engine — no re-plan, no recompile.  A known class
+        whose windowed rate decays to zero departs the same way.
+        `admission_policy` (reject | queue | grow) decides what happens
+        when the pool is exhausted."""
         self.pods = pods
         self.F = n_frontends
         self.P = len(pods)
@@ -154,6 +185,13 @@ class RequestRouter:
             w=jnp.asarray(w),
             task_type=jnp.asarray(np.arange(S), jnp.int32))
         self.pod_nodes = pod_ids
+        if class_slots > 0:
+            S_cap = core.next_pow2(S + class_slots)
+            self.pool: Optional[core.TaskPool] = core.TaskPool(
+                S, S_cap=S_cap, policy=admission_policy)
+            self.net = core.pad_tasks(self.net, S_cap, n_active=S)
+        else:
+            self.pool = None
         # initial plan: nearest-pod offloading (frontends must not compute)
         self._phi_init = core.offload_phi(self.net, pod_ids)
         self.net = core.enforce_feasibility(self.net, margin=0.8,
@@ -162,10 +200,18 @@ class RequestRouter:
         self.phi = None
         self.history = None
         self.method = "sparse"
-        self.estimator = RateEstimator(S, self.F, window=cfg.window)
+        self.estimator = RateEstimator(int(self.net.S), self.F,
+                                       window=cfg.window)
         self._run_opts: dict = {}
         self._live: Optional[core.ReplayEngine] = None
         self._phi_table: Optional[np.ndarray] = None   # dense data rows
+        # dynamic-class admission state (pool mode only)
+        self._dynamic: Dict[str, int] = {}      # admitted name -> task slot
+        self._class_a: Dict[str, float] = dict(classes)
+        self._staged: Dict[str, list] = {}      # unadmitted name -> events
+        self._awaiting: List[str] = []          # names in emission order
+        self._queued_names: List[str] = []      # names the pool queued
+        self._adm_seen = 0                      # admission-log watermark
 
     # ------------------------------------------------------------------
     def plan(self, n_iters: Optional[int] = None,
@@ -220,14 +266,29 @@ class RequestRouter:
 
     # ------------------------------------------------- live request bridge
     def class_index(self, class_name: str) -> int:
+        if class_name in self._dynamic:
+            return self._dynamic[class_name]
         return self.class_names.index(class_name)
 
     def observe(self, class_name: str, frontend: int, tokens: float,
-                t: float) -> None:
+                t: float, a: float = 1.0) -> None:
         """Fold one arriving request (its prompt tokens, at time `t`)
-        into the windowed rate estimate."""
-        self.estimator.observe(self.class_index(class_name), frontend,
-                               tokens, t)
+        into the windowed rate estimate.
+
+        Under a task pool, an UNKNOWN class name is staged instead of
+        raising: its requests buffer until the next `maybe_rebaseline`
+        emits a `TaskArrive` for it (`a` is the new class's output/input
+        ratio, recorded at first sight)."""
+        try:
+            s = self.class_index(class_name)
+        except ValueError:
+            if self.pool is None:
+                raise
+            self._class_a.setdefault(class_name, float(a))
+            self._staged.setdefault(class_name, []).append(
+                (frontend, float(tokens), float(t)))
+            return
+        self.estimator.observe(s, frontend, tokens, t)
 
     def drift(self) -> float:
         """Relative L1 gap between the windowed estimate and the rates
@@ -237,31 +298,113 @@ class RequestRouter:
         return float(np.abs(est - planned).sum()
                      / max(planned.sum(), 1e-9))
 
-    def maybe_rebaseline(self, threshold: float = 0.25,
-                         n_iters: int = 30) -> dict:
-        """Re-anchor the plan on the measured rates IF drift exceeds
-        `threshold` — as a warm `ReplayEngine` rebaseline (`RateSet`
-        event + `n_iters` warm iterations), never a cold re-plan."""
-        d = self.drift()
-        if d <= threshold:
-            return {"drift": d, "rebaselined": False}
+    def _ensure_live(self) -> "core.ReplayEngine":
         if self.phi is None:
             self.plan()
         if self._live is None:
             self._live = core.ReplayEngine(
                 self.net, phi0=self._sparse_phi(),
                 run_opts=dict(self._run_opts) or None,
-                invariant_checks=False)
-        r_new = np.zeros(np.asarray(self.net.r).shape)
-        r_new[:, 1:1 + self.F] = self.estimator.rates()
-        self._live.rebaseline_rates(r_new, n_iters=n_iters)
-        self.net = self._live.net
-        self.phi = self._live.phi
-        self.nbrs = self._live.nbrs
+                invariant_checks=False, pool=self.pool)
+        return self._live
+
+    def _staged_rate(self, events: list) -> np.ndarray:
+        """Windowed per-frontend token rates of a staged (not yet
+        admitted) class, from its buffered observations."""
+        now = max([self.estimator._t] + [t for _, _, t in events])
+        horizon = now - self.cfg.window
+        rate = np.zeros(self.F)
+        for f, tok, t in events:
+            if t > horizon:
+                rate[f] += tok
+        return rate / self.cfg.window
+
+    def _bind(self, name: str, slot: int, admitted: list) -> None:
+        """An admission landed: map the class to its task slot and fold
+        its buffered requests into the windowed estimator."""
+        self._dynamic[name] = slot
+        self.estimator.ensure_rows(int(self._live.net.S))
+        for f, tok, t in self._staged.pop(name, []):
+            self.estimator.ingest(slot, f, tok, t)
+        admitted.append(name)
+
+    def _sync_pool(self) -> dict:
+        """Reconcile new admission-log records with the class names we
+        emitted.  The pool is strictly FIFO (lowest-free-slot admits,
+        FIFO queue), so records pair with names in emission order."""
+        out: dict = {"admitted": [], "rejected": [], "queued": []}
+        log = self._live.admission_log
+        for ev in log[self._adm_seen:]:
+            if ev.action in ("admit", "grow"):
+                self._bind(self._awaiting.pop(0), ev.slot, out["admitted"])
+            elif ev.action == "reject":
+                name = self._awaiting.pop(0)
+                self._staged.pop(name, None)
+                out["rejected"].append(name)
+            elif ev.action == "queue":
+                name = self._awaiting.pop(0)
+                self._queued_names.append(name)
+                out["queued"].append(name)
+            elif ev.action == "dequeue":
+                self._bind(self._queued_names.pop(0), ev.slot,
+                           out["admitted"])
+        self._adm_seen = len(log)
+        return out
+
+    def maybe_rebaseline(self, threshold: float = 0.25,
+                         n_iters: int = 30) -> dict:
+        """Re-anchor the plan on the measured rates IF drift exceeds
+        `threshold` — as a warm `ReplayEngine` rebaseline (`RateSet`
+        event + `n_iters` warm iterations), never a cold re-plan.
+
+        Under a task pool this is also the admission point: staged
+        brand-new classes are emitted as `TaskArrive` events and
+        vanished dynamic classes (windowed rate decayed to zero) as
+        `TaskDepart` — each folded WARM through the live engine (same
+        graph, per-slot φ repair; zero new compiles at constant S_cap)
+        instead of a full replan."""
+        d = self.drift()
+        arrivals, departures = [], []
+        if self.pool is not None:
+            for name, events in list(self._staged.items()):
+                rate = self._staged_rate(events)
+                if rate.sum() > 0.0:
+                    arrivals.append((name, rate))
+                else:                       # every observation expired
+                    del self._staged[name]
+            est = self.estimator.rates()
+            for name, slot in list(self._dynamic.items()):
+                if est[slot].sum() <= 0.0:
+                    departures.append((name, slot))
+        if d <= threshold and not arrivals and not departures:
+            return {"drift": d, "rebaselined": False, "admissions": {}}
+        live = self._ensure_live()
+        for name, rate in arrivals:
+            r_row = np.zeros(int(self.net.V))
+            r_row[1:1 + self.F] = rate
+            self._awaiting.append(name)
+            live.apply_event(core.TaskArrive(
+                r=r_row, dest=0, a=self._class_a.get(name, 1.0)))
+        for name, slot in departures:
+            del self._dynamic[name]
+            live.apply_event(core.TaskDepart(slot))
+        admissions = self._sync_pool() if self.pool is not None else {}
+        if d > threshold:
+            r_new = np.zeros(np.asarray(live.net.r).shape)
+            rates = self.estimator.rates()
+            r_new[:rates.shape[0], 1:1 + self.F] = rates
+            if self.pool is not None:
+                r_new[~self.pool.active] = 0.0   # inert slots stay inert
+            live.rebaseline_rates(r_new, n_iters=0)
+        live.iterate(n_iters)
+        self.net = live.net
+        self.phi = live.phi
+        self.nbrs = live.nbrs
         self.method = "sparse"
         self._phi_table = None
-        return {"drift": d, "rebaselined": True,
-                "cost": float(self._live.cost)}
+        return {"drift": d, "rebaselined": True, "admissions": admissions,
+                "task_events": len(arrivals) + len(departures),
+                "cost": float(live.cost)}
 
     def _sparse_phi(self) -> core.PhiSparse:
         if self.phi is None:

@@ -262,6 +262,83 @@ def test_rate_estimator_window_evicts():
         est.observe(0, 0, 1.0, t=0.5)
 
 
+def _pool_router(class_slots=2, policy="reject"):
+    pods = [PodSpec(30.0), PodSpec(20.0, speed=0.8), PodSpec(40.0, 1.2)]
+    demand = np.array([[2.0, 1.0], [1.0, 2.0]])
+    return RequestRouter(pods, n_frontends=2,
+                         classes={"chat": 1.5, "sum": 0.3}, demand=demand,
+                         class_slots=class_slots, admission_policy=policy)
+
+
+def _feed(router, t0, names_demand, rounds=120, dt=0.5, **kw):
+    """Drive the estimator: per round, each (name, frontend, tokens)."""
+    t = t0
+    for _ in range(rounds):
+        t += dt
+        for name, f, tok in names_demand:
+            router.observe(name, f, tok, t, **kw)
+    return t
+
+
+def test_router_new_class_admitted_via_taskarrive():
+    """An unknown class observed under a task pool is admitted as a
+    warm TaskArrive through maybe_rebaseline — never a re-plan."""
+    router = _pool_router()
+    assert int(router.net.S) == 4          # padded to the pow2 rung
+    router.plan(n_iters=40)
+    base = [("chat", 0, 1.0), ("chat", 1, 0.5),
+            ("sum", 0, 0.5), ("sum", 1, 1.0)]
+    t = _feed(router, 0.0, base + [("translate", 0, 6.0)])
+    assert "translate" in router._staged   # staged, not yet a task
+    out = router.maybe_rebaseline(threshold=0.25, n_iters=20)
+    assert out["admissions"]["admitted"] == ["translate"]
+    slot = router._dynamic["translate"]
+    assert router.pool.active[slot]
+    assert np.asarray(router.net.r)[slot].sum() > 0.0
+    # served from the live φ like any configured class
+    assert 0 <= router.decide("translate", 0) < router.P
+    # the staged observations were folded into the estimator
+    assert router.estimator.rates()[slot].sum() > 0.0
+    assert isinstance(router._live, core.ReplayEngine)
+    rec = router._live.records[-1]
+    assert any(r.kind == "task" for r in router._live.records)
+    # vanished dynamic class departs the same way
+    router.estimator.rates(t=t + 500.0)    # window fully evicted
+    out2 = router.maybe_rebaseline(threshold=100.0, n_iters=5)
+    assert out2["task_events"] == 1
+    assert "translate" not in router._dynamic
+    assert not router.pool.active[slot]
+    assert rec is not None
+
+
+def test_router_pool_exhaustion_rejects():
+    router = _pool_router(class_slots=2, policy="reject")
+    router.plan(n_iters=30)
+    extras = [(f"job{i}", 0, 4.0) for i in range(3)]   # one too many
+    _feed(router, 0.0, extras, rounds=40)
+    out = router.maybe_rebaseline(threshold=1e9, n_iters=5)
+    assert len(out["admissions"]["admitted"]) == 2
+    assert len(out["admissions"]["rejected"]) == 1
+    assert router.pool.free_slot() is None
+
+
+def test_router_without_pool_unknown_class_raises():
+    router = _small_router()
+    with pytest.raises(ValueError):
+        router.observe("mystery", 0, 1.0, t=1.0)
+
+
+def test_rate_estimator_ingest_out_of_order():
+    est = RateEstimator(2, 1, window=10.0)
+    est.observe(0, 0, 5.0, t=4.0)
+    est.ingest(1, 0, 5.0, t=2.0)           # past-time insert
+    assert est.rates()[1, 0] == pytest.approx(0.5)
+    assert est.rates(t=12.5)[1, 0] == 0.0  # evicted exactly on time
+    assert est.rates(t=12.5)[0, 0] == pytest.approx(0.5)
+    est.ensure_rows(4)
+    assert est.rates().shape == (4, 1)
+
+
 def test_rateset_event_warm_rebaseline():
     """core-level: RateSet through ReplayEngine keeps the warm iterate
     (kind 'routing' → repaired, not re-solved) and lands on the new
